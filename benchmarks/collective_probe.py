@@ -1,0 +1,92 @@
+"""Collective-contributor probe: lower a cell, rank collectives by
+(bytes x loop trips), print the top offenders with their HLO shapes.
+
+    PYTHONPATH=src python -m benchmarks.collective_probe \
+        --arch deepseek-v3-671b --shape train_4k --opt [--save /tmp/x.hlo]
+
+The §Perf hillclimb iterations were found with this tool (EXPERIMENTS.md).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save", default="")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as d
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    captured = {}
+    orig = d.analyze
+
+    def cap(compiled, *a, **k):
+        captured["c"] = compiled
+        return orig(compiled, *a, **k)
+
+    d.analyze = cap
+    d.lower_cell(args.arch, args.shape, mesh, verbose=False, opt=args.opt)
+    text = captured["c"].as_text()
+    if args.save:
+        with open(args.save, "w") as f:
+            f.write(text)
+
+    comps = hlo_stats.parse_module(text)
+    called = {n for c in comps.values() for n, _ in c.calls}
+    called |= {b for c in comps.values() for _, b in c.while_bodies}
+    called |= {cd for c in comps.values() for cd, _ in c.while_bodies}
+    roots = [n for n in comps if n not in called]
+
+    mult: dict = {}
+
+    def walk(name, m):
+        c = comps.get(name)
+        if c is None:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for cond, body in c.while_bodies:
+            trips = comps[cond].max_const if cond in comps else 1
+            walk(body, m * trips)
+        for n2, _ in c.calls:
+            walk(n2, m)
+
+    for r in roots:
+        walk(r, 1)
+
+    # per-op-line ranking with shapes
+    rows = []
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "(" in s and "=" not in s.split("(")[0]:
+            cur = s.lstrip("ENTRY ").split("(")[0].strip().lstrip("%").rstrip(". ")
+            continue
+        m = re.match(
+            r"^(?:ROOT\s+)?%[\w.\-]+ = (\S+) (all-gather|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute)\(", s)
+        if m and cur:
+            nbytes, _ = hlo_stats._shapes_bytes(m.group(1))
+            meta = re.search(r'op_name="([^"]+)"', s)
+            rows.append((nbytes * mult.get(cur, 1), m.group(2), m.group(1),
+                         mult.get(cur, 1),
+                         (meta.group(1).split("/")[-1] if meta else "")[:40]))
+    rows.sort(reverse=True)
+    print(f"top collectives for {args.arch} x {args.shape} "
+          f"(opt={args.opt}):")
+    for total, op, shape, m, meta in rows[: args.top]:
+        print(f"  {total/2**30:9.2f}GB {op:19s} {shape:32s} x{m:<6d} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, the paper's four input
+distributions (Fig. 4), CSV emission.
+
+The paper sorts 1B 4-byte keys on 8..52 machines x 32 threads. This
+container is one CPU, so the benchmarks run the same *algorithm* at
+2^20..2^22 keys over virtual processors and report derived quantities
+(imbalance, speedup ratios, step shares) that are scale-free; EXPERIMENTS
+§Benchmarks records the scale-down factor next to every paper number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time (us) of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def distribution(name: str, rng, p: int, n: int, dtype=np.float32):
+    """The paper's Fig. 4 inputs. right_skewed / exponential are quantized
+    so they contain heavy duplication (the investigator's regime)."""
+    if name == "uniform":
+        x = rng.uniform(0, 1, (p, n))
+    elif name == "normal":
+        x = rng.normal(0, 1, (p, n))
+    elif name == "right_skewed":
+        x = np.floor((rng.uniform(0, 1, (p, n)) ** 6) * 64)
+    elif name == "exponential":
+        x = np.floor(rng.exponential(1.0, (p, n)) * 8)
+    else:
+        raise KeyError(name)
+    return jnp.asarray(x.astype(dtype))
+
+
+DISTRIBUTIONS = ("uniform", "normal", "right_skewed", "exponential")
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,95 @@
+"""Beyond-paper benchmarks: MoE sorted dispatch, kernel paths, ablations."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.registry import smoke_config
+from repro.core import SortConfig, load_imbalance, sample_sort_sim
+from repro.kernels import ops as kops
+from repro.models import moe as moe_lib
+
+
+def moe_dispatch():
+    """Sort-based dispatch vs dense one-hot combine (the standard
+    alternative), tokens/s and capacity-drop rate."""
+    cfg = smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(cfg, d_model=256, d_expert=128, n_experts=32,
+                              moe_topk=4, moe_capacity_factor=1.25)
+    p = moe_lib.init_moe(jax.random.key(0), cfg, None)
+    x = jax.random.normal(jax.random.key(1), (8, 512, cfg.d_model), jnp.bfloat16)
+    T = 8 * 512
+
+    f_sort = jax.jit(lambda x: moe_lib.moe_forward(x, p, cfg, None)[0])
+    f_ref = jax.jit(lambda x: moe_lib.moe_ref(x, p, cfg)[0])
+    us_sort = timeit(f_sort, x)
+    us_ref = timeit(f_ref, x)
+    emit("moe_dispatch_sorted", us_sort,
+         f"tokens_per_s={T/(us_sort/1e6):.0f};vs_dense={us_ref/us_sort:.2f}x")
+    emit("moe_dispatch_dense_ref", us_ref, f"tokens_per_s={T/(us_ref/1e6):.0f}")
+
+
+def investigator_ablation():
+    """Load balance + exchanged data: investigator ON vs OFF on heavily
+    duplicated keys (paper Fig. 3 pathology)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 5, (8, 1 << 18)), jnp.int32)
+    on = sample_sort_sim(x, SortConfig(capacity_factor=1.5, use_pallas=False))
+    off = sample_sort_sim(x, SortConfig(capacity_factor=16.0, use_pallas=False),
+                          investigator=False)
+    emit("investigator_on", 0.0,
+         f"imbalance={float(load_imbalance(on.counts)):.4f}")
+    emit("investigator_off", 0.0,
+         f"imbalance={float(load_imbalance(off.counts)):.4f};"
+         f"starved_procs={int((np.asarray(off.counts)==0).sum())}")
+
+
+def sort_collective_schedule():
+    """Beyond-paper structural win: the whole distributed sort issues a
+    CONSTANT number of collectives (all-gather samples + fused bucket
+    all_to_all + counts all_to_all + overflow psum), independent of p —
+    the paper's design needs O(p) point-to-point messages per processor.
+    Verified by parsing the compiled HLO of distributed_sort."""
+    import re
+    import subprocess
+    import sys
+    import os
+
+    code = """
+import numpy as np, jax, jax.numpy as jnp, re
+from repro.core import SortConfig, distributed_sort
+mesh = jax.make_mesh((8,), ("data",))
+x = jax.ShapeDtypeStruct((8 * 4096,), jnp.float32)
+import functools
+f = jax.jit(functools.partial(distributed_sort, mesh=mesh, axis_name="data",
+                              config=SortConfig(use_pallas=False)))
+hlo = f.lower(jnp.zeros(8*4096, jnp.float32)).compile().as_text()
+ops = re.findall(r"= \\S+ (all-gather|all-reduce|all-to-all|reduce-scatter|collective-permute)\\(", hlo)
+from collections import Counter
+print(dict(Counter(ops)))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    counts = r.stdout.strip().splitlines()[-1] if r.returncode == 0 else f"err:{r.stderr[-120:]}"
+    emit("sort_collective_schedule", 0.0, f"ops_per_sort={counts};paper=O(p)_messages")
+
+
+def kernel_paths():
+    """Local sort: tiled merge-tree structure (paper Fig. 2, lax backend)
+    vs one flat jnp.sort. (Pallas path timing is interpret-mode on CPU —
+    correctness is covered in tests; TPU timing is the target.)"""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(1 << 20), jnp.float32)
+    f_tile = jax.jit(lambda v: kops.tile_sort(v, tile=8192, use_pallas=False))
+    f_flat = jax.jit(jnp.sort)
+    us_tile = timeit(f_tile, x)
+    us_flat = timeit(f_flat, x)
+    emit("local_sort_tile_tree", us_tile, f"vs_flat={us_flat/us_tile:.2f}x")
+    emit("local_sort_flat", us_flat, "")

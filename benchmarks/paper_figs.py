@@ -1,0 +1,152 @@
+"""Paper-figure benchmarks (one function per table/figure).
+
+Each prints ``name,us_per_call,derived`` rows (benchmarks/run.py drives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import resource
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DISTRIBUTIONS, distribution, emit, timeit
+from repro.core import (
+    SortConfig,
+    load_imbalance,
+    sample_sort_sim,
+    sample_sort_sim_kv,
+)
+from repro.core.local_sort import local_sort
+from repro.core.splitters import investigator_bounds, regular_sample, select_splitters
+from repro.core import merge as merge_lib
+from repro.kernels import ops as kops
+
+P_DEFAULT, N_DEFAULT = 8, 1 << 19  # 8 virtual procs x 512k keys = 4M keys
+CFG = SortConfig(capacity_factor=1.5, use_pallas=False)  # lax local sort: CPU-honest timing
+
+
+def fig5_distributions():
+    """Fig. 5: total execution time per input distribution."""
+    rng = np.random.default_rng(0)
+    f = jax.jit(lambda x: sample_sort_sim(x, CFG).values)
+    for dist in DISTRIBUTIONS:
+        x = distribution(dist, rng, P_DEFAULT, N_DEFAULT)
+        us = timeit(f, x)
+        r = sample_sort_sim(x, CFG)
+        emit(f"fig5_total_time_{dist}", us,
+             f"imbalance={float(load_imbalance(r.counts)):.4f}")
+
+
+def fig6_scaling():
+    """Fig. 6/8: strong scaling vs the single-sorter baseline (the Spark
+    stand-in: one global sort without the distributed pipeline)."""
+    rng = np.random.default_rng(1)
+    total = 1 << 21
+    flat = jnp.asarray(rng.normal(0, 1, total).astype(np.float32))
+    base_us = timeit(jax.jit(jnp.sort), flat)
+    emit("fig6_baseline_global_sort", base_us, "procs=1")
+    for p in (2, 4, 8, 16):
+        x = flat.reshape(p, total // p)
+        us = timeit(jax.jit(lambda v: sample_sort_sim(v, CFG).values), x)
+        emit(f"fig6_pgxd_sort_p{p}", us, f"speedup_vs_global={base_us / us:.2f}")
+
+
+def fig7_step_breakdown():
+    """Fig. 7: per-step time share (local sort / sample+splitters /
+    partition / exchange / merge)."""
+    rng = np.random.default_rng(2)
+    for dist in ("normal", "right_skewed"):
+        x = distribution(dist, rng, P_DEFAULT, N_DEFAULT)
+        p, n = x.shape
+        cap = CFG.capacity(p, n)
+        s = CFG.num_samples(p, n)
+
+        sort_f = jax.jit(jax.vmap(lambda r: local_sort(r, use_pallas=False)))
+        xs = sort_f(x)
+        t_sort = timeit(sort_f, x)
+
+        sample_f = jax.jit(
+            lambda xs: select_splitters(
+                jax.vmap(lambda r: regular_sample(r, s))(xs).reshape(-1), p
+            )
+        )
+        spl = sample_f(xs)
+        t_sample = timeit(sample_f, xs)
+
+        bounds_f = jax.jit(jax.vmap(investigator_bounds, in_axes=(0, None)))
+        t_bounds = timeit(bounds_f, xs, spl)
+
+        from repro.core.sim import _gather_buckets
+
+        def exchange(xs, bounds):
+            fill = kops.sentinel_for(xs.dtype)
+            xs_pad = jnp.concatenate([xs, jnp.full((p, cap), fill, xs.dtype)], 1)
+            send = jax.vmap(lambda row, b: _gather_buckets(row, b, cap, p))(xs_pad, bounds)
+            return jnp.swapaxes(send, 0, 1)
+
+        exch_f = jax.jit(exchange)
+        bounds = bounds_f(xs, spl)
+        recv = exch_f(xs, bounds)
+        t_exch = timeit(exch_f, xs, bounds)
+
+        merge_f = jax.jit(jax.vmap(lambda r: merge_lib.merge_padded_runs(r, use_pallas=False)))
+        t_merge = timeit(merge_f, recv)
+
+        total = t_sort + t_sample + t_bounds + t_exch + t_merge
+        emit(f"fig7_steps_{dist}", total,
+             f"local_sort={t_sort/total:.0%};sample={t_sample/total:.0%};"
+             f"binary_search={t_bounds/total:.0%};exchange={t_exch/total:.0%};"
+             f"merge={t_merge/total:.0%}")
+
+
+def table2_balance():
+    """Table II: per-processor counts after the balanced sort."""
+    rng = np.random.default_rng(3)
+    for dist in DISTRIBUTIONS:
+        x = distribution(dist, rng, 10, 1 << 17)
+        r = sample_sort_sim(x, CFG)
+        counts = np.asarray(r.counts)
+        emit(f"table2_counts_{dist}", 0.0,
+             f"counts={'/'.join(map(str, counts))};"
+             f"max_over_min={counts.max()/max(counts.min(),1):.4f}")
+
+
+def fig9_10_11_sample_size():
+    """Fig. 9-11: sample size vs load balance / overhead / total time.
+    Three sizes: tiny (100 global), the 64KB buffer rule, 2x buffer."""
+    rng = np.random.default_rng(4)
+    x = distribution("right_skewed", rng, P_DEFAULT, N_DEFAULT)
+    buffer_rule = SortConfig().num_samples(P_DEFAULT, N_DEFAULT)
+    for label, s in (("100", max(100 // P_DEFAULT, 1)),
+                     ("buffer", buffer_rule),
+                     ("2x_buffer", 2 * buffer_rule)):
+        cfg = dataclasses.replace(CFG, samples_per_shard=s, capacity_factor=4.0)
+        f = jax.jit(lambda v: sample_sort_sim(v, cfg).values)
+        us = timeit(f, x)
+        r = sample_sort_sim(x, cfg)
+        # communication overhead proxy: exchanged bytes above the balanced
+        # minimum (the paper's Fig. 10 "overhead")
+        counts = np.asarray(r.send_counts)
+        off_diag = counts.sum() - np.trace(counts)
+        emit(f"fig9_sample_size_{label}", us,
+             f"samples_per_proc={s};imbalance={float(load_imbalance(r.counts)):.4f};"
+             f"exchanged_frac={off_diag/counts.sum():.3f}")
+
+
+def fig12_memory():
+    """Fig. 12: memory footprint of the sort (RSS delta + working-set
+    bytes: capacity-padded buffers over input bytes)."""
+    rng = np.random.default_rng(5)
+    x = distribution("uniform", rng, P_DEFAULT, N_DEFAULT)
+    p, n = x.shape
+    cap = CFG.capacity(p, n)
+    working = (p * (n + cap) + p * p * cap + p * p * cap) * 4  # pads+send+recv
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    r = jax.block_until_ready(sample_sort_sim(x, CFG))
+    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    emit("fig12_memory", 0.0,
+         f"input_mb={x.nbytes/2**20:.1f};working_set_mb={working/2**20:.1f};"
+         f"rss_delta_mb={(rss1-rss0)/1024:.1f};"
+         f"overhead_ratio={working/x.nbytes:.2f}")

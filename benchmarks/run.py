@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure + beyond-paper
+studies. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,...]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import ours, paper_figs
+
+    table = {
+        "fig5": paper_figs.fig5_distributions,
+        "fig6": paper_figs.fig6_scaling,
+        "fig7": paper_figs.fig7_step_breakdown,
+        "table2": paper_figs.table2_balance,
+        "fig9": paper_figs.fig9_10_11_sample_size,
+        "fig12": paper_figs.fig12_memory,
+        "moe": ours.moe_dispatch,
+        "investigator": ours.investigator_ablation,
+        "sort_colls": ours.sort_collective_schedule,
+        "kernels": ours.kernel_paths,
+    }
+    only = set(args.only.split(",")) if args.only else set(table)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in table.items():
+        if name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,65 @@
+"""Batched serving example: prefill a prompt batch, decode greedily with
+static KV caches (ring caches for the hybrid arch).
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch qwen3-4b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.models.model import Model
+from repro.serve.engine import extend_caches, make_prefill, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.encoder_segments:
+        batch["frames"] = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)),
+                                      jnp.dtype(cfg.dtype))
+    if cfg.n_vision_tokens:
+        batch["vision"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+
+    prefill = jax.jit(make_prefill(model))
+    step = jax.jit(make_serve_step(model))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    caches = extend_caches(model, caches, S, S + N)
+    tok = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+    outs = [tok]
+    t0 = time.time()
+    for i in range(N - 1):
+        logits, caches = step(params, caches, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    print(f"{args.arch}: prefill {B}x{S} in {t_prefill:.2f}s; "
+          f"decoded {B}x{N} in {t_decode:.2f}s "
+          f"({B*N/max(t_decode,1e-9):.0f} tok/s incl. compile)")
+    print("sample:", np.asarray(gen[0][:16]))
+
+
+if __name__ == "__main__":
+    main()

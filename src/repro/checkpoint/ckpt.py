@@ -1,0 +1,143 @@
+"""Sharded checkpointing with async commit + restart manager.
+
+Layout (tensorstore-like, no external deps):
+    <dir>/step_000123/
+        arrays.npz          flattened pytree leaves (this host's shards)
+        tree.json           pytree structure + leaf metadata
+        COMMITTED           marker written last (atomic rename)
+
+Fault-tolerance contract (DESIGN.md §8): a checkpoint is valid iff
+COMMITTED exists; readers pick the newest valid step; writers write to a
+temp dir and rename, so a node dying mid-save never corrupts restore
+state. ``CheckpointManager.save_async`` offloads serialization to a
+thread so the train loop doesn't stall.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+# numpy's savez cannot round-trip ml_dtypes (bfloat16 etc.): store such
+# arrays as raw uint views and re-view on restore using the recorded dtype.
+_VIEW_FOR = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    view = _VIEW_FOR.get(str(arr.dtype))
+    return arr.view(view) if view is not None else arr
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_FOR:
+        import ml_dtypes
+
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def save_checkpoint(path: str, step: int, tree, host_id: int = 0):
+    tmp = os.path.join(path, f".tmp_step_{step:09d}_{host_id}")
+    final = os.path.join(path, f"step_{step:09d}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": _encode(np.asarray(l)) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, f"arrays_{host_id}.npz"), **arrays)
+    meta = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump(meta, f)
+    os.makedirs(path, exist_ok=True)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # commit marker last: restore only trusts committed checkpoints
+    with open(os.path.join(final, "COMMITTED"), "w") as f:
+        f.write("ok")
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and os.path.exists(os.path.join(path, d, "COMMITTED")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, tree_template, step: int | None = None, host_id: int = 0):
+    """Restore into the template's structure. Returns (tree, step)."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        return None, None
+    d = os.path.join(path, f"step_{step:09d}")
+    data = np.load(os.path.join(d, f"arrays_{host_id}.npz"))
+    with open(os.path.join(d, "tree.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = _flatten(tree_template)
+    new_leaves = [
+        _decode(data[f"leaf_{i}"], meta["dtypes"][i]) for i in range(len(leaves))
+    ]
+    for old, new in zip(leaves, new_leaves):
+        if tuple(np.shape(old)) != tuple(new.shape):
+            raise ValueError(f"checkpoint shape mismatch: {np.shape(old)} vs {new.shape}")
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+class CheckpointManager:
+    """Async writer + retention policy + restart helper."""
+
+    def __init__(self, path: str, keep: int = 3, host_id: int = 0):
+        self.path = path
+        self.keep = keep
+        self.host_id = host_id
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree):
+        self.wait()
+        tree = jax.tree.map(np.asarray, tree)  # device->host copy now
+
+        def work():
+            save_checkpoint(self.path, step, tree, self.host_id)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        if not os.path.isdir(self.path):
+            return
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.path)
+            if d.startswith("step_")
+            and os.path.exists(os.path.join(self.path, d, "COMMITTED"))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:09d}"), ignore_errors=True)
+
+    def restore_latest(self, template):
+        self.wait()
+        return restore_checkpoint(self.path, template, host_id=self.host_id)

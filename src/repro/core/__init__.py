@@ -1,0 +1,26 @@
+# The paper's primary contribution: load-balanced distributed sample sort
+# (PGX.D, 2016) as a composable JAX module. See DESIGN.md.
+from repro.core.api import SortLibrary, encode_provenance, decode_provenance, load_imbalance
+from repro.core.splitters import (
+    SortConfig,
+    investigator_bounds,
+    naive_bounds,
+    regular_sample,
+    select_splitters,
+)
+from repro.core.sim import sample_sort_sim, sample_sort_sim_kv, SortResult, SortKVResult
+from repro.core.sample_sort import (
+    distributed_sort,
+    distributed_sort_kv,
+    sample_sort_shard,
+    sample_sort_shard_kv,
+)
+
+__all__ = [
+    "SortLibrary", "SortConfig", "SortResult", "SortKVResult",
+    "sample_sort_sim", "sample_sort_sim_kv",
+    "distributed_sort", "distributed_sort_kv",
+    "sample_sort_shard", "sample_sort_shard_kv",
+    "investigator_bounds", "naive_bounds", "regular_sample", "select_splitters",
+    "encode_provenance", "decode_provenance", "load_imbalance",
+]

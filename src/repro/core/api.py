@@ -1,0 +1,95 @@
+"""Public SortLibrary API — the paper's user-facing sort library.
+
+Features promised by the paper and exposed here:
+  * generic over key dtype (float32 / bf16 / int32 / uint32),
+  * provenance: every element can report its original processor and local
+    index after sorting (``sort_with_provenance``),
+  * multiple independent arrays sorted simultaneously (``sort_many``),
+  * binary search / top-k over the sorted result,
+  * runs either on virtual processors (single device — benchmarks, CPU) or
+    on a real mesh axis (shard_map — production).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_sort, sim, topk
+from repro.core.splitters import SortConfig
+
+
+def encode_provenance(p: int, n_local: int) -> jnp.ndarray:
+    """(p, n) int32 payload: global position = proc * n_local + local index.
+
+    Unique and increasing in (proc, idx) — makes every kv sort exactly
+    stable and lets users recover ``(previous processor, location)`` the way
+    the paper's library does. int32 bounds the sortable volume at 2^31
+    elements; production would widen to int64 (x64 mode) — documented.
+    """
+    return (jnp.arange(p * n_local, dtype=jnp.int32)).reshape(p, n_local)
+
+
+def decode_provenance(payload: jnp.ndarray, n_local: int):
+    return payload // n_local, payload % n_local
+
+
+@dataclasses.dataclass(frozen=True)
+class SortLibrary:
+    """Facade over the simulator and the distributed implementation."""
+
+    config: SortConfig = SortConfig()
+    investigator: bool = True
+
+    # ---- virtual-processor (single device) paths ----
+    def sort(self, x: jnp.ndarray) -> sim.SortResult:
+        """x: (p, n_local) — sort across virtual processors."""
+        return sim.sample_sort_sim(x, self.config, investigator=self.investigator)
+
+    def sort_with_provenance(self, x: jnp.ndarray) -> sim.SortKVResult:
+        p, n = x.shape
+        prov = encode_provenance(p, n)
+        return sim.sample_sort_sim_kv(x, prov, self.config, investigator=self.investigator)
+
+    def sort_kv(self, keys: jnp.ndarray, values: jnp.ndarray) -> sim.SortKVResult:
+        return sim.sample_sort_sim_kv(keys, values, self.config, investigator=self.investigator)
+
+    def sort_many(self, arrays: Sequence[jnp.ndarray]):
+        """Sort several independent datasets simultaneously (paper §IV end).
+        Each (p, n_i); sorts share one jit program per shape."""
+        return [self.sort(a) for a in arrays]
+
+    def sort_with_retry(self, x: jnp.ndarray, max_doublings: int = 3):
+        """Production wrapper: on (detected, never silent) bucket overflow,
+        retry with doubled capacity_factor. Each retry is a recompile, so
+        steady-state workloads converge to a single program."""
+        cfg = self.config
+        for _ in range(max_doublings + 1):
+            r = sim.sample_sort_sim(x, cfg, investigator=self.investigator)
+            if not bool(r.overflowed):
+                return r, cfg
+            cfg = dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2)
+        raise RuntimeError(
+            f"sort overflowed even at capacity_factor={cfg.capacity_factor}"
+        )
+
+    def searchsorted(self, result: sim.SortResult, queries: jnp.ndarray):
+        return topk.searchsorted_in_result(result.values, result.counts, queries)
+
+    # ---- real-mesh paths ----
+    def distributed_sort(self, x, mesh, axis_name="data"):
+        return sample_sort.distributed_sort(
+            x, mesh, axis_name, self.config, investigator=self.investigator
+        )
+
+    def distributed_sort_kv(self, keys, values, mesh, axis_name="data"):
+        return sample_sort.distributed_sort_kv(
+            keys, values, mesh, axis_name, self.config, investigator=self.investigator
+        )
+
+
+def load_imbalance(counts: jnp.ndarray) -> jnp.ndarray:
+    """max/mean shard size — 1.0 is perfect balance (paper Table II)."""
+    return counts.max() / jnp.maximum(counts.mean(), 1)

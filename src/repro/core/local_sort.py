@@ -1,0 +1,39 @@
+"""Local (per-device) sort phase — paper §IV step 1.
+
+The paper sorts each machine's shard with per-thread parallel quicksort
+followed by the Fig. 2 balanced pairwise merge. On TPU the "threads" are
+VMEM tiles and quicksort becomes a bitonic network (see DESIGN.md §2);
+``repro.kernels.ops.tile_sort`` implements exactly that structure. The
+``lax`` path (XLA's sort) is kept as the production fallback and as an
+independent implementation for differential testing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def local_sort(x: jnp.ndarray, *, tile: int = 1024, use_pallas: bool = True) -> jnp.ndarray:
+    """Sort a flat local shard ascending."""
+    if not use_pallas:
+        return jnp.sort(x)
+    return kops.tile_sort(x, tile=tile, use_pallas=True)
+
+
+def local_sort_kv(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    tile: int = 1024,
+    use_pallas: bool = True,
+    stable: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort (keys, values) by key. Stable when values are unique indices
+    (always true for the provenance/dispatch paths); for arbitrary values
+    the caller wraps with an index payload first (see api.sort_kv)."""
+    if not use_pallas:
+        k, v = jax.lax.sort([keys, values], dimension=0, is_stable=stable, num_keys=1)
+        return k, v
+    return kops.tile_sort_kv(keys, values, tile=tile, stable=stable, use_pallas=True)

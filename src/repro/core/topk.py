@@ -1,0 +1,47 @@
+"""Distributed top-k / binary-search APIs on sorted data (paper §III/IV:
+"retrieving top values from their graph data or implementing binary search
+on the sorted data").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def local_topk(x: jnp.ndarray, k: int, largest: bool = True):
+    """Top-k of a flat local shard (values, indices)."""
+    v, i = jax.lax.top_k(x if largest else -x, k)
+    return (v if largest else -v), i
+
+
+def topk_shard(x_local: jnp.ndarray, k: int, axis_name, largest: bool = True):
+    """Global top-k inside shard_map: local top-k -> all_gather candidates ->
+    replicated final selection. O(p*k) gathered bytes, no full sort."""
+    v, i = local_topk(x_local, min(k, x_local.shape[0]), largest)
+    p = jax.lax.axis_size(axis_name) if not isinstance(axis_name, tuple) else None
+    allv = jax.lax.all_gather(v, axis_name, tiled=True)
+    alli = jax.lax.all_gather(i, axis_name, tiled=True)
+    fv, pos = jax.lax.top_k(allv if largest else -allv, k)
+    return (fv if largest else -fv), alli[pos]
+
+
+def searchsorted_in_result(values: jnp.ndarray, counts: jnp.ndarray, queries: jnp.ndarray):
+    """Binary search over a distributed-sort result (global view).
+
+    values: (p, cap) sentinel-padded sorted shards; counts: (p,).
+    Returns (proc, local_idx) per query: the shard owning the insertion
+    point and the position within it. This is the user-facing API the paper
+    exposes on its sort library.
+    """
+    p, cap = values.shape
+    # Global insertion rank via per-shard searchsorted (padding sorts high,
+    # clamp by count).
+    per = jax.vmap(lambda row, c: jnp.minimum(jnp.searchsorted(row, queries), c))(
+        values, counts
+    )  # (p, q)
+    ranks = per.sum(axis=0)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    proc = jnp.clip(jnp.searchsorted(jnp.cumsum(counts), ranks, side="right"), 0, p - 1)
+    return proc, ranks - starts[proc]

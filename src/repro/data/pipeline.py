@@ -1,0 +1,151 @@
+"""Synthetic data pipeline with sort-based length bucketing.
+
+The paper's sort is used here as a data-layer primitive (DESIGN.md §3):
+documents are bucketed by length with the distributed sample sort
+(virtual-processor form) before packing, which minimizes padding waste —
+the classic production use of a distributed sort in an LM data pipeline.
+
+Everything is deterministic in (seed, host_id) so multi-host loaders
+produce disjoint, reproducible shards; on restart the loader fast-forwards
+to the checkpointed step (see launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import SortConfig, sample_sort_sim_kv
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    grad_accum: int = 1
+    vocab: int = 512
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    zipf_a: float = 1.2
+    mean_doc_len: float = 350.0
+    bucket_docs: int = 4096  # docs per bucketing round
+    bucket_procs: int = 8  # virtual processors for the length sort
+
+
+def _zipf_tokens(rng, n, vocab, a):
+    # Zipf over the vocab, rejection-free via inverse CDF approximation
+    u = np.maximum(rng.random(n), 1e-12)
+    ranks = np.minimum(u ** (-1.0 / (a - 1.0)), float(vocab - 1))
+    return ranks.astype(np.int32)
+
+
+class SyntheticCorpus:
+    """Stream of variable-length synthetic documents."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng((cfg.seed, cfg.host_id))
+
+    def docs(self, n: int):
+        lens = np.maximum(
+            8, self.rng.lognormal(np.log(self.cfg.mean_doc_len), 0.6, n).astype(np.int64)
+        )
+        lens = np.minimum(lens, 4 * self.cfg.seq_len)
+        for L in lens:
+            yield _zipf_tokens(self.rng, int(L), self.cfg.vocab, self.cfg.zipf_a)
+
+
+def bucket_by_length(doc_lens: np.ndarray, n_procs: int, sort_cfg=SortConfig()):
+    """Order document ids by length with the paper's distributed sort.
+
+    Lengths are heavily duplicated keys (few distinct values) — the
+    investigator keeps the virtual shards balanced. Returns the ids in
+    globally sorted (ascending length) order."""
+    import jax.numpy as jnp
+
+    import dataclasses
+
+    n = len(doc_lens)
+    per = -(-n // n_procs)
+    pad = per * n_procs - n
+    keys = np.concatenate([doc_lens.astype(np.int32), np.full(pad, 2**30, np.int32)])
+    vals = np.concatenate([np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])
+    sort_cfg = dataclasses.replace(sort_cfg, capacity_factor=2.0)
+    r = sample_sort_sim_kv(
+        jnp.asarray(keys.reshape(n_procs, per)),
+        jnp.asarray(vals.reshape(n_procs, per)),
+        sort_cfg,
+    )
+    assert not bool(r.overflowed), "length-bucketing sort overflowed capacity"
+    out = []
+    counts = np.asarray(r.counts)
+    for i in range(n_procs):
+        out.append(np.asarray(r.values[i][: counts[i]]))
+    ids = np.concatenate(out)
+    return ids[ids >= 0]
+
+
+class PackedLoader:
+    """Packs length-bucketed documents into (accum, B, S) token/label
+    batches. Labels are next-token targets, -1 on padding."""
+
+    def __init__(self, cfg: DataConfig, model_cfg=None):
+        self.cfg = cfg
+        self.corpus = SyntheticCorpus(cfg)
+        self.model_cfg = model_cfg
+        self._step = 0
+
+    def fast_forward(self, step: int):
+        for _ in range(step - self._step):
+            next(iter([self._make_batch()]))
+
+    def _pack_round(self):
+        cfg = self.cfg
+        docs = list(self.corpus.docs(cfg.bucket_docs))
+        lens = np.array([len(d) for d in docs])
+        order = bucket_by_length(lens, cfg.bucket_procs)
+        seqs = []
+        cur = []
+        cur_len = 0
+        for i in order:
+            d = docs[int(i)]
+            while len(d):
+                take = min(len(d), cfg.seq_len + 1 - cur_len)
+                cur.append(d[:take])
+                cur_len += take
+                d = d[take:]
+                if cur_len == cfg.seq_len + 1:
+                    seqs.append(np.concatenate(cur))
+                    cur, cur_len = [], 0
+        return seqs
+
+    def _make_batch(self):
+        cfg = self.cfg
+        need = cfg.grad_accum * cfg.global_batch
+        seqs: list = []
+        while len(seqs) < need:
+            seqs.extend(self._pack_round())
+        arr = np.stack(seqs[:need]).reshape(cfg.grad_accum, cfg.global_batch, cfg.seq_len + 1)
+        batch = {
+            "tokens": arr[..., :-1].astype(np.int32),
+            "labels": arr[..., 1:].astype(np.int32),
+        }
+        if self.model_cfg is not None:
+            d = self.model_cfg.d_model
+            rng = np.random.default_rng((cfg.seed, 7, self._step))
+            if self.model_cfg.encoder_segments:
+                batch["frames"] = rng.standard_normal(
+                    (cfg.grad_accum, cfg.global_batch, cfg.seq_len, d)
+                ).astype(np.float32)
+            if self.model_cfg.n_vision_tokens:
+                batch["vision"] = rng.standard_normal(
+                    (cfg.grad_accum, cfg.global_batch, self.model_cfg.n_vision_tokens, d)
+                ).astype(np.float32)
+        return batch
+
+    def __iter__(self):
+        while True:
+            b = self._make_batch()
+            self._step += 1
+            yield b

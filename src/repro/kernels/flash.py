@@ -1,0 +1,134 @@
+"""Pallas TPU flash-attention kernel (canonical grid-sequential form).
+
+The §Roofline analysis flags prefill cells as memory-bound partly because
+the pure-JAX flash path re-reads K/V tiles from HBM per q-chunk; this
+kernel keeps the whole online-softmax state in VMEM scratch and streams
+K/V blocks once per (q-block, k-block) pair, the standard TPU formulation:
+
+  grid = (B, H, nQ, nK) — the LAST grid axis is sequential on TPU, so the
+  (B, H, qi) output block is revisited across ki steps while
+  (m, l, acc) persist in VMEM scratch; causal q/k block pairs that are
+  fully masked are skipped with pl.when (no MXU work issued).
+
+GQA is handled in the BlockSpec index maps (k/v blocks indexed by
+h // rep), so no head replication ever materializes.
+
+Validated in interpret mode against repro.kernels.ref.attention_ref and
+the pure-JAX flash path (tests/test_flash_kernel.py); TPU is the target
+runtime.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific scratch memory spaces (absent on some CPU builds)
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level causal skip: the whole k block is in the masked future
+    run = jnp.logical_or(not causal, k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B, S, H, dh); k/v: (B, T, KV, dh) with H % KV == 0.
+    Returns (B, S, H, dh) attention output."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    n_q, n_k = S // bq, T // bk
+    scale = dh ** -0.5 if scale is None else scale
+
+    if _VMEM is None:  # pragma: no cover - non-TPU builds without pltpu
+        raise RuntimeError("pltpu scratch spaces unavailable")
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, qi, ki, rep=rep: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, qi, ki, rep=rep: (b, ki, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, dh), v.dtype),
+        scratch_shapes=[
+            _VMEM((bq,), jnp.float32),       # running max m
+            _VMEM((bq,), jnp.float32),       # running denom l
+            _VMEM((bq, dh), jnp.float32),    # running accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,225 @@
+"""Jit'd dispatch wrappers around the Pallas sorting kernels.
+
+Responsibilities:
+  * pad rows to a power of two with order-preserving sentinels,
+  * up/down-cast unsupported dtypes (bf16 keys -> f32),
+  * choose the execution path: Pallas (TPU, or interpret=True on CPU) vs.
+    ``jax.lax.sort`` (XLA baseline — also the production fallback for row
+    lengths that exceed the VMEM tile budget),
+  * expose ``tile_sort`` — a flat 1-D shard sort built exactly like the
+    paper's local phase: sort fixed-size tiles ("worker threads"), then a
+    balanced pairwise merge tree (Fig. 2).
+
+The per-kernel correctness sweeps in ``tests/test_kernels.py`` validate
+every path against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic
+
+# Above this row length the working set stops fitting a comfortable VMEM
+# tile (keys+values, in+out, double-buffered) and we fall back to lax.sort.
+MAX_PALLAS_ROW = 8192
+# Tile width used by tile_sort for the paper's local phase.
+DEFAULT_TILE = 1024
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sentinel_for(dtype: jnp.dtype) -> jnp.ndarray:
+    """Largest representable value — padding that sorts to the end."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_rows(x: jnp.ndarray, n_to: int, fill) -> jnp.ndarray:
+    pad = n_to - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def sort_rows(keys: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Sort each row ascending; any row length, any numeric dtype."""
+    rows, n = keys.shape
+    np2 = _next_pow2(n)
+    if not use_pallas or np2 > MAX_PALLAS_ROW:
+        return jax.lax.sort(keys, dimension=-1)
+    work_dtype = jnp.float32 if keys.dtype == jnp.bfloat16 else keys.dtype
+    padded = _pad_rows(keys.astype(work_dtype), np2, sentinel_for(work_dtype))
+    out = bitonic.bitonic_sort_rows(padded, interpret=_interpret())
+    return out[:, :n].astype(keys.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stable", "use_pallas"))
+def sort_rows_kv(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    stable: bool = True,
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Key/value row sort (values carried through the same permutation)."""
+    rows, n = keys.shape
+    np2 = _next_pow2(n)
+    if not use_pallas or np2 > MAX_PALLAS_ROW:
+        k, v = jax.lax.sort([keys, values], dimension=-1, is_stable=stable, num_keys=1)
+        return k, v
+    kdtype = jnp.float32 if keys.dtype == jnp.bfloat16 else keys.dtype
+    pk = _pad_rows(keys.astype(kdtype), np2, sentinel_for(kdtype))
+    pv = _pad_rows(values, np2, sentinel_for(values.dtype))
+    ok, ov = bitonic.bitonic_sort_rows_kv(pk, pv, stable=stable, interpret=_interpret())
+    return ok[:, :n].astype(keys.dtype), ov[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def merge_rows(a: jnp.ndarray, b: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Merge two row-wise sorted (R, N) arrays -> sorted (R, 2N).
+
+    Non-power-of-two widths are sentinel-padded for the bitonic path; the
+    sentinels sort to the tail so the leading 2N outputs are the merge.
+    (Keys equal to the sentinel itself are therefore not representable —
+    documented library restriction, checked by the property tests.)
+    """
+    rows, n = a.shape
+    np2 = _next_pow2(n)
+    if not use_pallas or 2 * np2 > MAX_PALLAS_ROW:
+        # searchsorted-based scatter merge: O((n+m) log) fully vectorized.
+        return _scatter_merge(a, b)
+    fill = sentinel_for(a.dtype)
+    out = bitonic.bitonic_merge_rows(
+        _pad_rows(a, np2, fill), _pad_rows(b, np2, fill), interpret=_interpret()
+    )
+    return out[:, : 2 * n]
+
+
+@functools.partial(jax.jit, static_argnames=("stable", "use_pallas"))
+def merge_rows_kv(ak, av, bk, bv, *, stable: bool = True, use_pallas: bool = True):
+    rows, n = ak.shape
+    np2 = _next_pow2(n)
+    if not use_pallas or 2 * np2 > MAX_PALLAS_ROW:
+        return _scatter_merge_kv(ak, av, bk, bv)
+    kfill = sentinel_for(ak.dtype)
+    vfill = sentinel_for(av.dtype)
+    ok, ov = bitonic.bitonic_merge_rows_kv(
+        _pad_rows(ak, np2, kfill),
+        _pad_rows(av, np2, vfill),
+        _pad_rows(bk, np2, kfill),
+        _pad_rows(bv, np2, vfill),
+        stable=stable,
+        interpret=_interpret(),
+    )
+    return ok[:, : 2 * n], ov[:, : 2 * n]
+
+
+def _scatter_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge sorted rows via rank arithmetic (no pallas; production fallback
+    for runs too long for VMEM). Stable: ties keep ``a`` first."""
+    ra = jnp.arange(a.shape[-1]) + jax.vmap(
+        lambda bb, aa: jnp.searchsorted(bb, aa, side="left")
+    )(b, a)
+    rb = jnp.arange(b.shape[-1]) + jax.vmap(
+        lambda aa, bb: jnp.searchsorted(aa, bb, side="right")
+    )(a, b)
+    n_out = a.shape[-1] + b.shape[-1]
+    out = jnp.zeros((a.shape[0], n_out), a.dtype)
+    rows = jnp.arange(a.shape[0])[:, None]
+    out = out.at[rows, ra].set(a)
+    out = out.at[rows, rb].set(b)
+    return out
+
+
+def _scatter_merge_kv(ak, av, bk, bv):
+    ra = jnp.arange(ak.shape[-1]) + jax.vmap(
+        lambda bb, aa: jnp.searchsorted(bb, aa, side="left")
+    )(bk, ak)
+    rb = jnp.arange(bk.shape[-1]) + jax.vmap(
+        lambda aa, bb: jnp.searchsorted(aa, bb, side="right")
+    )(ak, bk)
+    n_out = ak.shape[-1] + bk.shape[-1]
+    rows = jnp.arange(ak.shape[0])[:, None]
+    ok = jnp.zeros((ak.shape[0], n_out), ak.dtype).at[rows, ra].set(ak)
+    ok = ok.at[rows, rb].set(bk)
+    ov = jnp.zeros((av.shape[0], n_out), av.dtype).at[rows, ra].set(av)
+    ov = ov.at[rows, rb].set(bv)
+    return ok, ov
+
+
+# ------------------------------------------------------- paper local phase
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "use_pallas"))
+def tile_sort(
+    x: jnp.ndarray, *, tile: int = DEFAULT_TILE, use_pallas: bool = True
+) -> jnp.ndarray:
+    """Sort a flat shard exactly like the paper's local phase (Fig. 2).
+
+    1. split the shard into ``tile``-sized slices — the paper's per-thread
+       slices, here VMEM tiles;
+    2. sort every tile with the bitonic network (one pallas_call, batched
+       over rows);
+    3. balanced pairwise merge tree: log2(T) rounds, each round merging
+       equal-length neighbor runs (even/odd rows), exactly the handler
+       pairing of Fig. 2.
+    """
+    (n,) = x.shape
+    np2 = _next_pow2(n)
+    fill = sentinel_for(x.dtype if x.dtype != jnp.bfloat16 else jnp.float32)
+    work = x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x
+    work = jnp.pad(work, (0, np2 - n), constant_values=fill)
+    t = min(tile, np2)
+    runs = work.reshape(np2 // t, t)
+    runs = sort_rows(runs, use_pallas=use_pallas)
+    while runs.shape[0] > 1:
+        runs = merge_rows(runs[0::2], runs[1::2], use_pallas=use_pallas)
+    return runs[0, :n].astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "stable", "use_pallas"))
+def tile_sort_kv(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    tile: int = DEFAULT_TILE,
+    stable: bool = True,
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat key/value shard sort via tile sort + balanced merge tree.
+
+    Stability across tiles: the merge tree is stable by construction
+    (scatter merge ties keep the left run; the bitonic merge path is made
+    stable at the tile level by the value tie-break, which is exact when
+    values are unique indices — the dispatch use-case)."""
+    (n,) = keys.shape
+    np2 = _next_pow2(n)
+    kdtype = jnp.float32 if keys.dtype == jnp.bfloat16 else keys.dtype
+    kfill = sentinel_for(kdtype)
+    vfill = sentinel_for(values.dtype)
+    wk = jnp.pad(keys.astype(kdtype), (0, np2 - n), constant_values=kfill)
+    wv = jnp.pad(values, (0, np2 - n), constant_values=vfill)
+    t = min(tile, np2)
+    rk = wk.reshape(np2 // t, t)
+    rv = wv.reshape(np2 // t, t)
+    rk, rv = sort_rows_kv(rk, rv, stable=stable, use_pallas=use_pallas)
+    while rk.shape[0] > 1:
+        rk, rv = merge_rows_kv(
+            rk[0::2], rv[0::2], rk[1::2], rv[1::2], stable=stable, use_pallas=use_pallas
+        )
+    return rk[0, :n].astype(keys.dtype), rv[0, :n]

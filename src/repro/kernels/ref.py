@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas sorting kernels.
+
+These are the reference semantics every kernel in this package is tested
+against (``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+``assert_allclose`` / exact equality for integer payloads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_rows_ref(keys: jnp.ndarray, descending: bool = False) -> jnp.ndarray:
+    """Sort each row of ``keys`` (R, N) independently."""
+    out = jnp.sort(keys, axis=-1)
+    if descending:
+        out = out[..., ::-1]
+    return out
+
+
+def sort_rows_kv_ref(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    descending: bool = False,
+    stable: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable key/value row sort oracle."""
+    order = jnp.argsort(keys, axis=-1, stable=stable, descending=descending)
+    k = jnp.take_along_axis(keys, order, axis=-1)
+    v = jnp.take_along_axis(values, order, axis=-1)
+    return k, v
+
+
+def merge_rows_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge two row-wise-sorted arrays (R, N), (R, M) -> sorted (R, N+M).
+
+    Oracle via concatenate + sort; ties keep ``a`` elements first (stability)
+    because jnp.sort is stable and ``a`` precedes ``b`` in the concat.
+    """
+    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+
+
+def merge_rows_kv_ref(
+    ak: jnp.ndarray, av: jnp.ndarray, bk: jnp.ndarray, bv: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    keys = jnp.concatenate([ak, bk], axis=-1)
+    vals = jnp.concatenate([av, bv], axis=-1)
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return (
+        jnp.take_along_axis(keys, order, axis=-1),
+        jnp.take_along_axis(vals, order, axis=-1),
+    )
+
+
+def attention_ref(q, k, v, causal: bool = True, scale=None):
+    """Plain attention oracle for the flash kernel. q: (B,S,H,dh),
+    k/v: (B,T,KV,dh), GQA via head grouping."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, S, KV, rep, dh)
+    s = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", p, v)
+    return out.reshape(B, S, H, dh)

@@ -1,0 +1,228 @@
+"""Trip-count-aware roofline statistics from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, but our
+programs put all the work inside scans (layers, grad-accum microbatches,
+attention q-chunks), so raw cost numbers undercount by orders of
+magnitude. This module parses the optimized SPMD module (per-device view)
+and walks the call graph multiplying by loop trip counts:
+
+  * FLOPs: every ``dot``/``convolution`` = 2 * prod(out_shape) * K, with K
+    from the operand symbol table + contracting dims (elementwise FLOPs
+    are ignored — matmul-dominated workloads, documented);
+  * collective bytes: output bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops;
+  * HBM traffic estimate under a *fusion-ideal* model: the CPU backend
+    barely fuses, so counting every op output would overcount HBM traffic
+    by 1-2 orders of magnitude vs what the TPU backend emits. We count
+    only traffic that no fusion can remove: dot/convolution operands +
+    outputs (MXU reads/writes), dynamic-slice outputs (weight streaming
+    inside scan bodies), dynamic-update-slice outputs (KV-cache writes),
+    gather/scatter/sort operand+output bytes (MoE dispatch), and reduce
+    outputs. Elementwise/transpose/broadcast chains are assumed fused
+    (their true cost is bounded by the neighbours we do count). This is
+    an *estimate*, cross-checked against analytic floors in EXPERIMENTS.md
+    §Roofline; elementwise-recurrence archs (mamba / rg-lru) are flagged
+    there since their scan arithmetic is elementwise by design.
+
+Trip counts come from each while condition's comparison constant (scan
+lowering: induction var < N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)|branch_computations=\{([^}]*)\}"
+)
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# fusion-ideal traffic: ops whose outputs are charged 2x (write+read-back)
+_TRAFFIC_OUT = ("dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+                "reduce", "sort", "reduce-window", "select-and-scatter")
+
+
+def _shapes_bytes(type_str: str):
+    """Total bytes + list of (dtype, dims) for a (possibly tuple) type."""
+    total = 0
+    dims_list = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+        dims_list.append((dt, [int(d) for d in dims.split(",") if d]))
+    return total, dims_list
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    colls: dict
+    dot_flops: float = 0.0
+    traffic: float = 0.0
+    calls: list = dataclasses.field(default_factory=list)  # (comp, kind)
+    while_bodies: list = dataclasses.field(default_factory=list)  # (cond, body)
+    max_const: int = 1
+    is_fusion_interior: bool = False
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    symtab: dict[str, str] = {}
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...{`
+        if s.endswith("{") and ("(" in s) and "=" not in s.split("(")[0]:
+            header = s.lstrip("ENTRY ").strip()
+            name = header.split("(")[0].strip().lstrip("%").rstrip(". ")
+            cur = Comp(name=name, colls={})
+            comps[name] = cur
+            symtab = {}
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        var, rhs = m.group(1), m.group(2)
+        # record the defined value's type for the dot K lookup
+        tm = _SHAPE_RE.search(rhs.split(" ")[0] + " " + rhs)
+        type_str = rhs.split(")")[0] if rhs.startswith("(") else rhs.split(" ")[0]
+        symtab[var] = type_str
+
+        # opcode = first token after the type
+        rest = rhs[len(type_str):].lstrip() if rhs.startswith(type_str) else rhs
+        opm = re.match(r"^\{[^}]*\}\s*(\S+?)\(", rest) or re.match(r"^(\S+?)\(", rest)
+        op = opm.group(1) if opm else ""
+
+        # track integer constants (for while trip counts)
+        for c in re.findall(r"constant\((\d+)\)", s):
+            cur.max_const = max(cur.max_const, int(c))
+
+        # called computations
+        for m2 in _CALLED.finditer(s):
+            if m2.group(1):
+                kind = s[m2.start():m2.start(2) if m2.start(2) > 0 else m2.end()]
+                cur.calls.append((m2.group(1), m2.group(0).split("=")[0]))
+            elif m2.group(2):
+                for b in m2.group(2).split(","):
+                    cur.calls.append((b.strip().lstrip("%"), "branch"))
+        if " while(" in s or op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", s)
+            mc = re.search(r"condition=%?([\w.\-]+)", s)
+            if mb and mc:
+                cur.while_bodies.append((mc.group(1), mb.group(1)))
+
+        out_bytes, _ = _shapes_bytes(type_str)
+
+        for coll in _COLL:
+            if op.startswith(coll) and not op.startswith(coll + "-done"):
+                cur.colls[coll] = cur.colls.get(coll, 0) + out_bytes
+                break
+
+        if op in ("dot", "convolution"):
+            _, out_dims = _shapes_bytes(type_str)
+            out_elems = 1
+            for _, dims in out_dims:
+                for d in dims:
+                    out_elems *= d
+            k = 1
+            mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+            ops_m = re.search(r"\(([^)]*)\)", rest)
+            if mcd and ops_m:
+                lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
+                lhs_type = symtab.get(lhs_name, "")
+                _, lhs_dims = _shapes_bytes(lhs_type)
+                if lhs_dims:
+                    dims = lhs_dims[0][1]
+                    for ci in mcd.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            cur.dot_flops += 2.0 * out_elems * k
+            # MXU reads both operands + writes the output
+            cur.traffic += out_bytes
+            if ops_m:
+                for nm in ops_m.group(1).split(","):
+                    b, _ = _shapes_bytes(symtab.get(nm.strip().lstrip("%"), ""))
+                    cur.traffic += b
+        elif any(op.startswith(t) for t in _TRAFFIC_OUT):
+            cur.traffic += 2.0 * out_bytes
+
+    # mark fusion interiors (called via calls= from fusion ops)
+    for c in comps.values():
+        for name, kind in c.calls:
+            if "calls" in kind and name in comps:
+                comps[name].is_fusion_interior = True
+    return comps
+
+
+def aggregate(text: str) -> dict:
+    """Walk the call graph from ENTRY with loop-trip multipliers."""
+    comps = parse_module(text)
+    entry = None
+    for name, c in comps.items():
+        if "main" in name or entry is None:
+            pass
+    # ENTRY computation: the one not called by anyone
+    called = {n for c in comps.values() for n, _ in c.calls}
+    called |= {b for c in comps.values() for _, b in c.while_bodies}
+    called |= {cd for c in comps.values() for cd, _ in c.while_bodies}
+    roots = [n for n in comps if n not in called]
+    totals = {"dot_flops": 0.0, "traffic": 0.0, "colls": {}, "coll_bytes": 0.0}
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def walk(name: str) -> tuple:
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, ())
+        flops, traffic = c.dot_flops, (0.0 if c.is_fusion_interior else c.traffic)
+        colls = dict(c.colls)
+        for cond, body in c.while_bodies:
+            trips = comps[cond].max_const if cond in comps else 1
+            bf, bt, bc = walk(body)
+            flops += trips * bf
+            traffic += trips * bt
+            for k, v in bc:
+                colls[k] = colls.get(k, 0) + trips * v
+        for name2, kind in c.calls:
+            if "calls" in kind:  # fusion interior: flops count, traffic no
+                bf, bt, bc = walk(name2)
+                flops += bf
+                for k, v in bc:
+                    colls[k] = colls.get(k, 0) + v
+            elif "to_apply" in kind or kind == "branch":
+                bf, bt, bc = walk(name2)
+                flops += bf
+                traffic += bt
+                for k, v in bc:
+                    colls[k] = colls.get(k, 0) + v
+        return (flops, traffic, tuple(sorted(colls.items())))
+
+    for r in roots:
+        f, t, cl = walk(r)
+        totals["dot_flops"] += f
+        totals["traffic"] += t
+        for k, v in cl:
+            totals["colls"][k] = totals["colls"].get(k, 0) + v
+    totals["coll_bytes"] = float(sum(totals["colls"].values()))
+    return totals

@@ -1,0 +1,29 @@
+"""Production mesh construction (a function, never a module-level
+constant — importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int | None = None, *, model: int | None = None):
+    """Elastic-scaling helper: build the largest (data, model) mesh from
+    the live device set (DESIGN.md §8) — re-lowering on a different device
+    count is a recompile, not a code change."""
+    n = devices or len(jax.devices())
+    model = model or _largest_pow2_leq(min(16, n))
+    while n % model:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def _largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p

@@ -1,0 +1,548 @@
+"""Attention mixers: GQA (with QKV bias, qk-norm, sliding window, cross
+attention) and MLA (deepseek-v3), with training, chunked prefill and
+cached decode paths.
+
+Memory discipline for long sequences: queries are processed in chunks
+(lax.scan) so the score matrix never materializes beyond
+(B, H, Q_CHUNK, T); sliding-window attention additionally slices keys to
+the [chunk_start - W, chunk_end) band, making the cost linear in sequence
+length (this is what lets recurrentgemma run the 32k prefill cheaply).
+
+Decode caches:
+  * full attention: (B, S_max, KV, dh) k/v buffers, write-at-pos;
+  * sliding window: ring buffers of width W with a position side-car;
+  * MLA: the *compressed* (c_kv, k_pe) cache plus the absorbed-matmul
+    decode (q folded through W_UK, output through W_UV) — the MLA
+    memory/bandwidth win, see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, apply_rope, rms_norm_simple, zeros
+from repro.sharding.spec import constrain
+
+Q_CHUNK = 512
+# flash attention pays (tile re-reads) only once the score matrix stops
+# fitting comfortably: below this sequence length the single-level chunked
+# path is strictly better on the memory term (§Perf iteration C8).
+FLASH_MIN_SEQ = 8192
+
+
+# ----------------------------------------------------------------- params
+
+
+def init_attention(key, cfg, axes, stack=(), cross: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    d, dh = cfg.d_model, cfg.head_dim
+    H = axes.pad_heads(cfg.n_heads) if axes else cfg.n_heads
+    KV = cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], stack + (d, H * dh), s, dtype),
+        "wk": _init(ks[1], stack + (d, KV * dh), s, dtype),
+        "wv": _init(ks[2], stack + (d, KV * dh), s, dtype),
+        "wo": _init(ks[3], stack + (H * dh, d), (H * dh) ** -0.5, dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = zeros(stack + (H * dh,), dtype)
+        p["bk"] = zeros(stack + (KV * dh,), dtype)
+        p["bv"] = zeros(stack + (KV * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(stack + (dh,), jnp.float32)
+        p["k_norm"] = jnp.ones(stack + (dh,), jnp.float32)
+    if cross and cfg.n_vision_tokens:
+        p["gate"] = zeros(stack + (), jnp.float32)  # tanh-gated cross-attn
+    return p
+
+
+def init_mla(key, cfg, axes, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    H = axes.pad_heads(cfg.n_heads) if axes else cfg.n_heads
+    qn, qr, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": _init(ks[0], stack + (d, cfg.q_lora_rank), d ** -0.5, dtype),
+        "q_ln": jnp.ones(stack + (cfg.q_lora_rank,), jnp.float32),
+        "wq_b": _init(ks[1], stack + (cfg.q_lora_rank, H * (qn + qr)),
+                      cfg.q_lora_rank ** -0.5, dtype),
+        "wkv_a": _init(ks[2], stack + (d, cfg.kv_lora_rank + qr), d ** -0.5, dtype),
+        "kv_ln": jnp.ones(stack + (cfg.kv_lora_rank,), jnp.float32),
+        "wk_b": _init(ks[3], stack + (cfg.kv_lora_rank, H * qn),
+                      cfg.kv_lora_rank ** -0.5, dtype),
+        "wv_b": _init(ks[4], stack + (cfg.kv_lora_rank, H * vd),
+                      cfg.kv_lora_rank ** -0.5, dtype),
+        "wo": _init(ks[5], stack + (H * vd, d), (H * vd) ** -0.5, dtype),
+    }
+
+
+# ------------------------------------------------------------ core einsum
+
+
+def _grouped_attn(q, k, v, mask, scale):
+    """q: (B,S,H,dh) with H = KV*rep; k/v: (B,T,KV,dk). mask: broadcastable
+    to (B,KV,rep,S,T) or None. fp32 softmax."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, dh)
+    scores = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return ctx.reshape(B, S, KV * rep, v.shape[-1])
+
+
+def _causal_mask(q_pos, k_pos, window: int = 0):
+    """(S, T) bool mask; window > 0 adds the sliding-window band."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _chunked_attn(q, k, v, cfg, *, causal, window, q_positions, k_positions, scale):
+    """Scan over query chunks; optional banded key slicing for windows."""
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    if S <= Q_CHUNK:
+        mask = None
+        if causal:
+            mask = _causal_mask(q_positions, k_positions, window)[None, None, None]
+        return _grouped_attn(q, k, v, mask, scale)
+
+    n_chunks = S // Q_CHUNK
+    assert S % Q_CHUNK == 0, f"seq {S} must be divisible by Q_CHUNK {Q_CHUNK}"
+    band = window + Q_CHUNK if (window and causal) else 0
+
+    def chunk(carry, i):
+        start = i * Q_CHUNK
+        qc = jax.lax.dynamic_slice_in_dim(q, start, Q_CHUNK, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, start, Q_CHUNK, axis=0)
+        if band and band < T:
+            # banded keys: only [start - window, start + Q_CHUNK) can attend
+            kstart = jnp.maximum(start - window, 0)
+            kstart = jnp.minimum(kstart, T - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, kstart, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kstart, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_positions, kstart, band, axis=0)
+        else:
+            kc, vc, kp = k, v, k_positions
+        mask = _causal_mask(qp, kp, window)[None, None, None] if causal else None
+        return carry, _grouped_attn(qc, kc, vc, mask, scale)
+
+    _, chunks = jax.lax.scan(chunk, (), jnp.arange(n_chunks))
+    return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, v.shape[-1])
+
+
+# ----------------------------------------------------- flash attention
+#
+# Two-level online-softmax ("flash") attention in pure JAX — the §Perf
+# optimized variant (cfg.flash_attention). Never materializes more than a
+# (B, H, cq, ck) score tile:
+#
+#   * _flash_attn_train: outer scan over q chunks (jax.checkpoint'd), inner
+#     scan over ALL k chunks with causal masking. Differentiable; backward
+#     recomputes tiles (flash-bwd memory profile without a custom vjp).
+#   * _flash_attn_pairs: static (qi, ki<=qi) triangle schedule — skips the
+#     masked upper half entirely (2x fewer FLOPs on causal prefill).
+#     Inference-only (the scan carry includes the output buffer, which
+#     would be saved per-step by autodiff).
+
+
+def _pick_chunks(B, H, S, T, budget_bytes=64 << 20):
+    cq = min(S, 512)
+    ck = min(T, 1024)
+    while B * H * cq * ck * 4 > budget_bytes and ck > 128:
+        ck //= 2
+    while B * H * cq * ck * 4 > budget_bytes and cq > 128:
+        cq //= 2
+    while S % cq:
+        cq //= 2
+    while T % ck:
+        ck //= 2
+    return max(cq, 1), max(ck, 1)
+
+
+def _tile_update(qc, kc, vc, m, l, acc, qp, kp, scale, causal):
+    """One online-softmax tile update. qc: (B,cq,KV,rep,dh); kc/vc:
+    (B,ck,KV,d*); m/l: (B,KV,rep,cq); acc: (B,KV,rep,cq,dv). fp32 stats."""
+    s = jnp.einsum("bqkrd,btkd->bkrqt", qc, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        s = jnp.where((qp[:, None] >= kp[None, :])[None, None, None], s, -jnp.inf)
+    m_new = jnp.maximum(m, s.max(-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+    corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+    l_new = l * corr + p.sum(-1)
+    pv = jnp.einsum("bkrqt,btkd->bkrqd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finalize(acc, l, dtype):
+    norm = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,rep,cq,dv)
+    B, KV, rep, cq, dv = norm.shape
+    return jnp.transpose(norm, (0, 3, 1, 2, 4)).reshape(B, cq, KV * rep, dv).astype(dtype)
+
+
+def _flash_attn_train(q, k, v, *, causal, scale):
+    """Outer-q / inner-k flash attention, differentiable."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = H // KV
+    cq, ck = _pick_chunks(B, H, S, T)
+    nq, nk = S // cq, T // ck
+
+    def outer(_, qi):
+        qs = qi * cq
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, cq, 1).reshape(B, cq, KV, rep, dh)
+        qp = qs + jnp.arange(cq, dtype=jnp.int32)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            ks = ki * ck
+            kc = jax.lax.dynamic_slice_in_dim(k, ks, ck, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ks, ck, 1)
+            kp = ks + jnp.arange(ck, dtype=jnp.int32)
+            m, l, acc = _tile_update(qc, kc, vc, m, l, acc, qp, kp, scale, causal)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, KV, rep, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk))
+        return None, _finalize(acc, l, v.dtype)
+
+    _, rows = jax.lax.scan(jax.checkpoint(outer), None, jnp.arange(nq))
+    return jnp.moveaxis(rows, 0, 1).reshape(B, S, H, dv)
+
+
+def _flash_attn_pairs(q, k, v, *, causal, scale):
+    """Triangle pair-schedule flash attention (inference-only): only
+    (qi, ki) tiles with any unmasked entry are visited."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = H // KV
+    cq, ck = _pick_chunks(B, H, S, T)
+    nq, nk = S // cq, T // ck
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(nk)
+             if (not causal) or (ki * ck <= qi * cq + cq - 1)]
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    last_arr = jnp.asarray(
+        [i + 1 == len(pairs) or pairs[i + 1][0] != pairs[i][0]
+         for i in range(len(pairs))])
+
+    out0 = jnp.zeros((B, S, H, dv), v.dtype)
+    m0 = jnp.full((B, KV, rep, cq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, cq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, cq, dv), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc, out = carry
+        qi, ki, is_last = xs
+        qs, ks = qi * cq, ki * ck
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, cq, 1).reshape(B, cq, KV, rep, dh)
+        kc = jax.lax.dynamic_slice_in_dim(k, ks, ck, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ks, ck, 1)
+        qp = qs + jnp.arange(cq, dtype=jnp.int32)
+        kp = ks + jnp.arange(ck, dtype=jnp.int32)
+        m, l, acc = _tile_update(qc, kc, vc, m, l, acc, qp, kp, scale, causal)
+        row = _finalize(acc, l, v.dtype)
+        cur = jax.lax.dynamic_slice_in_dim(out, qs, cq, 1)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, jnp.where(is_last, row, cur), qs, 1)
+        # reset stats at a row boundary
+        m = jnp.where(is_last, -jnp.inf, m)
+        l = jnp.where(is_last, 0.0, l)
+        acc = jnp.where(is_last, 0.0, acc)
+        return (m, l, acc, out), None
+
+    (m, l, acc, out), _ = jax.lax.scan(body, (m0, l0, a0, out0),
+                                       (qi_arr, ki_arr, last_arr))
+    return out
+
+
+def _flash_attn(q, k, v, *, causal, scale, inference: bool):
+    if inference:
+        if jax.default_backend() == "tpu":
+            # the Pallas kernel (kernels/flash.py): VMEM-resident online
+            # softmax, one HBM pass over K/V per q-block row
+            from repro.kernels.flash import flash_attention as _pallas_flash
+
+            return _pallas_flash(q, k, v, causal=causal, scale=scale,
+                                 interpret=False)
+        return _flash_attn_pairs(q, k, v, causal=causal, scale=scale)
+    return _flash_attn_train(q, k, v, causal=causal, scale=scale)
+
+
+# ------------------------------------------------------------- GQA mixer
+
+
+def _proj(x, w, b=None):
+    y = x @ w
+    return y + b if b is not None else y
+
+
+def gqa_forward(
+    x,
+    p,
+    cfg,
+    axes,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions=None,
+    rope: bool = True,
+    cache=None,
+    decode: bool = False,
+    memory=None,
+):
+    """Returns (out, new_cache). ``memory`` (B, M, d) switches to
+    cross-attention (keys/values from memory; cache holds them in decode).
+    """
+    B, S, d = x.shape
+    dh = cfg.head_dim
+    H = p["wq"].shape[-1] // dh
+    KV = cfg.n_kv_heads
+    scale = dh ** -0.5
+
+    q = _proj(x, p["wq"], p.get("bq"))
+    q = constrain(q, axes, "batch", None, axes.model if axes else None)
+    q = q.reshape(B, S, H, dh)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"], cfg.norm_eps)
+
+    is_cross = memory is not None or (cache is not None and "ck" in cache)
+    if is_cross:
+        # cross attention: keys/values from memory (computed at train /
+        # prefill and cached; read from cache at decode). No rope, no mask.
+        if memory is not None:
+            k = _proj(memory, p["wk"], p.get("bk")).reshape(B, -1, KV, dh)
+            v = _proj(memory, p["wv"], p.get("bv")).reshape(B, -1, KV, dh)
+            new_cache = {"ck": k, "cv": v} if cache is not None else None
+        else:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        ctx = _grouped_attn(q, k, v, None, scale)
+        out = ctx.reshape(B, S, H * dh) @ p["wo"]
+        if "gate" in p:
+            out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+        return out, new_cache
+
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, -1, KV, dh)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, -1, KV, dh)
+    if cfg.qk_norm:
+        k = rms_norm_simple(k, p["k_norm"], cfg.norm_eps)
+    new_cache = cache
+
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    if rope:
+        from repro.models.layers import rope_table
+
+        cos, sin = rope_table(positions, dh, cfg.rope_theta)
+        if decode and positions.ndim == 1 and positions.shape[0] == B and B > 1:
+            # per-slot positions (continuous batching): (B, half) -> (B,1,half)
+            cos, sin = cos[:, None, :], sin[:, None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if decode:
+        assert cache is not None and S == 1
+        per_slot = positions.ndim == 1 and positions.shape[0] == B and B > 1
+        pos = positions if per_slot else (
+            positions[0] if positions.ndim == 1 else positions
+        )
+        if window:  # ring buffer of width W (uniform position only)
+            W = cache["k"].shape[1]
+            slot = pos % W
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[None].astype(jnp.int32), slot, axis=0
+            )
+            valid = (cpos >= 0) & (cpos <= pos) & (pos - cpos < window)
+            mask = valid[None, None, None, None, :]  # (1,1,1,1,W)
+            ctx = _grouped_attn(q, ck, cv, mask, scale)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+        elif per_slot:
+            # continuous batching: every slot decodes at its own position
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, pos].set(k[:, 0], mode="drop")
+            cv = cache["v"].at[bidx, pos].set(v[:, 0], mode="drop")
+            t = jnp.arange(ck.shape[1], dtype=jnp.int32)
+            mask = (t[None, :] <= pos[:, None])[:, None, None, None, :]
+            ctx = _grouped_attn(q, ck, cv, mask, scale)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+            t = jnp.arange(ck.shape[1], dtype=jnp.int32)
+            mask = (t <= pos)[None, None, None, None, :]
+            ctx = _grouped_attn(q, ck, cv, mask, scale)
+            new_cache = {"k": ck, "v": cv}
+        out = ctx.reshape(B, S, H * dh) @ p["wo"]
+        return out, new_cache
+
+    # training / prefill
+    if getattr(cfg, "flash_attention", False) and window == 0 and S >= FLASH_MIN_SEQ:
+        # §Perf optimized path: online-softmax tiles; triangle schedule at
+        # prefill (cache is not None <=> inference)
+        ctx = _flash_attn(q, k, v, causal=causal, scale=scale,
+                          inference=cache is not None)
+    else:
+        ctx = _chunked_attn(
+            q, k, v, cfg,
+            causal=causal, window=window,
+            q_positions=positions, k_positions=positions, scale=scale,
+        )
+    ctx = constrain(ctx, axes, "batch", None, axes.model if axes else None, None)
+    out = ctx.reshape(B, S, H * dh) @ p["wo"]
+    if cache is not None:  # prefill fills the cache buffers
+        if window:
+            W = min(window, k.shape[1])
+            new_cache = {
+                "k": k[:, -W:], "v": v[:, -W:],
+                "pos": positions[-W:].astype(jnp.int32),
+            }
+        else:
+            new_cache = {"k": k, "v": v}
+    return out, new_cache
+
+
+def init_gqa_cache(cfg, axes, B: int, S_max: int, window: int = 0, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    dh = cfg.head_dim
+    KV = cfg.n_kv_heads
+    W = min(window, S_max) if window else S_max
+    c = {
+        "k": zeros(stack + (B, W, KV, dh), dtype),
+        "v": zeros(stack + (B, W, KV, dh), dtype),
+    }
+    if window:
+        c["pos"] = jnp.full(stack + (W,), -1, jnp.int32)
+    return c
+
+
+# ------------------------------------------------------------- MLA mixer
+
+
+def _mla_qkv(x, p, cfg, H, axes=None):
+    """Shared q / compressed-kv computation. Returns q_nope (B,S,H,qn),
+    q_pe (B,S,H,qr), c_kv (B,S,r), k_pe (B,S,qr).
+
+    The projection outputs are explicitly pinned to head-sharded layouts:
+    without the constraint GSPMD sometimes keeps tokens sequence-sharded
+    through the projection and *replicates the weight* instead (observed:
+    150MB wq_b all-gathered per layer per microbatch on the v3 train cell
+    — §Perf iteration C5)."""
+    B, S, _ = x.shape
+    qn, qr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = rms_norm_simple(x @ p["wq_a"], p["q_ln"], cfg.norm_eps) @ p["wq_b"]
+    q = constrain(q, axes, "batch", None, axes.model if axes else None)
+    q = q.reshape(B, S, H, qn + qr)
+    q_nope, q_pe = q[..., :qn], q[..., qn:]
+    kv = x @ p["wkv_a"]
+    c_kv = rms_norm_simple(kv[..., : cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_pe = kv[..., cfg.kv_lora_rank:]
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def mla_forward(
+    x, p, cfg, axes, *, positions=None, cache=None, decode: bool = False
+):
+    """MLA attention. Prefill/train expands k/v per position; decode uses
+    the compressed cache with absorbed matmuls (DESIGN.md §Perf)."""
+    from repro.models.layers import rope_table
+
+    B, S, d = x.shape
+    qn, qr, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    H = p["wq_b"].shape[-1] // (qn + qr)
+    scale = (qn + qr) ** -0.5
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    per_slot = decode and positions.ndim == 1 and positions.shape[0] == B and B > 1
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(x, p, cfg, H, axes)
+    cos, sin = rope_table(positions, qr, cfg.rope_theta)
+    if per_slot:
+        cos, sin = cos[:, None, :], sin[:, None, :]
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0, :]  # single shared head
+
+    if decode:
+        assert cache is not None and S == 1
+        if per_slot:
+            bidx = jnp.arange(B)
+            ckv = cache["c_kv"].at[bidx, positions].set(c_kv[:, 0], mode="drop")
+            ckpe = cache["k_pe"].at[bidx, positions].set(k_pe[:, 0], mode="drop")
+            T = ckv.shape[1]
+            t = jnp.arange(T, dtype=jnp.int32)
+            tmask = (t[None, :] <= positions[:, None])[:, None, None, :]
+        else:
+            pos = positions[0]
+            ckv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
+            ckpe = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe, pos, axis=1)
+            T = ckv.shape[1]
+            t = jnp.arange(T, dtype=jnp.int32)
+            tmask = (t <= pos)[None, None, None, :]
+        # absorbed: q_eff = q_nope @ W_UK  -> score against compressed cache
+        wkb = p["wk_b"].reshape(r, H, qn)
+        q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, wkb)  # (B,1,H,r)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_eff, ckv)
+            + jnp.einsum("bshn,btn->bhst", q_pe, ckpe)
+        ).astype(jnp.float32) * scale
+        scores = jnp.where(tmask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_c = jnp.einsum("bhst,btr->bshr", probs, ckv)  # (B,1,H,r)
+        wvb = p["wv_b"].reshape(r, H, vd)
+        ctx = jnp.einsum("bshr,rhv->bshv", ctx_c, wvb)
+        out = ctx.reshape(B, S, H * vd) @ p["wo"]
+        return out, {"c_kv": ckv, "k_pe": ckpe}
+
+    # train / prefill: expand per position (outputs pinned head-sharded,
+    # same C5 rationale as _mla_qkv)
+    wkb = p["wk_b"].reshape(r, H, qn)
+    wvb = p["wv_b"].reshape(r, H, vd)
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, wkb)
+    k_nope = constrain(k_nope, axes, "batch", None, axes.model if axes else None, None)
+    v = jnp.einsum("btr,rhv->bthv", c_kv, wvb)
+    v = constrain(v, axes, "batch", None, axes.model if axes else None, None)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], k_pe.shape[:2] + (H, qr))], axis=-1)
+    if getattr(cfg, "flash_attention", False) and S >= FLASH_MIN_SEQ:
+        ctx = _flash_attn(q, k, v, causal=True, scale=scale,
+                          inference=cache is not None)
+    else:
+        ctx = _chunked_attn(
+            q, k, v, cfg, causal=True, window=0,
+            q_positions=positions, k_positions=positions, scale=scale,
+        )
+    ctx = constrain(ctx, axes, "batch", None, axes.model if axes else None, None)
+    out = ctx.reshape(B, S, H * vd) @ p["wo"]
+    new_cache = cache
+    if cache is not None:
+        new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+    return out, new_cache
+
+
+def init_mla_cache(cfg, axes, B: int, S_max: int, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "c_kv": zeros(stack + (B, S_max, cfg.kv_lora_rank), dtype),
+        "k_pe": zeros(stack + (B, S_max, cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,149 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, embeddings.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays;
+  * ``init_*`` functions take an optional leading ``stack`` dim so block
+    params can be created pre-stacked for lax.scan over layers;
+  * compute dtype is cfg.dtype (bf16 by default); norm/softmax statistics
+    accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+
+def init_norm(cfg, shape, stack=()):
+    p = {"scale": ones(stack + shape, jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = zeros(stack + shape, jnp.float32)
+    return p
+
+
+def apply_norm(x, p, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale, eps=1e-6):
+    """Per-head / latent RMS norm (qk_norm, MLA latent norms)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope
+
+
+def rope_table(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """cos/sin tables for rotary embedding. positions: (...,) int32.
+    Returns (cos, sin) of shape positions.shape + (dim/2,), fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal embeddings computed directly at ``positions`` (no table
+    materialization — decode touches a single row)."""
+    pos = positions.astype(jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------------- mlp
+
+
+def init_mlp(key, cfg, d_in: int, d_ff: int, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    scale = d_in ** -0.5
+    p = {"wo": _init(ks[2], stack + (d_ff, d_in), d_ff ** -0.5, dtype)}
+    p["wi"] = _init(ks[0], stack + (d_in, d_ff), scale, dtype)
+    if cfg.mlp_gated:
+        p["wg"] = _init(ks[1], stack + (d_in, d_ff), scale, dtype)
+    if cfg.mlp_bias:
+        p["bi"] = zeros(stack + (d_ff,), dtype)
+        p["bo"] = zeros(stack + (d_in,), dtype)
+    return p
+
+
+def _act(x, name):
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(x, p, cfg, axes=None):
+    from repro.sharding.spec import constrain
+
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    if "wg" in p:
+        h = _act(x @ p["wg"], cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    h = constrain(h, axes, "batch", None, axes.model if axes else None)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def init_embed(key, cfg, vocab_padded: int, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    return {"table": _init(key, stack + (vocab_padded, cfg.d_model), 0.02, dtype)}
+
+
+def embed_tokens(ids, p):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(x, p_head, vocab_padded: int, tied_table=None):
+    """Logits over the (padded) vocab; padded columns masked to -inf later
+    by the loss/serve code via the real-vocab size."""
+    if tied_table is not None:
+        return x @ tied_table.T
+    return x @ p_head["w"]

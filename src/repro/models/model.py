@@ -1,0 +1,148 @@
+"""Config -> model builder: parameter init, train forward, prefill and
+decode entry points for every assigned architecture.
+
+Batch dict keys (built by ``repro.data`` / ``launch.dryrun.input_specs``):
+  tokens  (B, S) int32          — LM / decoder input
+  labels  (B, S) int32          — next-token targets (train)
+  frames  (B, S_enc, d) dtype   — whisper stub frame embeddings
+  vision  (B, n_vtok, d) dtype  — VLM stub patch embeddings
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    embed_tokens,
+    init_embed,
+    init_norm,
+    apply_norm,
+    sinusoidal_embed,
+    _init,
+)
+from repro.sharding.spec import Axes, constrain, vocab_pad
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    axes: Axes | None = None
+
+    @property
+    def vocab_padded(self) -> int:
+        return vocab_pad(self.cfg.vocab, self.axes)
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: dict = {"embed": init_embed(ks[0], cfg, self.vocab_padded)}
+        params["segments"] = self._init_segments(ks[1], cfg.segments)
+        params["final_norm"] = init_norm(cfg, (cfg.d_model,))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": _init(ks[2], (cfg.d_model, self.vocab_padded),
+                           cfg.d_model ** -0.5, jnp.dtype(cfg.dtype))
+            }
+        if cfg.encoder_segments:
+            params["encoder"] = {
+                "segments": self._init_segments(ks[3], cfg.encoder_segments),
+                "final_norm": init_norm(cfg, (cfg.d_model,)),
+            }
+        if cfg.pos_embedding == "learned":
+            params["pos_embed"] = _init(ks[4], (8192, cfg.d_model), 0.02,
+                                        jnp.dtype(cfg.dtype))
+        return params
+
+    def _init_segments(self, key, segments):
+        cfg = self.cfg
+        segs = []
+        for period, count in segments:
+            kper = jax.random.split(key, len(period) + 1)
+            key = kper[-1]
+            segs.append(tuple(
+                tfm.init_block(kper[i], spec, cfg, self.axes, stack=(count,))
+                for i, spec in enumerate(period)
+            ))
+        return segs
+
+    # ------------------------------------------------------------- caches
+    def init_caches(self, B: int, S_max: int, memory_len: int = 0):
+        cfg = self.cfg
+        caches = []
+        for period, count in cfg.segments:
+            caches.append(tuple(
+                tfm.init_block_cache(spec, cfg, self.axes, B, S_max,
+                                     stack=(count,), memory_len=memory_len)
+                for spec in period
+            ))
+        return caches
+
+    # ------------------------------------------------------------ forward
+    def _embed_in(self, params, batch, positions):
+        cfg = self.cfg
+        x = embed_tokens(batch["tokens"], params["embed"])
+        if cfg.name.startswith("recurrentgemma"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma scaling
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_embed(positions, cfg.d_model).astype(x.dtype)[None]
+        elif cfg.pos_embedding == "learned":
+            x = x + jnp.take(params["pos_embed"], positions, axis=0)[None]
+        return constrain(x, self.axes, "batch", None, None)
+
+    def _memory(self, params, batch):
+        """Encoder output (whisper) or vision embeddings (VLM)."""
+        cfg = self.cfg
+        if cfg.encoder_segments:
+            frames = batch["frames"]
+            S_enc = frames.shape[1]
+            pos = jnp.arange(S_enc, dtype=jnp.int32)
+            h = frames + sinusoidal_embed(pos, cfg.d_model).astype(frames.dtype)[None]
+            h, _, _ = tfm.run_segments(
+                h, params["encoder"]["segments"], cfg.encoder_segments,
+                cfg, self.axes, positions=pos,
+            )
+            return apply_norm(h, params["encoder"]["final_norm"], cfg)
+        if cfg.n_vision_tokens:
+            return batch["vision"]
+        return None
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(x, params["final_norm"], cfg)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = x @ params["lm_head"]["w"]
+        return constrain(logits, self.axes, "batch", None,
+                         self.axes.model if self.axes else None)
+
+    def forward(self, params, batch, *, caches=None, decode=False, pos=None):
+        """Returns (logits, new_caches, aux). ``pos``: scalar int32 decode
+        position (S==1); otherwise positions are 0..S-1."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if decode:
+            positions = jnp.asarray(pos, jnp.int32)[None] if jnp.ndim(pos) == 0 else pos
+        else:
+            positions = jnp.arange(S, dtype=jnp.int32)
+
+        x = self._embed_in(params, batch, positions)
+        memory = None if decode else self._memory(params, batch)
+
+        x, new_caches, aux = tfm.run_segments(
+            x, params["segments"], cfg.segments, cfg, self.axes,
+            positions=positions, caches=caches, decode=decode, memory=memory,
+        )
+        return self._logits(params, x), new_caches, aux
+
+
+def abstract_params(cfg: ModelConfig, mesh_shape=None, axes: Axes | None = None):
+    """ShapeDtypeStruct pytree of the params (no allocation) — dry-run use."""
+    model = Model(cfg, axes)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

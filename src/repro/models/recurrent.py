@@ -1,0 +1,228 @@
+"""Recurrent mixers: RG-LRU (Griffin / recurrentgemma) and Mamba1
+(falcon-mamba).
+
+Both are diagonal linear recurrences h_t = a_t * h_{t-1} + b_t evaluated
+with a *chunked associative scan*: the sequence is split into chunks of
+``SCAN_CHUNK``; within a chunk ``jax.lax.associative_scan`` exposes
+log-depth parallelism to the VPU, across chunks a sequential ``lax.scan``
+carries the boundary state with O(B*width) memory. This is the TPU-native
+replacement for the CUDA selective-scan kernel (DESIGN.md §2): the
+recurrence is bandwidth-bound, so the win comes from keeping the chunk
+working set in VMEM, not from MXU work.
+
+Decode paths advance the recurrence one step from a carried state — O(1)
+per token, which is why these archs run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, zeros
+from repro.sharding.spec import constrain
+
+SCAN_CHUNK = 256
+
+
+def _assoc_scan(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (chunk), h0: initial state.
+    a, b: (B, C, ...). Returns (h_all (B,C,...), h_last)."""
+    b0 = b.at[:, 0].add(a[:, 0] * h0) if h0 is not None else b
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return h, h[:, -1]
+
+
+def _chunked_linear_scan(a, b, h0):
+    """Full-sequence diagonal recurrence via chunked associative scan.
+    a, b: (B, S, ...); h0: (B, ...) or None. Returns (h (B,S,...), h_last)."""
+    B, S = a.shape[0], a.shape[1]
+    if S <= SCAN_CHUNK:
+        return _assoc_scan(a, b, h0)
+    n = S // SCAN_CHUNK
+    assert S % SCAN_CHUNK == 0, f"seq {S} % {SCAN_CHUNK} != 0"
+    rest = a.shape[2:]
+    ar = a.reshape((B, n, SCAN_CHUNK) + rest)
+    br = b.reshape((B, n, SCAN_CHUNK) + rest)
+    h0 = h0 if h0 is not None else jnp.zeros((B,) + rest, a.dtype)
+
+    def step(h, ab):
+        ac, bc = ab  # (B, C, ...)
+        hc, hl = _assoc_scan(ac, bc, h)
+        return hl, hc
+
+    hl, chunks = jax.lax.scan(step, h0, (jnp.moveaxis(ar, 1, 0), jnp.moveaxis(br, 1, 0)))
+    h = jnp.moveaxis(chunks, 0, 1).reshape((B, S) + rest)
+    return h, hl
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq. x: (B,S,D), w: (K,D).
+    state: (B, K-1, D) carried history for decode/continuation.
+    Returns (y (B,S,D), new_state (B,K-1,D))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1) :]
+
+
+# ---------------------------------------------------------------- RG-LRU
+
+
+def init_rglru(key, cfg, axes, stack=()):
+    """RG-LRU gates are block-diagonal linear maps with n_heads blocks
+    (as in the reference recurrentgemma implementation) — elementwise in
+    width across blocks, so they shard cleanly over "model" by head."""
+    dtype = jnp.dtype(cfg.dtype)
+    d, w = cfg.d_model, cfg.lru_width
+    nb = max(1, cfg.n_heads)
+    bs = w // nb
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _init(ks[0], stack + (d, w), d ** -0.5, dtype),
+        "wg": _init(ks[1], stack + (d, w), d ** -0.5, dtype),
+        "conv": _init(ks[2], stack + (4, w), 0.1, dtype),
+        # block-diagonal gate projections of the RG-LRU itself
+        "wa": _init(ks[3], stack + (nb, bs, bs), bs ** -0.5, dtype),
+        "wi": _init(ks[4], stack + (nb, bs, bs), bs ** -0.5, dtype),
+        "lam": jnp.full(stack + (w,), 2.0, jnp.float32),  # Lambda param
+        "wo": _init(ks[5], stack + (w, d), w ** -0.5, dtype),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _block_diag(u, w):
+    """u: (B,S,width); w: (nb, bs, bs) block-diagonal matmul."""
+    B, S, width = u.shape
+    nb, bs, _ = w.shape
+    ub = u.reshape(B, S, nb, bs)
+    return jnp.einsum("bsnv,nvw->bsnw", ub, w).reshape(B, S, width)
+
+
+def _rglru_coeffs(u, p):
+    """Per-step gates -> (a, b) of the diagonal recurrence (fp32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(uf, p["wa"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag(uf, p["wi"].astype(jnp.float32)))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_forward(x, p, cfg, axes, *, cache=None, decode: bool = False, positions=None):
+    """Griffin recurrent block: [Wx -> conv -> RG-LRU] * gelu(Wg) -> Wo."""
+    B, S, d = x.shape
+    u = x @ p["wx"]
+    u = constrain(u, axes, "batch", None, axes.model if axes else None)
+    gate = jax.nn.gelu(x @ p["wg"])
+
+    conv_state = cache.get("conv") if cache else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_state)
+
+    a, b = _rglru_coeffs(u, p)
+    h0 = cache.get("h") if cache else None
+    if decode:
+        assert S == 1
+        h0 = h0 if h0 is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+        h_last = a[:, 0] * h0 + b[:, 0]
+        h = h_last[:, None]
+    else:
+        h, h_last = _chunked_linear_scan(a, b, h0)
+    y = h.astype(x.dtype) * gate
+    out = y @ p["wo"]
+    new_cache = {"conv": new_conv, "h": h_last} if cache is not None else None
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, axes, B: int, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    w = cfg.lru_width
+    return {
+        "conv": zeros(stack + (B, 3, w), dtype),
+        "h": zeros(stack + (B, w), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------- Mamba
+
+
+def init_mamba(key, cfg, axes, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": _init(ks[0], stack + (d, 2 * di), d ** -0.5, dtype),
+        "conv": _init(ks[1], stack + (cfg.ssm_conv, di), 0.1, dtype),
+        "x_proj": _init(ks[2], stack + (di, dt_rank + 2 * N), di ** -0.5, dtype),
+        "dt_proj": _init(ks[3], stack + (dt_rank, di), dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.zeros(stack + (di,), jnp.float32),
+        "A_log": jnp.broadcast_to(jnp.log(A), stack + (di, N)).copy(),
+        "D": jnp.ones(stack + (di,), jnp.float32),
+        "out_proj": _init(ks[5], stack + (di, d), di ** -0.5, dtype),
+    }
+
+
+def mamba_forward(x, p, cfg, axes, *, cache=None, decode: bool = False, positions=None):
+    """Mamba1 selective SSM (diagonal, real A)."""
+    B, S, d = x.shape
+    di = p["in_proj"].shape[-1] // 2
+    N = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, axes, "batch", None, axes.model if axes else None)
+    xb, z = xz[..., :di], xz[..., di:]
+
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _causal_conv(xb, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"]  # (B,S,dt_rank+2N)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"]
+    ).astype(jnp.float32)  # (B,S,di)
+    Bs = proj[..., dt_rank : dt_rank + N].astype(jnp.float32)  # (B,S,N)
+    Cs = proj[..., dt_rank + N :].astype(jnp.float32)  # (B,S,N)
+
+    A = -jnp.exp(p["A_log"])  # (di,N)
+    a = jnp.exp(dt[..., None] * A)  # (B,S,di,N)
+    b = dt[..., None] * Bs[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    h0 = cache.get("h") if cache else None
+    if decode:
+        assert S == 1
+        h0 = h0 if h0 is not None else jnp.zeros((B, di, N), jnp.float32)
+        h_last = a[:, 0] * h0 + b[:, 0]
+        y = (h_last[:, None] * Cs[:, :, None, :]).sum(-1)
+    else:
+        h, h_last = _chunked_linear_scan(a, b, h0)
+        y = (h * Cs[:, :, None, :]).sum(-1)  # (B,S,di)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = {"conv": new_conv, "h": h_last} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, axes, B: int, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": zeros(stack + (B, cfg.ssm_conv - 1, di), dtype),
+        "h": zeros(stack + (B, di, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,195 @@
+"""Residual block assembly + segment scan.
+
+A block = norm -> mixer (+ optional cross-attn) -> norm -> FFN (dense MLP,
+MoE, or none), with residual adds. The layer stack is described by config
+``segments`` (period of BlockSpecs x count) and executed as one
+``lax.scan`` per segment over pre-stacked params — compile-time critical
+at 512-way SPMD (one layer body is lowered per segment, not per layer).
+``jax.checkpoint`` wraps the scan body when cfg.remat (activation
+rematerialization per layer-period).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.sharding.spec import constrain
+
+
+# ----------------------------------------------------------- block params
+
+
+def init_block(key, spec, cfg, axes, stack=()):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {"ln1": init_norm(cfg, (d,), stack)}
+    if spec.mixer in ("attn", "local_attn"):
+        p["mix"] = attn.init_attention(ks[0], cfg, axes, stack)
+    elif spec.mixer == "mla":
+        p["mix"] = attn.init_mla(ks[0], cfg, axes, stack)
+    elif spec.mixer == "rglru":
+        p["mix"] = rec.init_rglru(ks[0], cfg, axes, stack)
+    elif spec.mixer == "mamba":
+        p["mix"] = rec.init_mamba(ks[0], cfg, axes, stack)
+    if spec.cross:
+        p["ln_x"] = init_norm(cfg, (d,), stack)
+        p["cross"] = attn.init_attention(ks[1], cfg, axes, stack, cross=True)
+    if spec.ffn == "dense":
+        p["ln2"] = init_norm(cfg, (d,), stack)
+        p["mlp"] = init_mlp(ks[2], cfg, d, cfg.d_ff, stack)
+    elif spec.ffn == "moe":
+        p["ln2"] = init_norm(cfg, (d,), stack)
+        p["moe"] = moe_lib.init_moe(ks[3], cfg, axes, stack)
+        if cfg.n_shared_experts:
+            p["shared"] = init_mlp(
+                ks[4], cfg, d, cfg.d_expert * cfg.n_shared_experts, stack
+            )
+    return p
+
+
+def init_block_cache(spec, cfg, axes, B, S_max, stack=(), memory_len: int = 0):
+    c = {}
+    if spec.mixer in ("attn", "local_attn"):
+        window = cfg.sliding_window if spec.mixer == "local_attn" else 0
+        c["mix"] = attn.init_gqa_cache(cfg, axes, B, S_max, window, stack)
+    elif spec.mixer == "mla":
+        c["mix"] = attn.init_mla_cache(cfg, axes, B, S_max, stack)
+    elif spec.mixer == "rglru":
+        c["mix"] = rec.init_rglru_cache(cfg, axes, B, stack)
+    elif spec.mixer == "mamba":
+        c["mix"] = rec.init_mamba_cache(cfg, axes, B, stack)
+    if spec.cross:
+        dh = cfg.head_dim
+        from repro.models.layers import zeros
+
+        c["cross"] = {
+            "ck": zeros(stack + (B, memory_len, cfg.n_kv_heads, dh), jnp.dtype(cfg.dtype)),
+            "cv": zeros(stack + (B, memory_len, cfg.n_kv_heads, dh), jnp.dtype(cfg.dtype)),
+        }
+    return c
+
+
+# --------------------------------------------------------------- forward
+
+
+def apply_block(
+    x, p, spec, cfg, axes, *, positions, cache=None, decode=False, memory=None,
+    use_pallas_moe=False,
+):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+
+    h = apply_norm(x, p["ln1"], cfg)
+    mix_cache = cache.get("mix") if cache else None
+    if spec.mixer in ("attn", "local_attn"):
+        window = cfg.sliding_window if spec.mixer == "local_attn" else 0
+        out, mc = attn.gqa_forward(
+            h, p["mix"], cfg, axes,
+            causal=spec.causal, window=window, positions=positions,
+            rope=cfg.pos_embedding == "rope" or spec.mixer == "local_attn",
+            cache=mix_cache, decode=decode,
+        )
+    elif spec.mixer == "mla":
+        out, mc = attn.mla_forward(
+            h, p["mix"], cfg, axes, positions=positions,
+            cache=mix_cache, decode=decode,
+        )
+    elif spec.mixer == "rglru":
+        out, mc = rec.rglru_forward(
+            h, p["mix"], cfg, axes, cache=mix_cache, decode=decode, positions=positions
+        )
+    elif spec.mixer == "mamba":
+        out, mc = rec.mamba_forward(
+            h, p["mix"], cfg, axes, cache=mix_cache, decode=decode, positions=positions
+        )
+    else:
+        out, mc = jnp.zeros_like(x), mix_cache
+    x = x + out
+    if new_cache is not None and mc is not None:
+        new_cache["mix"] = mc
+
+    if spec.cross:
+        h = apply_norm(x, p["ln_x"], cfg)
+        out, cc = attn.gqa_forward(
+            h, p["cross"], cfg, axes,
+            causal=False, positions=positions,
+            cache=cache.get("cross") if cache else None,
+            memory=memory,
+        )
+        x = x + out
+        if new_cache is not None and cc is not None:
+            new_cache["cross"] = cc
+
+    if spec.ffn == "dense":
+        x = x + apply_mlp(apply_norm(x, p["ln2"], cfg), p["mlp"], cfg, axes)
+    elif spec.ffn == "moe":
+        h = apply_norm(x, p["ln2"], cfg)
+        if decode:
+            if (cfg.decode_moe_ep and axes is not None
+                    and axes.expert == ("data", "model")):
+                # EP(data) x TP(model) decode dispatch (DESIGN.md §5)
+                import dataclasses as _dc
+
+                mo, a = moe_lib.moe_forward(
+                    h, p["moe"], cfg, _dc.replace(axes, expert=("data",)),
+                    tp_axis=axes.model,
+                )
+            else:
+                mo, a = moe_lib.moe_forward_decode(h, p["moe"], cfg, axes)
+        else:
+            mo, a = moe_lib.moe_forward(h, p["moe"], cfg, axes, use_pallas=use_pallas_moe)
+        aux = aux + a
+        if "shared" in p:
+            mo = mo + apply_mlp(h, p["shared"], cfg, axes)
+        x = x + mo
+
+    if (getattr(cfg, "seq_parallel", False) and axes is not None
+            and x.shape[1] % axes.model_size == 0 and not decode):
+        # Megatron-SP: residual stream sequence-sharded over "model";
+        # GSPMD turns the per-layer all-reduces into all-gather +
+        # reduce-scatter pairs and keeps activations 1/model-size sized.
+        x = constrain(x, axes, "batch", axes.model, None)
+    else:
+        x = constrain(x, axes, "batch", None, None)
+    return x, new_cache, aux
+
+
+def run_segments(
+    x, seg_params, segments, cfg, axes, *, positions, caches=None, decode=False,
+    memory=None,
+):
+    """Run all segments. seg_params: list (per segment) of tuples (per
+    period position) of stacked param pytrees. caches mirrors that
+    structure (or None). Returns (x, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (period, count) in enumerate(segments):
+        p_tuple = seg_params[si]
+        c_tuple = caches[si] if caches is not None else None
+
+        def body(carry, xs, period=period):
+            xc = carry
+            ps = xs[0]
+            cs = xs[1] if caches is not None else (None,) * len(period)
+            new_cs = []
+            aux_acc = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(period):
+                xc, nc, aux = apply_block(
+                    xc, ps[i], spec, cfg, axes,
+                    positions=positions, cache=cs[i], decode=decode, memory=memory,
+                )
+                aux_acc = aux_acc + aux
+                new_cs.append(nc if nc is not None else 0)
+            return xc, (tuple(new_cs), aux_acc)
+
+        fn = jax.checkpoint(body) if (cfg.remat and not decode) else body
+        xs = (p_tuple, c_tuple) if caches is not None else (p_tuple,)
+        x, (ncs, auxs) = jax.lax.scan(fn, x, xs)
+        new_caches.append(ncs if caches is not None else None)
+        aux_total = aux_total + auxs.sum()
+    return x, (new_caches if caches is not None else None), aux_total

@@ -1,0 +1,170 @@
+"""Optimizers: AdamW (dtype-configurable states, ZeRO-friendly) and
+Adafactor (factored second moments — how deepseek-v3-671b's states fit
+v5e HBM, see configs/deepseek_v3_671b.py).
+
+States are plain pytrees mirroring params; sharding rules in
+``repro.sharding.rules`` additionally shard them over the data axis
+(ZeRO-1) for the ≥30B configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    # adafactor
+    factored_min_dim: int = 128
+
+
+def lr_at(step, cfg: OptConfig):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# -------------------------------------------------------------------- AdamW
+
+
+def init_adamw_state(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+    }
+
+
+def adamw_update(params, grads, state, step, cfg: OptConfig):
+    lr = lr_at(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = tdef.flatten_up_to(grads)
+    leaves_m = tdef.flatten_up_to(state["m"])
+    leaves_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_p = tdef.unflatten([o[0] for o in outs])
+    new_m = tdef.unflatten([o[1] for o in outs])
+    new_v = tdef.unflatten([o[2] for o in outs])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------- Adafactor
+
+
+def _factored(shape, cfg):
+    return len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim and shape[-2] >= cfg.factored_min_dim
+
+
+def init_adafactor_state(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def init(p):
+        if _factored(p.shape, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"v": jax.tree.map(init, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, state, step, cfg: OptConfig):
+    lr = lr_at(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** -0.8  # Shazeer-Stern schedule
+    dt = jnp.dtype(cfg.state_dtype)
+    eps = 1e-30
+
+    def upd(p, g, s):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if "vr" in s:
+            vr = beta2 * s["vr"].astype(jnp.float32) + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * s["vc"].astype(jnp.float32) + (1 - beta2) * g2.mean(-2)
+            denom = (
+                vr[..., :, None]
+                * vc[..., None, :]
+                / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+            )
+            upd = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            new_s = {"vr": vr.astype(dt), "vc": vc.astype(dt)}
+        else:
+            v = beta2 * s["v"].astype(jnp.float32) + (1 - beta2) * g2
+            upd = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_s = {"v": v.astype(dt)}
+        # relative step-size clipping (RMS(update) <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+        upd = upd / jnp.maximum(1.0, rms)
+        newp = p.astype(jnp.float32) - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_s
+
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = tdef.flatten_up_to(grads)
+    leaves_s = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+    new_p = tdef.unflatten([o[0] for o in outs])
+    new_v = tdef.unflatten([o[1] for o in outs])
+    return new_p, {"v": new_v}
+
+
+# ------------------------------------------------------------------ facade
+
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.name == "adafactor":
+        return init_adafactor_state(params, cfg)
+    return init_adamw_state(params, cfg)
+
+
+def apply_updates(params, grads, state, step, cfg: OptConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(params, grads, state, step, cfg)
+    else:
+        new_p, new_s = adamw_update(params, grads, state, step, cfg)
+    return new_p, new_s, gnorm

@@ -1,0 +1,145 @@
+"""Continuous batching (vLLM-style slot scheduler) on static JAX caches.
+
+The decode step always runs the full (B_slots, 1) batch; each slot carries
+its own position (per-slot decode paths in models/attention.py). New
+requests are admitted into free slots between steps: the prompt is
+prefilled as a (1, prompt) forward and its caches are spliced into the
+slot; finished sequences free their slot immediately, so short requests
+never block long ones — the paper-framework analogue of PGX.D's "let the
+process continue without waiting for the completion of all previous
+computations".
+
+Restrictions (documented): rope-positional, non-windowed-cache archs
+(dense GQA / MLA / MoE families). Windowed rings and recurrent states
+need uniform positions and use the plain engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.engine import make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+
+
+def _splice(full, part, slot: int):
+    """Write ``part`` (leading batch dim 1, seq possibly shorter) into
+    batch-slot ``slot`` of ``full`` (cache trees: (count, B, S, ...))."""
+
+    def one(f, p):
+        if f.ndim < 2 or p.shape[0] != f.shape[0]:
+            return f
+        pad = [(0, fd - pd) for fd, pd in zip(f.shape, p.shape)]
+        pad[1] = (0, 0)
+        p_full = jnp.pad(p, pad)
+        idx = [0] * f.ndim
+        idx[1] = slot
+        return jax.lax.dynamic_update_slice(f, p_full, tuple(idx))
+
+    return jax.tree.map(one, full, part)
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, n_slots: int, s_max: int):
+        cfg = model.cfg
+        assert cfg.pos_embedding == "rope" and not cfg.sliding_window, (
+            "continuous batching supports rope/non-windowed archs; "
+            "use serve.engine for the others")
+        assert not any(s.mixer in ("rglru", "mamba") for s in cfg.layer_list())
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.caches = model.init_caches(n_slots, s_max)
+        self.positions = np.full(n_slots, -1, np.int64)  # -1 = free slot
+        self.budget = np.zeros(n_slots, np.int64)
+        self.rids = np.full(n_slots, -1, np.int64)
+        self.last_tok = np.zeros((n_slots, 1), np.int32)
+        self.out_tokens: dict[int, list] = {}
+        self.queue: deque[Request] = deque()
+        self._step = jax.jit(make_serve_step(model))
+        self._prefill = jax.jit(self._prefill_fn)
+
+    def _prefill_fn(self, params, tokens):
+        caches = self.model.init_caches(1, tokens.shape[1])
+        logits, caches, _ = self.model.forward(params, {"tokens": tokens},
+                                               caches=caches)
+        return logits[:, -1:], caches
+
+    # ------------------------------------------------------------- admit
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.positions[slot] >= 0 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt[None], jnp.int32)
+            logits, pre = self._prefill(self.params, prompt)
+            self.caches = _splice(self.caches, pre, slot)
+            tok = int(jnp.argmax(logits[0, 0, : self.model.cfg.vocab]))
+            self.positions[slot] = len(req.prompt)
+            self.budget[slot] = req.max_new_tokens - 1
+            self.rids[slot] = req.rid
+            self.last_tok[slot, 0] = tok
+            self.out_tokens[req.rid] = [tok]
+
+    # -------------------------------------------------------------- step
+    def step(self):
+        """Admit + one decode step for all active slots. Returns list of
+        finished Completions."""
+        self._admit()
+        active = self.positions >= 0
+        if not active.any():
+            return []
+        pos = jnp.asarray(np.where(active, self.positions, 0), jnp.int32)
+        logits, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(self.last_tok), pos
+        )
+        nxt = np.asarray(
+            jnp.argmax(logits[:, 0, : self.model.cfg.vocab], -1), np.int32
+        )
+        done = []
+        for slot in range(self.n_slots):
+            if not active[slot]:
+                continue
+            if self.budget[slot] > 0:
+                self.out_tokens[self.rids[slot]].append(int(nxt[slot]))
+                self.last_tok[slot, 0] = nxt[slot]
+                self.positions[slot] += 1
+                self.budget[slot] -= 1
+            if self.budget[slot] == 0 or self.positions[slot] >= self.s_max - 1:
+                rid = int(self.rids[slot])
+                done.append(Completion(rid, self.out_tokens.pop(rid)))
+                self.positions[slot] = -1
+                self.rids[slot] = -1
+        return done
+
+    def run(self, requests, max_steps: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        out = {}
+        steps = 0
+        while (self.queue or (self.positions >= 0).any()) and steps < max_steps:
+            for c in self.step():
+                out[c.rid] = c.tokens
+            steps += 1
+        return out

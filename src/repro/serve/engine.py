@@ -1,0 +1,141 @@
+"""Serving: prefill + batched greedy decode with static KV caches.
+
+``serve_step`` (one token for the whole batch against a full-length KV
+cache) is the function the decode_32k / long_500k dry-run cells lower.
+The engine also provides a minimal batched generation loop used by
+examples/serve_llm.py: prefill a prompt batch, extend the caches to the
+generation budget, then step the decoder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_serve_step(model: Model):
+    """decode one token: (params, caches, tokens (B,1), pos) ->
+    (logits (B,1,Vp), new_caches)."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches, _ = model.forward(
+            params, {"tokens": tokens}, caches=caches, decode=True, pos=pos
+        )
+        return logits, caches
+
+    return serve_step
+
+
+def make_prefill(model: Model):
+    """Run the prompt through the model, returning last-position logits and
+    the populated caches (length = prompt length)."""
+
+    def prefill(params, batch):
+        B, S = batch["tokens"].shape
+        memory_len = 0
+        if model.cfg.encoder_segments:
+            memory_len = batch["frames"].shape[1]
+        elif model.cfg.n_vision_tokens:
+            memory_len = batch["vision"].shape[1]
+        caches = model.init_caches(B, S, memory_len=memory_len)
+        logits, caches, _ = model.forward(params, batch, caches=caches)
+        return logits[:, -1:], caches
+
+    return prefill
+
+
+def extend_caches(model: Model, caches, prefill_len: int, S_max: int):
+    """Grow attention caches from prefill length to the decode budget.
+
+    * full-attention / MLA caches: zero-pad the sequence dim to S_max;
+    * sliding-window ring caches: re-slot so the entry at position p sits
+      at index p % W (prefill returned the last W entries densely) —
+      a roll by prefill_len % W;
+    * recurrent / cross caches: fixed-size, passed through.
+    Caches are stacked per scan segment: array layout (count, B, S, ...).
+    """
+
+    window = model.cfg.sliding_window
+
+    def grow(c):
+        if not isinstance(c, dict):
+            return c
+        out = dict(c)
+        if "pos" in c:  # ring cache (count, B, W, KV, dh) + pos (count, W)
+            W = c["k"].shape[2]
+            W2 = min(window, S_max) if window else W
+            if W2 > W:
+                # grow the ring (prefill was shorter than the window):
+                # scatter entry with position p to slot p % W2
+                def reslot(k, v, pos):  # k/v (B,W,KV,dh), pos (W,)
+                    slots = jnp.where(pos >= 0, pos % W2, W2)  # W2 -> dropped
+                    zk = jnp.zeros(k.shape[:1] + (W2,) + k.shape[2:], k.dtype)
+                    zv = jnp.zeros_like(zk)
+                    zp = jnp.full((W2,), -1, jnp.int32)
+                    zk = zk.at[:, slots].set(k, mode="drop")
+                    zv = zv.at[:, slots].set(v, mode="drop")
+                    zp = zp.at[slots].set(pos, mode="drop")
+                    return zk, zv, zp
+
+                ks, vs, ps = jax.vmap(reslot)(c["k"], c["v"], c["pos"])
+                out["k"], out["v"], out["pos"] = ks, vs, ps
+            else:
+                shift = prefill_len % W
+                out["k"] = jnp.roll(c["k"], shift, axis=2)
+                out["v"] = jnp.roll(c["v"], shift, axis=2)
+                out["pos"] = jnp.roll(c["pos"], shift, axis=-1)
+        elif "k" in c:  # full-attention cache: pad seq dim (axis 2)
+            pad = S_max - c["k"].shape[2]
+            if pad > 0:
+                widths = [(0, 0)] * c["k"].ndim
+                widths[2] = (0, pad)
+                out["k"] = jnp.pad(c["k"], widths)
+                out["v"] = jnp.pad(c["v"], widths)
+        if "c_kv" in c:  # MLA compressed cache (count, B, S, r)
+            pad = S_max - c["c_kv"].shape[2]
+            if pad > 0:
+                out["c_kv"] = jnp.pad(c["c_kv"], [(0, 0), (0, 0), (0, pad), (0, 0)])
+                out["k_pe"] = jnp.pad(c["k_pe"], [(0, 0), (0, 0), (0, pad), (0, 0)])
+        return out
+
+    is_cache = lambda x: isinstance(x, dict) and (
+        "k" in x or "c_kv" in x or "conv" in x or "ck" in x
+    )
+    return jax.tree.map(grow, caches, is_leaf=is_cache)
+
+
+def sample_logits(logits, key, *, top_k: int = 0, temperature: float = 1.0,
+                  real_vocab: int | None = None):
+    """Top-k / temperature sampling over (B, 1, Vp) logits (pads masked)."""
+    lf = logits[:, 0].astype(jnp.float32)
+    if real_vocab is not None:
+        lf = jnp.where(jnp.arange(lf.shape[-1]) < real_vocab, lf, -1e30)
+    if temperature <= 0:
+        return jnp.argmax(lf, -1).astype(jnp.int32)[:, None]
+    lf = lf / temperature
+    if top_k:
+        v, idx = jax.lax.top_k(lf, top_k)
+        draw = jax.random.categorical(key, v)
+        tok = jnp.take_along_axis(idx, draw[:, None], axis=1)[:, 0]
+    else:
+        tok = jax.random.categorical(key, lf)
+    return tok.astype(jnp.int32)[:, None]
+
+
+def generate(model: Model, params, batch, n_new: int):
+    """Greedy batched generation (example / integration-test path)."""
+    prefill = make_prefill(model)
+    step = make_serve_step(model)
+    B, S = batch["tokens"].shape
+    logits, caches = prefill(params, batch)
+    caches = extend_caches(model, caches, S, S + n_new)
+    tok = jnp.argmax(logits[..., : model.cfg.vocab], axis=-1).astype(jnp.int32)
+    outs = [tok]
+    for i in range(n_new - 1):
+        logits, caches = step(params, caches, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[..., : model.cfg.vocab], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

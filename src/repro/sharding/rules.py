@@ -1,0 +1,251 @@
+"""Parameter / optimizer-state / batch / cache PartitionSpec rules.
+
+One function walks the params pytree by path and assigns a spec per leaf
+name (Megatron conventions: attention heads + MLP hidden + vocab on
+"model"; MoE experts on the expert axes; batch on (pod, data)).
+``mode="decode"`` switches MoE experts to tensor-parallel-over-d_expert
+(see moe.moe_forward_decode). Optimizer states mirror their parameter's
+spec, optionally ZeRO-1-sharded over "data" on the largest replicated dim.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.spec import Axes
+
+
+def _block_param_spec(name: str, parent: str, shape, cfg, axes: Axes, mode: str):
+    """Spec for one (stacked) block param; leading dim is the scan stack."""
+    m = axes.model
+    kv_ax = axes.kv_spec(cfg.n_kv_heads)
+    n = name
+    pa = parent
+
+    if pa == "moe":
+        if n == "router":
+            return P(None, None, None)
+        if mode == "decode":
+            if cfg.decode_moe_ep and axes.expert == ("data", "model"):
+                # EP(data) x TP(model): experts over data, d_expert over model
+                return {"wi": P(None, "data", None, m), "wg": P(None, "data", None, m),
+                        "wo": P(None, "data", m, None)}[n]
+            # expert-TP only: shard d_expert (take-gather decode path)
+            return {"wi": P(None, None, None, m), "wg": P(None, None, None, m),
+                    "wo": P(None, None, m, None)}[n]
+        return P(None, axes.expert, None, None)
+
+    table = {
+        # attention (also cross-attn)
+        "wq": P(None, None, m),
+        "wk": P(None, None, kv_ax),
+        "wv": P(None, None, kv_ax),
+        "wo": P(None, m, None),
+        "bq": P(None, m),
+        "bk": P(None, kv_ax),
+        "bv": P(None, kv_ax),
+        "q_norm": P(None, None),
+        "k_norm": P(None, None),
+        "gate": P(None),
+        # MLA
+        "wq_a": P(None, None, None),
+        "q_ln": P(None, None),
+        "wq_b": P(None, None, m),
+        "wkv_a": P(None, None, None),
+        "kv_ln": P(None, None),
+        "wk_b": P(None, None, m),
+        "wv_b": P(None, None, m),
+        # mlp (wi/wg/wo shared with attn names handled above by parent)
+        "wi": P(None, None, m),
+        "wg": P(None, None, m),
+        "bi": P(None, m),
+        "bo": P(None, None),
+        # rg-lru
+        "wx": P(None, None, m),
+        "conv": P(None, None, m),
+        "wa": P(None, m, None, None),  # block-diagonal (stack, nb, bs, bs)
+        "lam": P(None, m),
+        # mamba
+        "in_proj": P(None, None, m),
+        "x_proj": P(None, m, None),
+        "dt_proj": P(None, None, m),
+        "dt_bias": P(None, m),
+        "A_log": P(None, m, None),
+        "D": P(None, m),
+        "out_proj": P(None, m, None),
+        # norms
+        "scale": P(None, None),
+        "bias": P(None, None),
+    }
+    if pa == "mix" and n == "wi":  # rg-lru input gate (block-diagonal)
+        return P(None, m, None, None) if len(shape) == 4 else table["wi"]
+    if n in table:
+        spec = table[n]
+        # guard: spec rank must match leaf rank
+        if len(spec) != len(shape):
+            return P(*([None] * len(shape)))
+        return spec
+    return P(*([None] * len(shape)))
+
+
+def param_specs(abstract_params, cfg, axes: Axes, mode: str = "train"):
+    """Pytree of PartitionSpec matching ``abstract_params``."""
+
+    def walk(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1]
+        parent = keys[-2] if len(keys) > 1 else ""
+        if keys[0] == "embed":
+            return P(axes.model, None)
+        if keys[0] == "lm_head":
+            return P(None, axes.model)
+        if keys[0] == "pos_embed":
+            return P(None, None)
+        if keys[0] == "final_norm" or (len(keys) > 1 and keys[-2] == "final_norm"):
+            return P(None)
+        if "segments" in keys:
+            return _block_param_spec(name, parent, leaf.shape, cfg, axes, mode)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_params)
+
+
+def _axes_used(spec: P):
+    used = set()
+    for d in spec:
+        if d is None:
+            continue
+        for a in d if isinstance(d, tuple) else (d,):
+            used.add(a)
+    return used
+
+
+def zero_shard(spec: P, shape, axes: Axes) -> P:
+    """ZeRO-1: additionally shard the largest replicated dim over "data"
+    (skipped when the spec already uses the data axis, e.g. 2-D EP)."""
+    if axes.mesh_shape is None or "data" not in axes.mesh_shape:
+        return spec
+    if "data" in _axes_used(spec):
+        return spec
+    dsize = axes.mesh_shape["data"]
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = -1, 0
+    for i, (d, s) in enumerate(zip(dims, shape)):
+        if d is None and s % dsize == 0 and s > best_size:
+            best, best_size = i, s
+    if best >= 0 and best_size >= dsize:
+        dims[best] = "data"
+    return P(*dims)
+
+
+def fit_batch_axes(B: int, axes: Axes) -> tuple:
+    """Largest prefix of the batch axes whose size product divides B —
+    small-batch decode shapes (long_500k: B=1) replicate instead."""
+    out = []
+    prod = 1
+    for a in axes.batch:
+        size = axes.mesh_shape[a] if axes.mesh_shape else 1
+        if B % (prod * size) == 0:
+            out.append(a)
+            prod *= size
+        else:
+            break
+    return tuple(out) if out else None
+
+
+def opt_state_specs(abstract_state, pspecs, cfg, axes: Axes, zero: bool = True):
+    """Optimizer-state specs: mirror the param spec (m/v) or derive the
+    factored shapes (adafactor vr/vc); optionally ZeRO-shard over data."""
+    flat_pspecs = {}
+
+    def record(path, spec):
+        flat_pspecs[tuple(str(p) for p in path)] = spec
+        return spec
+
+    jax.tree_util.tree_map_with_path(record, pspecs)
+
+    def walk(path, leaf):
+        keys = [str(p) for p in path]
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        # strip the leading state key ("m"/"v") to find the param path
+        for start in (1, 2):
+            cand = tuple(keys[start:])
+            if cand in flat_pspecs:
+                spec = flat_pspecs[cand]
+                break
+        else:
+            if name == "vr":  # factored: param spec minus last dim
+                cand = tuple(keys[1:-1]) + (keys[-1],)
+                pk = tuple(keys[1:-1])
+                base = _find_param_spec(flat_pspecs, keys)
+                spec = P(*list(base)[:-1]) if base is not None else P(*([None] * len(leaf.shape)))
+            elif name == "vc":  # param spec minus second-to-last dim
+                base = _find_param_spec(flat_pspecs, keys)
+                spec = (
+                    P(*(list(base)[:-2] + [base[-1]]))
+                    if base is not None
+                    else P(*([None] * len(leaf.shape)))
+                )
+            else:
+                spec = P(*([None] * len(leaf.shape)))
+        if len(spec) != len(leaf.shape):
+            spec = P(*(list(spec) + [None] * (len(leaf.shape) - len(spec)))[: len(leaf.shape)])
+        return zero_shard(spec, leaf.shape, axes) if zero else spec
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_state)
+
+
+def _find_param_spec(flat_pspecs, keys):
+    """For adafactor leaves .../<param>/vr — the param path is keys[1:-1]."""
+    cand = tuple(keys[1:-1])
+    return flat_pspecs.get(cand)
+
+
+def batch_specs(abstract_batch, axes: Axes, train: bool = True):
+    """tokens/labels (accum, B, S) or (B, S); frames/vision carry d_model."""
+
+    def walk(path, leaf):
+        nd = len(leaf.shape)
+        bdim = 1 if train else 0
+        ax = fit_batch_axes(leaf.shape[bdim], axes)
+        dims = [None] * nd
+        dims[bdim] = ax
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_batch)
+
+
+def cache_specs(abstract_caches, cfg, axes: Axes, seq_shard: bool = False):
+    """Decode caches: batch-shard dim 1 (dim 0 is the scan stack); shard KV
+    heads over model when divisible; recurrent widths over model. Batch
+    sharding degrades gracefully for small decode batches (long_500k).
+
+    ``seq_shard=True`` (the §Perf optimized variant): shard the cache
+    *sequence* dim over "model" instead of the KV heads — divides decode
+    HBM residency by the model-axis size for every arch (KV-head sharding
+    only helps when n_kv_heads >= model size); the decode softmax over the
+    sharded length lowers to tiny (B,H,1) LSE-combine collectives."""
+    kv_ax = axes.kv_spec(cfg.n_kv_heads)
+    m = axes.model
+    s_ax = m if seq_shard else None
+    kv_ax = None if seq_shard else kv_ax
+
+    def walk(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        nd = len(leaf.shape)
+        b = fit_batch_axes(leaf.shape[1], axes) if nd >= 2 else None
+        if name in ("k", "v", "ck", "cv"):  # (count,B,S,KV,dh)
+            sx = s_ax if leaf.shape[2] % axes.model_size == 0 else None
+            return P(None, b, sx, kv_ax if sx is None else None, None)
+        if name in ("c_kv", "k_pe"):  # (count,B,S,r)
+            sx = s_ax if leaf.shape[2] % axes.model_size == 0 else None
+            return P(None, b, sx, None)
+        if name == "pos":  # (count, W)
+            return P(None, None)
+        if name == "conv":  # (count,B,K,width)
+            return P(None, b, None, m)
+        if name == "h":  # rglru (count,B,w) / mamba (count,B,di,N)
+            return P(*([None, b, m] + [None] * (nd - 3)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_caches)

@@ -1,0 +1,23 @@
+"""Cross-entropy loss over the (sharding-padded) vocab."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, real_vocab: int, z_coef: float = 1e-4):
+    """logits: (B, S, Vp) any float dtype; labels: (B, S) int32 with -1 =
+    ignore. Padded vocab columns are masked. Returns (loss, metrics)."""
+    Vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    col_ok = jnp.arange(Vp) < real_vocab
+    lf = jnp.where(col_ok[None, None, :], lf, -1e30)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    zloss = z_coef * ((lse * mask) ** 2).sum() / denom
+    acc = ((lf.argmax(-1) == labels) * mask).sum() / denom
+    return loss + zloss, {"nll": loss, "zloss": zloss, "accuracy": acc}

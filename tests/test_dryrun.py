@@ -1,0 +1,36 @@
+"""Dry-run machinery smoke test: one real (arch x shape) cell lowered and
+compiled on the production 16x16 mesh in a subprocess (512 placeholder
+devices exist only there, per the isolation rule)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_cell_compiles_and_reports(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)  # dryrun sets its own
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "train_4k",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr[-3000:]
+    out = json.load(open(tmp_path / "whisper-base_train_4k_single.json"))
+    assert out["devices"] == 256
+    assert out["mesh"] == "16x16"
+    assert out["flops_per_device"] > 1e9
+    assert out["collective_bytes_per_device"] > 0
+    assert out["bytes_per_device_gb"] > 0
+
+
+def test_main_process_sees_one_device():
+    """The isolation rule itself: this pytest process must NOT have the
+    512 placeholder devices."""
+    import jax
+
+    assert len(jax.devices()) == 1

@@ -1,0 +1,88 @@
+"""Trip-count-aware HLO parser: the roofline analysis rests on this, so
+its loop accounting is tested against programs with known FLOP counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import aggregate, parse_module
+
+MM = 2 * 128 ** 3  # flops of one 128^3 matmul
+
+
+def _text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_multiplies_body():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jnp.ones((128, 128))
+    agg = aggregate(_text(f, x, x))
+    assert agg["dot_flops"] == 10 * MM
+
+
+def test_nested_scans_compose():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    x = jnp.ones((128, 128))
+    agg = aggregate(_text(f, x, x))
+    assert agg["dot_flops"] == 15 * MM
+
+
+def test_unrolled_matches():
+    def f(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x
+
+    x = jnp.ones((128, 128))
+    agg = aggregate(_text(f, x, x))
+    assert agg["dot_flops"] == 4 * MM
+
+
+def test_dot_k_from_symbol_table():
+    # non-square: (64x256) @ (256x32): 2*64*32*256 flops
+    def f(a, b):
+        return a @ b
+
+    a = jnp.ones((64, 256))
+    b = jnp.ones((256, 32))
+    agg = aggregate(_text(f, a, b))
+    assert agg["dot_flops"] == 2 * 64 * 32 * 256
+
+
+def test_traffic_counts_dot_operands():
+    def f(a, b):
+        return a @ b
+
+    a = jnp.ones((64, 256))
+    b = jnp.ones((256, 32))
+    agg = aggregate(_text(f, a, b))
+    expect = (64 * 256 + 256 * 32 + 64 * 32) * 4
+    assert agg["traffic"] >= expect
+    assert agg["traffic"] <= expect * 3  # fusion-ideal bound
+
+
+def test_parse_module_finds_computations():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    comps = parse_module(_text(f, jnp.ones((8,))))
+    trips = [c.max_const for c in comps.values() if c.max_const > 1]
+    assert 7 in trips

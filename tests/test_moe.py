@@ -1,0 +1,79 @@
+"""MoE sort-based dispatch: oracle equivalence, stability, capacity
+semantics, gradients, decode path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import moe as moe_lib
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0, dtype="float32")
+    p = moe_lib.init_moe(jax.random.key(1), cfg, None)
+    x = jax.random.normal(jax.random.key(2), (2, 32, cfg.d_model), jnp.float32)
+    return cfg, p, x
+
+
+def test_dispatch_matches_dense_oracle(setup):
+    cfg, p, x = setup
+    out_ref, aux_ref = moe_lib.moe_ref(x, p, cfg)
+    out, aux = moe_lib.moe_forward(x, p, cfg, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=2e-5, atol=2e-5)
+    assert float(aux) == pytest.approx(float(aux_ref))
+
+
+def test_dispatch_pallas_sort_path(setup):
+    cfg, p, x = setup
+    out_ref, _ = moe_lib.moe_ref(x, p, cfg)
+    out, _ = moe_lib.moe_forward(x, p, cfg, None, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_path_matches_oracle(setup):
+    cfg, p, x = setup
+    xd = x[:, :1]
+    out, _ = moe_lib.moe_forward_decode(xd, p, cfg, None)
+    out_ref, _ = moe_lib.moe_ref(xd, p, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=2e-5, atol=2e-5)
+
+
+def test_capacity_drops_are_bounded(setup):
+    """With a tight capacity factor outputs may drop tokens but never
+    blow up: dropped token contributions are exactly zero."""
+    cfg, p, x = setup
+    tight = dataclasses.replace(cfg, moe_capacity_factor=0.5)
+    out, _ = moe_lib.moe_forward(x, p, tight, None)
+    ref, _ = moe_lib.moe_ref(x, p, cfg)
+    # every output row is either ~the oracle or a partial (dropped) sum;
+    # norms must not exceed oracle norms by more than fp tolerance
+    n_out = np.linalg.norm(np.asarray(out), axis=-1)
+    n_ref = np.linalg.norm(np.asarray(ref), axis=-1)
+    assert (n_out <= n_ref * 1.5 + 1e-3).all()
+
+
+def test_grads_flow_through_dispatch(setup):
+    cfg, p, x = setup
+
+    def loss(p):
+        o, aux = moe_lib.moe_forward(x, p, cfg, None)
+        return (o ** 2).mean() + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    total = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0
+    # router must receive gradient (weights scale expert outputs)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_router_topk_weights_normalized(setup):
+    cfg, p, x = setup
+    w, ids, aux = moe_lib._router(x.reshape(-1, cfg.d_model), p["router"], cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(ids.max()) < cfg.n_experts
+    assert float(aux) >= 1.0 - 1e-3  # switch aux lower bound at balance

@@ -1,0 +1,74 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw as opt
+from repro.optim.compress import CHUNK, dequantize_int8, quantize_int8
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt.OptConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                        weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init_opt_state(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for i in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.apply_updates(params, g, state, jnp.int32(i), cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_converges_matrix():
+    cfg = opt.OptConfig(name="adafactor", peak_lr=0.1, warmup_steps=5,
+                        total_steps=300, weight_decay=0.0, factored_min_dim=4)
+    params = {"w": jax.random.normal(jax.random.key(0), (8, 8))}
+    state = opt.init_opt_state(params, cfg)
+    assert "vr" in jax.tree.leaves(state, is_leaf=lambda x: isinstance(x, dict) and "vr" in x)[0]
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for i in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.apply_updates(params, g, state, jnp.int32(i), cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored_small():
+    cfg = opt.OptConfig(name="adafactor", factored_min_dim=128)
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((16, 16))}
+    st = opt.init_opt_state(params, cfg)
+    assert st["v"]["big"]["vr"].shape == (256,)
+    assert st["v"]["big"]["vc"].shape == (512,)
+    assert st["v"]["small"]["v"].shape == (16, 16)
+
+
+def test_bf16_states_supported():
+    cfg = opt.OptConfig(state_dtype="bfloat16")
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    st = opt.init_opt_state(params, cfg)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+    total = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped))))
+    assert total == pytest.approx(1.0, rel=1e-4)
+
+
+def test_lr_schedule():
+    cfg = opt.OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(opt.lr_at(jnp.int32(0), cfg)) == 0.0
+    assert float(opt.lr_at(jnp.int32(10), cfg)) == pytest.approx(1.0)
+    assert float(opt.lr_at(jnp.int32(100), cfg)) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_int8_quantization_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(CHUNK * 64), jnp.float32)
+    q, s = quantize_int8(x)
+    y = dequantize_int8(q, s)
+    rms = float(jnp.sqrt(jnp.mean((x - y) ** 2)) / jnp.sqrt(jnp.mean(x ** 2)))
+    assert rms < 0.01  # ~0.4% typical for per-256-chunk int8

@@ -1,0 +1,67 @@
+"""End-to-end behaviour: the paper's claims as executable assertions, plus
+a small full-loop training run through the public launcher."""
+import dataclasses
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, SortLibrary, load_imbalance
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_paper_claim_balance_under_duplication():
+    """Paper Table II: right-skewed / exponential inputs (heavy
+    duplication) still land near-equal per-processor counts."""
+    rng = np.random.default_rng(0)
+    lib = SortLibrary(SortConfig(capacity_factor=1.5))
+    p, n = 10, 10000
+    for gen in (
+        lambda: (rng.uniform(0, 1, (p, n)) ** 6 * 40).astype(np.int32),  # right-skewed
+        lambda: np.floor(rng.exponential(1.0, (p, n)) * 5).astype(np.int32),
+    ):
+        r = lib.sort(jnp.asarray(gen()))
+        assert not bool(r.overflowed)
+        assert float(load_imbalance(r.counts)) < 1.02
+
+
+def test_paper_claim_order_across_processors():
+    """Paper Table III: proc i's max <= proc i+1's min."""
+    rng = np.random.default_rng(1)
+    lib = SortLibrary(SortConfig())
+    r = lib.sort(jnp.asarray(rng.normal(0, 10, (8, 8192)).astype(np.float32)))
+    for i in range(7):
+        hi = float(r.values[i][int(r.counts[i]) - 1])
+        lo = float(r.values[i + 1][0])
+        assert hi <= lo
+
+
+def test_sample_size_tradeoff_fig9():
+    """Paper Fig. 9: fewer samples -> worse balance. 4 samples/proc vs the
+    buffer-rule sample count."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray((rng.uniform(0, 1, (8, 8192)) ** 3).astype(np.float32))
+    small = SortLibrary(SortConfig(samples_per_shard=4, capacity_factor=8.0)).sort(x)
+    full = SortLibrary(SortConfig(capacity_factor=8.0)).sort(x)
+    assert float(load_imbalance(full.counts)) <= float(load_imbalance(small.counts))
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    """The real launcher: a few steps, checkpoint, resume (restart path)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-4b",
+            "--steps", "6", "--seq-len", "64", "--global-batch", "2",
+            "--ckpt-dir", str(tmp_path), "--save-every", "3",
+            "--log-every", "2"]
+    r = subprocess.run(base, capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    assert "done at step 6" in r.stdout
+    r2 = subprocess.run(base + ["--resume", "--steps", "2"], capture_output=True,
+                        text=True, env=env, timeout=900)
+    assert r2.returncode == 0, r2.stdout + r2.stderr[-2000:]
+    assert "resumed from step 6" in r2.stdout
