@@ -1,0 +1,94 @@
+"""Out-of-core vs in-core sort throughput (elements/s).
+
+The in-core path sorts the whole dataset as one (p, n) program — possible
+here because host RAM is generous, but representative of the best case
+the device-resident library can do. The external path is constrained to
+``chunk_elems`` per program and pays run generation + partition + merge;
+the gap between the two is the out-of-core overhead at 4x-16x
+over-capacity, plus a sort-service micro-batching probe.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SortConfig, sample_sort_sim
+from repro.stream import SortService, StreamConfig, sort_external
+
+
+CHUNK = 1 << 16
+PROCS = 8
+
+
+def _elems_per_s(n: int, seconds: float) -> float:
+    return n / max(seconds, 1e-9)
+
+
+def external_vs_incore():
+    """elements/s of sort_external vs the single-program sort at 4x, 8x
+    and 16x the per-chunk capacity."""
+    import jax
+    import jax.numpy as jnp
+
+    sort_cfg = SortConfig(use_pallas=False)
+    cfg = StreamConfig(chunk_elems=CHUNK, n_procs=PROCS, sort=sort_cfg)
+    rng = np.random.default_rng(0)
+
+    for mult in (4, 8, 16):
+        n = mult * CHUNK
+        x = rng.normal(0, 1, n).astype(np.float32)
+
+        # in-core: one device-resident program over the whole dataset
+        xd = jnp.asarray(x.reshape(PROCS, -1))
+        r = jax.block_until_ready(sample_sort_sim(xd, sort_cfg))  # compile
+        t0 = time.perf_counter()
+        r = jax.block_until_ready(sample_sort_sim(xd, sort_cfg))
+        t_in = time.perf_counter() - t0
+
+        # out-of-core: chunk-capacity programs + host staging. Warm up
+        # with the full dataset so the partition/merge programs (whose
+        # shapes depend on the bucket count) are compiled out of the
+        # timed region, not just the chunk-sort program.
+        sort_external(x, cfg)
+        t0 = time.perf_counter()
+        got = sort_external(x, cfg)
+        t_ext = time.perf_counter() - t0
+        assert np.array_equal(got, np.sort(x))
+
+        emit(f"external_sort_{mult}x_incore", t_in * 1e6,
+             f"elems_per_s={_elems_per_s(n, t_in):.0f}")
+        emit(f"external_sort_{mult}x_external", t_ext * 1e6,
+             f"elems_per_s={_elems_per_s(n, t_ext):.0f};"
+             f"vs_incore={t_ext / t_in:.2f}x")
+
+
+def service_batching():
+    """Sort-service micro-batching: 64 small same-shape requests as one
+    vmapped program vs 64 individual programs. Small requests are the
+    dispatch-bound serving regime where batching pays; big requests are
+    compute-bound and batch-neutral (the external_vs_incore numbers)."""
+    svc = SortService(config=SortConfig(use_pallas=False), n_procs=PROCS,
+                      max_batch=64)
+    rng = np.random.default_rng(1)
+    reqs = [rng.normal(0, 1, 512).astype(np.float32) for _ in range(64)]
+
+    svc.sort_many(reqs)  # compile the batched program
+    svc.sort(reqs[0])  # compile the batch-1 program for the serial loop
+    t0 = time.perf_counter()
+    svc.sort_many(reqs)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        svc.sort(r)
+    t_serial = time.perf_counter() - t0
+
+    n = sum(r.size for r in reqs)
+    emit("sort_service_batched", t_batched * 1e6,
+         f"elems_per_s={_elems_per_s(n, t_batched):.0f};"
+         f"programs={svc.stats['programs']}")
+    emit("sort_service_serial", t_serial * 1e6,
+         f"elems_per_s={_elems_per_s(n, t_serial):.0f};"
+         f"speedup={t_serial / t_batched:.2f}x")

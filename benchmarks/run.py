@@ -1,7 +1,7 @@
 """Benchmark harness: one function per paper table/figure + beyond-paper
 studies. Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--suite paper|external|all] [--only fig5,...]
 """
 import argparse
 import sys
@@ -11,22 +11,35 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--suite", default="paper",
+                    choices=("paper", "external", "all"),
+                    help="paper = in-core tables/figures; external = "
+                         "out-of-core + sort-service benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import ours, paper_figs
+    from benchmarks import external_sort, ours, paper_figs
 
-    table = {
-        "fig5": paper_figs.fig5_distributions,
-        "fig6": paper_figs.fig6_scaling,
-        "fig7": paper_figs.fig7_step_breakdown,
-        "table2": paper_figs.table2_balance,
-        "fig9": paper_figs.fig9_10_11_sample_size,
-        "fig12": paper_figs.fig12_memory,
-        "moe": ours.moe_dispatch,
-        "investigator": ours.investigator_ablation,
-        "sort_colls": ours.sort_collective_schedule,
-        "kernels": ours.kernel_paths,
+    suites = {
+        "paper": {
+            "fig5": paper_figs.fig5_distributions,
+            "fig6": paper_figs.fig6_scaling,
+            "fig7": paper_figs.fig7_step_breakdown,
+            "table2": paper_figs.table2_balance,
+            "fig9": paper_figs.fig9_10_11_sample_size,
+            "fig12": paper_figs.fig12_memory,
+            "moe": ours.moe_dispatch,
+            "investigator": ours.investigator_ablation,
+            "sort_colls": ours.sort_collective_schedule,
+            "kernels": ours.kernel_paths,
+        },
+        "external": {
+            "external_sort": external_sort.external_vs_incore,
+            "sort_service": external_sort.service_batching,
+        },
     }
+    table = {}
+    for name in suites if args.suite == "all" else (args.suite,):
+        table.update(suites[name])
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
     failed = []

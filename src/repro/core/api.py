@@ -78,6 +78,43 @@ class SortLibrary:
     def searchsorted(self, result: sim.SortResult, queries: jnp.ndarray):
         return topk.searchsorted_in_result(result.values, result.counts, queries)
 
+    # ---- out-of-core paths (repro.stream) ----
+    def sort_external(self, data, *, chunk_elems: int = 1 << 16, n_procs: int = 8):
+        """Sort a host-side dataset larger than one device program: run
+        generation -> splitter-driven range partition -> streaming merge.
+        ``data`` is a flat numpy array or an iterator of arrays; returns
+        the sorted numpy array (exactly np.sort-equal)."""
+        from repro.stream import StreamConfig, sort_external
+
+        return sort_external(
+            data,
+            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
+            investigator=self.investigator,
+        )
+
+    def sort_external_kv(self, keys, values, *, chunk_elems: int = 1 << 16,
+                         n_procs: int = 8):
+        """Out-of-core key/value sort; the payload (e.g. provenance from
+        ``encode_provenance``) rides every pass."""
+        from repro.stream import StreamConfig, sort_external_kv
+
+        return sort_external_kv(
+            keys, values,
+            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
+            investigator=self.investigator,
+        )
+
+    def sort_stream(self, data, *, chunk_elems: int = 1 << 16, n_procs: int = 8):
+        """Like ``sort_external`` but yields sorted chunks in bounded
+        memory — the dataset is never host-materialized at once."""
+        from repro.stream import StreamConfig, sort_stream
+
+        return sort_stream(
+            data,
+            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
+            investigator=self.investigator,
+        )
+
     # ---- real-mesh paths ----
     def distributed_sort(self, x, mesh, axis_name="data"):
         return sample_sort.distributed_sort(

@@ -29,6 +29,7 @@ from repro.core import splitters as spl
 from repro.core.local_sort import local_sort, local_sort_kv
 from repro.core.sim import _gather_buckets, _gather_buckets_kv
 from repro.kernels import ops as kops
+from repro.sharding.spec import axis_size_compat, shard_map_compat
 
 
 class ShardSortResult(NamedTuple):
@@ -48,13 +49,7 @@ class ShardSortKVResult(NamedTuple):
     send_counts: jnp.ndarray
 
 
-def _axis_size(axis_name) -> jnp.ndarray:
-    if isinstance(axis_name, (tuple, list)):
-        s = 1
-        for a in axis_name:
-            s *= jax.lax.axis_size(a)
-        return s
-    return jax.lax.axis_size(axis_name)
+_axis_size = axis_size_compat
 
 
 def sample_sort_shard(
@@ -171,12 +166,11 @@ def distributed_sort(
             r.values[None], r.count[None], r.overflowed[None], r.send_counts[None]
         )
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         wrapped,
         mesh=mesh,
         in_specs=P(axes),
         out_specs=ShardSortResult(P(axes), P(axes), P(axes), P(axes)),
-        check_vma=False,  # pallas_call bodies don't carry vma metadata
     )
     p = 1
     for a in axes:
@@ -206,12 +200,11 @@ def distributed_sort_kv(
             r.send_counts[None],
         )
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         wrapped,
         mesh=mesh,
         in_specs=(P(axes), P(axes)),
         out_specs=ShardSortKVResult(P(axes), P(axes), P(axes), P(axes), P(axes)),
-        check_vma=False,  # pallas_call bodies don't carry vma metadata
     )
     p = 1
     for a in axes:

@@ -20,7 +20,6 @@ def topk_shard(x_local: jnp.ndarray, k: int, axis_name, largest: bool = True):
     """Global top-k inside shard_map: local top-k -> all_gather candidates ->
     replicated final selection. O(p*k) gathered bytes, no full sort."""
     v, i = local_topk(x_local, min(k, x_local.shape[0]), largest)
-    p = jax.lax.axis_size(axis_name) if not isinstance(axis_name, tuple) else None
     allv = jax.lax.all_gather(v, axis_name, tiled=True)
     alli = jax.lax.all_gather(i, axis_name, tiled=True)
     fv, pos = jax.lax.top_k(allv if largest else -allv, k)

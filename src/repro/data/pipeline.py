@@ -4,6 +4,8 @@ The paper's sort is used here as a data-layer primitive (DESIGN.md §3):
 documents are bucketed by length with the distributed sample sort
 (virtual-processor form) before packing, which minimizes padding waste —
 the classic production use of a distributed sort in an LM data pipeline.
+Rounds beyond the device-program capacity route through the out-of-core
+``repro.stream`` sort (``bucket_by_length_external``).
 
 Everything is deterministic in (seed, host_id) so multi-host loaders
 produce disjoint, reproducible shards; on restart the loader fast-forwards
@@ -31,6 +33,10 @@ class DataConfig:
     mean_doc_len: float = 350.0
     bucket_docs: int = 4096  # docs per bucketing round
     bucket_procs: int = 8  # virtual processors for the length sort
+    # rounds larger than this go through the out-of-core path
+    # (repro.stream): corpus-scale bucketing no longer needs the whole
+    # length array in one device program
+    bucket_external_docs: int = 1 << 16
 
 
 def _zipf_tokens(rng, n, vocab, a):
@@ -56,17 +62,56 @@ class SyntheticCorpus:
             yield _zipf_tokens(self.rng, int(L), self.cfg.vocab, self.cfg.zipf_a)
 
 
-def bucket_by_length(doc_lens: np.ndarray, n_procs: int, sort_cfg=SortConfig()):
+def bucket_by_length_external(
+    doc_lens: np.ndarray,
+    n_procs: int,
+    sort_cfg=SortConfig(),
+    *,
+    chunk_docs: int = 1 << 16,
+):
+    """Corpus-scale length bucketing through the out-of-core sort.
+
+    Same contract as ``bucket_by_length`` but the length array is streamed
+    through ``repro.stream`` (run generation -> range partition -> merge),
+    so one bucketing round can cover many times the device-program
+    capacity. Lengths stay heavily duplicated keys across every pass — the
+    investigator keeps both the per-chunk shards and the global range
+    buckets balanced."""
+    import dataclasses
+
+    from repro.stream import StreamConfig, sort_external_kv
+
+    n = len(doc_lens)
+    cfg = StreamConfig(
+        chunk_elems=chunk_docs,
+        n_procs=n_procs,
+        sort=dataclasses.replace(sort_cfg, capacity_factor=2.0),
+    )
+    _, ids = sort_external_kv(
+        doc_lens.astype(np.int32), np.arange(n, dtype=np.int32), cfg
+    )
+    return ids
+
+
+def bucket_by_length(
+    doc_lens: np.ndarray, n_procs: int, sort_cfg=SortConfig(), *,
+    external_threshold: int | None = None,
+):
     """Order document ids by length with the paper's distributed sort.
 
     Lengths are heavily duplicated keys (few distinct values) — the
     investigator keeps the virtual shards balanced. Returns the ids in
-    globally sorted (ascending length) order."""
+    globally sorted (ascending length) order. Rounds larger than
+    ``external_threshold`` docs route through the out-of-core sort."""
     import jax.numpy as jnp
 
     import dataclasses
 
     n = len(doc_lens)
+    if external_threshold is not None and n > external_threshold:
+        return bucket_by_length_external(
+            doc_lens, n_procs, sort_cfg, chunk_docs=external_threshold
+        )
     per = -(-n // n_procs)
     pad = per * n_procs - n
     keys = np.concatenate([doc_lens.astype(np.int32), np.full(pad, 2**30, np.int32)])
@@ -104,7 +149,9 @@ class PackedLoader:
         cfg = self.cfg
         docs = list(self.corpus.docs(cfg.bucket_docs))
         lens = np.array([len(d) for d in docs])
-        order = bucket_by_length(lens, cfg.bucket_procs)
+        order = bucket_by_length(
+            lens, cfg.bucket_procs, external_threshold=cfg.bucket_external_docs
+        )
         seqs = []
         cur = []
         cur_len = 0

@@ -32,7 +32,7 @@ from repro.models.model import Model, abstract_params
 from repro.optim import adamw as opt_lib
 from repro.serve.engine import make_prefill, make_serve_step
 from repro.sharding import rules
-from repro.sharding.spec import from_mesh
+from repro.sharding.spec import from_mesh, set_mesh_compat
 from repro.train.step import TrainConfig, make_train_step
 
 
@@ -127,7 +127,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
     pspecs = rules.param_specs(aparams, cfg, axes, mode="decode" if kind == "decode" else "train")
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         if kind == "train":
             tcfg = TrainConfig(
                 opt=opt_lib.OptConfig(
@@ -214,6 +214,8 @@ def analyze(compiled, mesh, cfg: ModelConfig, shape_name: str) -> dict:
 
     n_dev = mesh.devices.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         per_dev_bytes = getattr(mem, "temp_size_in_bytes", 0) + getattr(

@@ -48,6 +48,53 @@ _TRAFFIC_OUT = ("dynamic-slice", "dynamic-update-slice", "gather", "scatter",
                 "reduce", "sort", "reduce-window", "select-and-scatter")
 
 
+def _operand_span(rest: str) -> str | None:
+    """The operand list of ``op(...)`` with bracket-depth matching — a
+    plain ``\\(([^)]*)\\)`` regex truncates at the first ')' inside TPU
+    tiled layouts like ``f32[64,256]{1,0:T(8,128)}``."""
+    i = rest.find("(")
+    if i < 0:
+        return None
+    depth = 0
+    for j in range(i, len(rest)):
+        c = rest[j]
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+            if depth == 0:
+                return rest[i + 1 : j]
+    return rest[i + 1 :]
+
+
+def _split_operands(paren: str) -> list[tuple[str, str]]:
+    """Split an operand list at depth-0 commas -> (name, inline_type).
+
+    Optimized HLO spells operands with their full types —
+    ``dot(f32[64,256]{1,0} %Arg_0.1, f32[256,32]{1,0} %Arg_1.2)`` — so a
+    plain ``split(",")`` cuts inside ``[64,256]``; commas nested in
+    brackets/braces must not split."""
+    pieces, depth, start = [], 0, 0
+    for i, ch in enumerate(paren):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            pieces.append(paren[start:i])
+            start = i + 1
+    pieces.append(paren[start:])
+    out = []
+    for piece in pieces:
+        piece = piece.strip()
+        if not piece:
+            continue
+        name = piece.split(" ")[-1].lstrip("%")
+        inline = piece[: len(piece) - len(piece.split(" ")[-1])].strip()
+        out.append((name, inline))
+    return out
+
+
 def _shapes_bytes(type_str: str):
     """Total bytes + list of (dtype, dims) for a (possibly tuple) type."""
     total = 0
@@ -146,11 +193,12 @@ def parse_module(text: str) -> dict:
                     out_elems *= d
             k = 1
             mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
-            ops_m = re.search(r"\(([^)]*)\)", rest)
-            if mcd and ops_m:
-                lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
-                lhs_type = symtab.get(lhs_name, "")
-                _, lhs_dims = _shapes_bytes(lhs_type)
+            span = _operand_span(rest)
+            operands = _split_operands(span) if span is not None else []
+            # operand type: inline (optimized HLO) or symbol-table lookup
+            op_types = [inline or symtab.get(nm, "") for nm, inline in operands]
+            if mcd and op_types:
+                _, lhs_dims = _shapes_bytes(op_types[0])
                 if lhs_dims:
                     dims = lhs_dims[0][1]
                     for ci in mcd.group(1).split(","):
@@ -159,10 +207,9 @@ def parse_module(text: str) -> dict:
             cur.dot_flops += 2.0 * out_elems * k
             # MXU reads both operands + writes the output
             cur.traffic += out_bytes
-            if ops_m:
-                for nm in ops_m.group(1).split(","):
-                    b, _ = _shapes_bytes(symtab.get(nm.strip().lstrip("%"), ""))
-                    cur.traffic += b
+            for t in op_types:
+                b, _ = _shapes_bytes(t)
+                cur.traffic += b
         elif any(op.startswith(t) for t in _TRAFFIC_OUT):
             cur.traffic += 2.0 * out_bytes
 

@@ -1,0 +1,47 @@
+"""Out-of-core streaming sort built on the in-core PGX.D sample sort.
+
+Three passes, each bounded by one device-program's capacity, mapping the
+paper's six steps (§IV) from processors to *runs*:
+
+  pass 1  ``runs.py``            run generation: chunk the host dataset,
+                                 sort each chunk with the existing sample
+                                 sort (paper steps 1-6 per chunk),
+                                 double-buffering H2D transfers the way
+                                 PGX.D overlaps communication/compute;
+  pass 2  ``partition.py``       global range partitioning: buffer-sized
+                                 regular sampling of every run (step 2),
+                                 replicated splitter selection (step 3),
+                                 investigator boundaries per run (step 4)
+                                 — Table II balance across passes;
+  pass 3  ``external_merge.py``  the "exchange + merge" (steps 5-6) in
+                                 bucket-sized units: each range bucket's
+                                 per-run segments collapse through the
+                                 balanced pairwise merge tree, streamed
+                                 out as sorted chunks.
+
+``driver.py`` glues the passes into ``sort_external`` / ``sort_stream``
+(surfaced on ``SortLibrary``); ``service.py`` adds the micro-batching
+sort-service front end with a shape-bucketed compiled-program cache.
+"""
+from repro.stream.runs import Run, StreamConfig, generate_runs, iter_chunks
+from repro.stream.partition import (
+    Partition,
+    partition_runs,
+    select_stream_splitters,
+)
+from repro.stream.external_merge import (
+    external_merge,
+    external_merge_kv,
+    merge_segments,
+    merge_segments_kv,
+)
+from repro.stream.driver import sort_external, sort_external_kv, sort_stream
+from repro.stream.service import SortRequest, SortService, SortServiceError
+
+__all__ = [
+    "Run", "StreamConfig", "generate_runs", "iter_chunks",
+    "Partition", "partition_runs", "select_stream_splitters",
+    "external_merge", "external_merge_kv", "merge_segments", "merge_segments_kv",
+    "sort_external", "sort_external_kv", "sort_stream",
+    "SortRequest", "SortService", "SortServiceError",
+]

@@ -1,0 +1,85 @@
+"""End-to-end external sort drivers: runs -> partition -> merge.
+
+``sort_external`` materializes the sorted dataset (exactly np.sort-equal
+on the key stream); ``sort_stream`` yields sorted chunks in bounded
+memory for datasets that should never be host-materialized at once. Both
+accept arrays or chunk iterators, so the input need not fit in one
+allocation either.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from repro.stream.external_merge import external_merge, external_merge_kv
+from repro.stream.partition import Partition, partition_runs
+from repro.stream.runs import StreamConfig, generate_runs
+
+
+def _pipeline(
+    data, cfg: StreamConfig, values=None, *, investigator: bool = True
+) -> Partition | None:
+    """None = empty dataset (np.sort of empty is empty, so no error)."""
+    runs = generate_runs(data, cfg, values, investigator=investigator)
+    if not runs:
+        return None
+    return partition_runs(runs, cfg, investigator=investigator)
+
+
+def _empty_like(data) -> np.ndarray:
+    # array input keeps its dtype; an exhausted iterator never exposed one,
+    # so the empty result defaults to float64 (documented limitation)
+    return np.empty(0, data.dtype if isinstance(data, np.ndarray) else None)
+
+
+def sort_stream(
+    data: np.ndarray | Iterable[np.ndarray],
+    cfg: StreamConfig = StreamConfig(),
+    *,
+    investigator: bool = True,
+) -> Iterator[np.ndarray]:
+    """Out-of-core sort, streamed: yields ascending sorted chunks whose
+    concatenation equals np.sort(data). Peak device memory is O(chunk)."""
+    part = _pipeline(data, cfg, investigator=investigator)
+    if part is None:
+        return
+    out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
+    yield from external_merge(
+        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk
+    )
+
+
+def sort_external(
+    data: np.ndarray | Iterable[np.ndarray],
+    cfg: StreamConfig = StreamConfig(),
+    *,
+    investigator: bool = True,
+) -> np.ndarray:
+    """Out-of-core sort, materialized on host."""
+    chunks = list(sort_stream(data, cfg, investigator=investigator))
+    if not chunks:
+        return _empty_like(data)
+    return np.concatenate(chunks)
+
+
+def sort_external_kv(
+    keys: np.ndarray | Iterable[np.ndarray],
+    values: np.ndarray | Iterable[np.ndarray],
+    cfg: StreamConfig = StreamConfig(),
+    *,
+    investigator: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Out-of-core key/value sort (the payload — e.g. provenance indices —
+    rides every pass: run generation, partitioning and the final merge)."""
+    part = _pipeline(keys, cfg, values, investigator=investigator)
+    if part is None:
+        return _empty_like(keys), _empty_like(values)
+    out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
+    ks, vs = [], []
+    for mk, mv in external_merge_kv(
+        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk
+    ):
+        ks.append(mk)
+        vs.append(mv)
+    return np.concatenate(ks), np.concatenate(vs)

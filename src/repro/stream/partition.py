@@ -1,0 +1,130 @@
+"""Global range partitioning across runs — pass 2 of the external sort
+(paper steps 2-4 lifted from processors to runs).
+
+The in-core sort samples every *shard* and selects p-1 splitters; here we
+sample every *run* with the same buffer-sized regular sampling rule,
+select B-1 global splitters once (``splitters.select_splitters``), and
+compute each run's bucket boundaries with the *investigator*
+(``splitters.investigator_bounds``). Because the investigator pins every
+boundary to the run's ideal local rank inside tied key ranges, a
+90%-duplicate dataset still splits into near-equal range buckets — the
+paper's Table II property, preserved across sort passes.
+
+Buckets are ranges of the key space: bucket b holds every element in
+[splitter_{b-1}, splitter_b), already sorted within each contributing run
+segment, so pass 3 only has to k-way merge segments — no further
+splitting, and merge memory is bounded by the (balanced) bucket size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splitters as spl
+from repro.stream.runs import Run, StreamConfig
+
+# jitted once at module level: every run of a pass shares the same shape,
+# so the boundary search compiles once and replays
+_investigator_bounds = jax.jit(spl.investigator_bounds)
+_naive_bounds = jax.jit(spl.naive_bounds)
+
+
+@dataclasses.dataclass
+class Partition:
+    """Pass-2 output: B-1 global splitters plus, for every bucket, the
+    per-run sorted segments that land in it.
+
+    segments[b][r] is run r's (host, sorted) key slice for bucket b;
+    value_segments mirrors it for kv sorts (None otherwise).
+    """
+
+    splitters: np.ndarray
+    segments: list[list[np.ndarray]]
+    value_segments: list[list[np.ndarray]] | None
+    bucket_sizes: np.ndarray
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.segments)
+
+    def load_imbalance(self) -> float:
+        """max/mean bucket size — 1.0 is perfect (paper Table II)."""
+        if not self.bucket_sizes.size:
+            return 1.0
+        return float(self.bucket_sizes.max() / max(self.bucket_sizes.mean(), 1.0))
+
+
+def _run_samples(run: Run, s: int) -> np.ndarray:
+    """Buffer-sized regular sampling of one sorted run (host-side mirror
+    of ``splitters.regular_sample`` — same centered-stride estimator)."""
+    n = len(run)
+    s = max(1, min(s, n))
+    idx = ((2 * np.arange(s, dtype=np.int64) + 1) * n) // (2 * s)
+    return run.keys[idx]
+
+
+def select_stream_splitters(
+    runs: list[Run], n_buckets: int, sort_cfg: spl.SortConfig
+) -> np.ndarray:
+    """Sample every run, pool the samples, select B-1 global splitters.
+
+    The per-run sample count follows the paper's buffer rule with the run
+    count in place of p: total sample volume at selection stays bounded
+    by ``buffer_bytes`` no matter how many runs the dataset produced.
+    """
+    key_bytes = runs[0].keys.dtype.itemsize
+    n_local = max(len(r) for r in runs)
+    s = sort_cfg.num_samples(max(len(runs), 1), n_local, key_bytes=key_bytes)
+    pooled = np.concatenate([_run_samples(r, s) for r in runs])
+    out = spl.select_splitters(jnp.asarray(pooled), n_buckets)
+    return np.asarray(out)
+
+
+def partition_runs(
+    runs: list[Run],
+    cfg: StreamConfig = StreamConfig(),
+    *,
+    n_buckets: int | None = None,
+    investigator: bool = True,
+) -> Partition:
+    """Route every run's elements to global range buckets.
+
+    Only one run's boundary search touches the device at a time, so peak
+    device usage stays O(chunk), independent of dataset size.
+    """
+    if not runs:
+        return Partition(np.empty(0), [], None, np.empty(0, np.int64))
+    total = sum(len(r) for r in runs)
+    if n_buckets is None:
+        n_buckets = cfg.n_buckets or max(1, -(-total // cfg.chunk_elems))
+    if n_buckets == 1:
+        segs = [[r.keys for r in runs]]
+        vsegs = [[r.values for r in runs]] if runs[0].values is not None else None
+        return Partition(
+            np.empty(0, runs[0].keys.dtype), segs, vsegs,
+            np.array([total], np.int64),
+        )
+
+    splitters = select_stream_splitters(runs, n_buckets, cfg.sort)
+    bounds_fn = _investigator_bounds if investigator else _naive_bounds
+    dev_spl = jnp.asarray(splitters)
+
+    segments: list[list[np.ndarray]] = [[] for _ in range(n_buckets)]
+    value_segments: list[list[np.ndarray]] | None = (
+        [[] for _ in range(n_buckets)] if runs[0].values is not None else None
+    )
+    sizes = np.zeros(n_buckets, np.int64)
+    for run in runs:
+        bounds = np.asarray(bounds_fn(jnp.asarray(run.keys), dev_spl))
+        for b in range(n_buckets):
+            lo, hi = int(bounds[b]), int(bounds[b + 1])
+            if hi <= lo:
+                continue
+            segments[b].append(run.keys[lo:hi])
+            if value_segments is not None:
+                value_segments[b].append(run.values[lo:hi])
+            sizes[b] += hi - lo
+    return Partition(splitters, segments, value_segments, sizes)

@@ -1,0 +1,185 @@
+"""Run generation — pass 1 of the external sort (paper steps 1-2 at
+dataset scale).
+
+The in-core library sorts one (p, n_local) program per call; here the
+host-side dataset is cut into device-sized *chunks*, each chunk is sorted
+with the existing virtual-processor sample sort, and the sorted chunk is
+copied back out as a *run*. Two latency-hiding tricks mirror the paper's
+"let the process continue without waiting" philosophy:
+
+  * **double buffering** — the host->device transfer of chunk i+1 is
+    issued while the sort of chunk i is still executing (JAX dispatch is
+    asynchronous; ``jax.device_put`` of the next chunk overlaps with the
+    in-flight program exactly the way PGX.D overlaps communication with
+    computation), and the blocking device->host copy of chunk i happens
+    only after chunk i+1's transfer is on the wire;
+  * **one program for every chunk** — all chunks are sentinel-padded to
+    the same (n_procs, per) shape, so the whole pass reuses a single
+    compiled executable (the last partial chunk included).
+
+Overflow handling reuses ``sort_with_retry`` semantics: a chunk whose
+static buckets overflowed is re-sorted with a doubled capacity_factor
+(never silently dropped).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sim
+from repro.core.splitters import SortConfig
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the out-of-core pipeline.
+
+    chunk_elems: per-chunk element capacity — the "device-sized" unit. A
+      run never exceeds this, and pass-3 merge memory is bounded by
+      ~bucket size ~= chunk_elems (splitters balance buckets to it).
+    n_procs: virtual processors used for each in-core chunk sort.
+    sort: the in-core SortConfig (buffer rule, capacity, pallas path).
+    max_doublings: capacity_factor doublings before a chunk sort fails.
+    n_buckets: range buckets for pass 2; None = ceil(total/chunk_elems),
+      i.e. each bucket targets one device-sized merge.
+    out_chunk_elems: granularity of the sorted output stream; None =
+      chunk_elems.
+    """
+
+    chunk_elems: int = 1 << 16
+    n_procs: int = 8
+    sort: SortConfig = SortConfig()
+    max_doublings: int = 3
+    n_buckets: int | None = None
+    out_chunk_elems: int | None = None
+
+
+@dataclasses.dataclass
+class Run:
+    """One sorted, device-capacity-sized fragment of the dataset, resident
+    on host. ``values`` (same order as ``keys``) is None for key-only
+    sorts."""
+
+    keys: np.ndarray
+    values: np.ndarray | None = None
+
+    def __len__(self) -> int:
+        return int(self.keys.shape[0])
+
+
+def iter_chunks(
+    data: np.ndarray | Iterable[np.ndarray], chunk_elems: int
+) -> Iterator[np.ndarray]:
+    """Re-chunk an array or an iterator of arrays into <= chunk_elems
+    pieces (iterator pieces are split/coalesced as needed)."""
+    if isinstance(data, np.ndarray):
+        flat = data.reshape(-1)
+        for i in range(0, flat.shape[0], chunk_elems):
+            yield flat[i : i + chunk_elems]
+        return
+    buf: list[np.ndarray] = []
+    have = 0
+    for piece in data:
+        piece = np.asarray(piece).reshape(-1)
+        while piece.size:
+            take = min(piece.size, chunk_elems - have)
+            buf.append(piece[:take])
+            have += take
+            piece = piece[take:]
+            if have == chunk_elems:
+                yield np.concatenate(buf) if len(buf) > 1 else buf[0]
+                buf, have = [], 0
+    if have:
+        yield np.concatenate(buf) if len(buf) > 1 else buf[0]
+
+
+def _pad_chunk(chunk: np.ndarray, p: int, per: int, fill) -> np.ndarray:
+    buf = np.full(p * per, fill, chunk.dtype)
+    buf[: chunk.shape[0]] = chunk
+    return buf.reshape(p, per)
+
+
+def _unpad(values, counts, m: int) -> np.ndarray:
+    """Concatenate the valid per-processor prefixes and drop the sentinel
+    padding (pads sort to the global tail, so the first m slots are the
+    real data). One bulk device->host transfer, then numpy slicing — not
+    p tiny transfers (this sits in the SortService per-request path)."""
+    values = np.asarray(values)
+    counts = np.asarray(counts)
+    parts = [values[i, : int(counts[i])] for i in range(values.shape[0])]
+    return np.concatenate(parts)[:m]
+
+
+def generate_runs(
+    data: np.ndarray | Iterable[np.ndarray],
+    cfg: StreamConfig = StreamConfig(),
+    values: np.ndarray | Iterable[np.ndarray] | None = None,
+    *,
+    investigator: bool = True,
+) -> list[Run]:
+    """Pass 1: cut ``data`` into chunks, sort each in-core, return runs.
+
+    ``values`` (optional payload, e.g. provenance indices) must chunk
+    identically to ``data``.
+    """
+    p, per = cfg.n_procs, -(-cfg.chunk_elems // cfg.n_procs)
+    key_chunks = iter_chunks(data, p * per)
+    val_chunks = iter_chunks(values, p * per) if values is not None else None
+
+    runs: list[Run] = []
+    # in-flight state: (device inputs, dispatched result, sort cfg, m)
+    inflight = None
+
+    def dispatch(dev_k, dev_v, sort_cfg):
+        if dev_v is None:
+            return sim.sample_sort_sim(dev_k, sort_cfg, investigator=investigator)
+        return sim.sample_sort_sim_kv(dev_k, dev_v, sort_cfg, investigator=investigator)
+
+    def finalize(state) -> Run:
+        dev_k, dev_v, res, sort_cfg, m = state
+        # retry ladder — recompiles, but steady-state inputs converge to
+        # one program (same semantics as SortLibrary.sort_with_retry)
+        for _ in range(cfg.max_doublings):
+            if not bool(res.overflowed):
+                break
+            sort_cfg = dataclasses.replace(
+                sort_cfg, capacity_factor=sort_cfg.capacity_factor * 2
+            )
+            res = dispatch(dev_k, dev_v, sort_cfg)
+        if bool(res.overflowed):
+            raise RuntimeError(
+                f"run sort overflowed at capacity_factor={sort_cfg.capacity_factor}"
+            )
+        if dev_v is None:
+            return Run(_unpad(res.values, res.counts, m))
+        return Run(
+            _unpad(res.keys, res.counts, m), _unpad(res.values, res.counts, m)
+        )
+
+    for chunk in key_chunks:
+        m = int(chunk.shape[0])
+        kfill = np.asarray(kops.sentinel_for(jnp.dtype(chunk.dtype)))
+        # H2D of the NEXT chunk goes on the wire while the previous
+        # chunk's sort is still executing (async dispatch) — the
+        # double-buffer overlap.
+        dev_k = jax.device_put(_pad_chunk(chunk, p, per, kfill))
+        dev_v = None
+        if val_chunks is not None:
+            vchunk = next(val_chunks, None)
+            if vchunk is None or vchunk.shape[0] != m:
+                raise ValueError("values must chunk identically to keys")
+            vfill = np.asarray(kops.sentinel_for(jnp.dtype(vchunk.dtype)))
+            dev_v = jax.device_put(_pad_chunk(vchunk, p, per, vfill))
+        if inflight is not None:
+            runs.append(finalize(inflight))  # blocks on the *previous* sort
+        inflight = (dev_k, dev_v, dispatch(dev_k, dev_v, cfg.sort), cfg.sort, m)
+    if inflight is not None:
+        runs.append(finalize(inflight))
+    if val_chunks is not None and next(val_chunks, None) is not None:
+        raise ValueError("values must chunk identically to keys")
+    return runs

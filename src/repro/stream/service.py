@@ -1,0 +1,184 @@
+"""Sort-service front end: shape-bucketed program cache + micro-batching.
+
+The serving analogue of ``serve/batching.py`` for the sort library:
+concurrent sort requests of arbitrary length are padded up to power-of-two
+*shape buckets*, same-bucket requests are stacked and executed as ONE
+vmapped sample-sort program, and compiled executables are cached per
+(batch, shape, dtype, config) so a steady-state request mix runs with
+zero recompiles. Per-request overflow is detected from the vmapped
+overflow flags and retried individually with a doubled capacity_factor —
+``SortLibrary.sort_with_retry`` semantics, but paid only by the requests
+that actually overflowed, never by the whole batch. A request that still
+overflows after ``max_doublings`` fails alone: the rest of the flush
+completes first, and the ``SortServiceError`` raised at the end carries
+the completed results (``.results``) alongside the failures
+(``.errors``), so survivors are never lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sim
+from repro.core.splitters import SortConfig
+from repro.kernels import ops as kops
+from repro.kernels.ops import _next_pow2
+from repro.stream.runs import _pad_chunk, _unpad
+
+
+@dataclasses.dataclass
+class SortRequest:
+    rid: int
+    data: np.ndarray  # flat, any supported key dtype
+
+
+class SortServiceError(RuntimeError):
+    """Some requests failed terminally. ``results`` holds the flush's
+    completed sorts (rid -> array); ``errors`` the per-rid failures."""
+
+    def __init__(self, msg: str, results: dict, errors: dict):
+        super().__init__(msg)
+        self.results = results
+        self.errors = errors
+
+
+@dataclasses.dataclass
+class SortService:
+    """Micro-batching sort server over the virtual-processor sample sort.
+
+    max_batch: requests per vmapped program (batch is padded to a
+      power of two so batch sizes also shape-bucket).
+    """
+
+    config: SortConfig = SortConfig()
+    n_procs: int = 8
+    investigator: bool = True
+    max_doublings: int = 3
+    max_batch: int = 64
+
+    def __post_init__(self):
+        self._programs: dict = {}
+        self._queue: list[SortRequest] = []
+        self._next_rid = 0
+        self.stats = {"programs": 0, "hits": 0, "batches": 0, "retries": 0}
+
+    # ------------------------------------------------------ program cache
+    def _program(self, batch: int, per: int, dtype, cfg: SortConfig):
+        key = (batch, per, np.dtype(dtype).str, cfg, self.investigator)
+        fn = self._programs.get(key)
+        if fn is None:
+            body = functools.partial(
+                sim.sample_sort_sim, config=cfg, investigator=self.investigator
+            )
+            fn = jax.jit(jax.vmap(body))
+            self._programs[key] = fn
+            self.stats["programs"] += 1
+        else:
+            self.stats["hits"] += 1
+        return fn
+
+    def _bucket_elems(self, n: int) -> int:
+        """Pad target: next power of two, at least one element per proc."""
+        return _next_pow2(max(n, self.n_procs))
+
+    # ---------------------------------------------------------- batching
+    def submit(self, data: np.ndarray) -> int:
+        """Enqueue a sort request; returns its rid. ``flush`` executes the
+        queue in as few programs as the shape mix allows."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(SortRequest(rid, np.asarray(data).reshape(-1)))
+        return rid
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Run all queued requests, micro-batched by shape bucket.
+
+        Every request is executed even when one fails terminally: the
+        ``SortServiceError`` raised at the end carries the completed
+        results, so one hopeless request never destroys its batch-mates."""
+        groups: dict[tuple, list[SortRequest]] = {}
+        for req in self._queue:
+            k = (self._bucket_elems(req.data.shape[0]), req.data.dtype.str)
+            groups.setdefault(k, []).append(req)
+        self._queue = []
+        out: dict[int, np.ndarray] = {}
+        errors: dict[int, Exception] = {}
+        for (elems, _), reqs in groups.items():
+            for i in range(0, len(reqs), self.max_batch):
+                part = reqs[i : i + self.max_batch]
+                for req, res in zip(part, self._run_batch(part, elems, errors)):
+                    if res is not None:
+                        out[req.rid] = res
+        if errors:
+            rids = sorted(errors)
+            raise SortServiceError(
+                f"{len(errors)} sort request(s) failed terminally "
+                f"(rids {rids}): {errors[rids[0]]}",
+                out, errors,
+            )
+        return out
+
+    def sort_many(self, arrays: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Sort several independent arrays; same-shape-bucket arrays share
+        one vmapped program execution."""
+        rids = [self.submit(a) for a in arrays]
+        done = self.flush()
+        return [done[r] for r in rids]
+
+    def sort(self, x: np.ndarray) -> np.ndarray:
+        return self.sort_many([x])[0]
+
+    # ---------------------------------------------------------- execution
+    def _run_batch(
+        self, reqs: list[SortRequest], elems: int, errors: dict[int, Exception]
+    ) -> list[np.ndarray | None]:
+        p = self.n_procs
+        per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
+        dtype = reqs[0].data.dtype
+        fill = np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
+        b = _next_pow2(len(reqs))
+        batch = np.full((b, p, per), fill, dtype)
+        for i, req in enumerate(reqs):
+            batch[i] = _pad_chunk(req.data, p, per, fill)
+
+        fn = self._program(b, per, dtype, self.config)
+        res = fn(jnp.asarray(batch))
+        self.stats["batches"] += 1
+
+        overflowed = np.asarray(res.overflowed)
+        values = np.asarray(res.values)  # one D2H transfer for the batch
+        counts = np.asarray(res.counts)
+        out: list[np.ndarray | None] = []
+        for i, req in enumerate(reqs):
+            if overflowed[i]:
+                try:
+                    out.append(self._retry_one(req))
+                except RuntimeError as e:
+                    errors[req.rid] = e
+                    out.append(None)
+                continue
+            out.append(_unpad(values[i], counts[i], req.data.shape[0]))
+        return out
+
+    def _retry_one(self, req: SortRequest) -> np.ndarray:
+        """sort_with_retry semantics for a single overflowed request."""
+        cfg = self.config
+        elems = self._bucket_elems(req.data.shape[0])
+        p, per = self.n_procs, -(-elems // self.n_procs)
+        fill = np.asarray(kops.sentinel_for(jnp.dtype(req.data.dtype)))
+        x = jnp.asarray(_pad_chunk(req.data, p, per, fill))
+        for _ in range(self.max_doublings):
+            cfg = dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2)
+            self.stats["retries"] += 1
+            r = sim.sample_sort_sim(x, cfg, investigator=self.investigator)
+            if not bool(r.overflowed):
+                return _unpad(r.values, r.counts, req.data.shape[0])
+        raise RuntimeError(
+            f"sort request rid={req.rid} overflowed even at "
+            f"capacity_factor={cfg.capacity_factor}"
+        )

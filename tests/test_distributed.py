@@ -81,9 +81,10 @@ def test_distributed_moe_matches_oracle():
         p = moe_lib.init_moe(jax.random.key(1), cfg, None)
         x = jax.random.normal(jax.random.key(2), (4, 16, cfg.d_model), jnp.float32)
         out_ref, _ = moe_lib.moe_ref(x, p, cfg)
+        from repro.sharding.spec import set_mesh_compat
         for expert_2d in (False, True):
             axes = from_mesh(mesh, expert_2d=expert_2d)
-            with jax.set_mesh(mesh):
+            with set_mesh_compat(mesh):
                 out, aux = jax.jit(lambda x, p: moe_lib.moe_forward(x, p, cfg, axes))(x, p)
             np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
                                        rtol=2e-5, atol=2e-5)
@@ -127,7 +128,8 @@ def test_distributed_train_step_runs_and_matches_single():
         shard = lambda t, s: jax.tree.map(
             lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), t, s,
             is_leaf=lambda x: hasattr(x, "shape"))
-        with jax.set_mesh(mesh):
+        from repro.sharding.spec import set_mesh_compat
+        with set_mesh_compat(mesh):
             p1 = shard(params, pspecs)
             _, _, met1 = jax.jit(make_train_step(m1, tcfg))(p1, opt_state, jnp.int32(0), batch)
         l0, l1 = float(met0["loss"]), float(met1["loss"])
@@ -147,8 +149,9 @@ def test_compressed_psum_close_to_exact():
         N = CHUNK * 8 * 4
         rng = np.random.default_rng(1)
         x = rng.standard_normal((8, N)).astype(np.float32)
-        f = jax.shard_map(lambda v: compressed_psum_mean(v[0], "data")[None],
-                          mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+        from repro.sharding.spec import shard_map_compat
+        f = shard_map_compat(lambda v: compressed_psum_mean(v[0], "data")[None],
+                             mesh=mesh, in_specs=P("data"), out_specs=P("data"))
         got = np.asarray(f(jnp.asarray(x)))
         exact = x.mean(0)
         rel = np.abs(got - exact).max() / np.abs(exact).max()

@@ -6,9 +6,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_dryrun_cell_compiles_and_reports(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")

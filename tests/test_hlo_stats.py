@@ -76,6 +76,24 @@ def test_traffic_counts_dot_operands():
     assert agg["traffic"] <= expect * 3  # fusion-ideal bound
 
 
+def test_tpu_tiled_layout_operands():
+    """TPU-optimized HLO spells layouts with tiling — ')' inside
+    `{1,0:T(8,128)}` must not truncate the operand list (K and operand
+    traffic would silently fall back to 1 / 0 bytes)."""
+    text = """
+HloModule m, is_scheduled=true
+
+ENTRY %main.4 (a: f32[64,256], b: f32[256,32]) -> f32[64,32] {
+  %a = f32[64,256]{1,0:T(8,128)} parameter(0)
+  %b = f32[256,32]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.3 = f32[64,32]{1,0:T(8,128)} dot(f32[64,256]{1,0:T(8,128)} %a, f32[256,32]{1,0:T(8,128)} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    agg = aggregate(text)
+    assert agg["dot_flops"] == 2 * 64 * 32 * 256
+    assert agg["traffic"] == (64 * 256 + 256 * 32 + 64 * 32) * 4
+
+
 def test_parse_module_finds_computations():
     def f(x):
         def body(c, _):

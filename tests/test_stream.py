@@ -1,0 +1,237 @@
+"""Out-of-core streaming sort (repro.stream): exactness at >= 8x chunk
+capacity across distributions, kv provenance through the multi-pass
+pipeline, bucket balance under heavy duplication, and the sort-service
+front end."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import SortConfig, SortLibrary
+from repro.stream import (
+    SortService,
+    StreamConfig,
+    generate_runs,
+    iter_chunks,
+    partition_runs,
+    sort_external,
+    sort_external_kv,
+    sort_stream,
+)
+
+CHUNK = 1 << 12
+CFG = StreamConfig(chunk_elems=CHUNK, n_procs=4, sort=SortConfig(use_pallas=False))
+
+
+def _dataset(name: str, n: int, rng) -> np.ndarray:
+    if name == "uniform":
+        return rng.uniform(0, 1, n).astype(np.float32)
+    if name == "zipf":
+        # zipf-distributed integer keys: massive low-rank duplication
+        u = np.maximum(rng.random(n), 1e-12)
+        return np.minimum(u ** (-1.0 / 0.8), 2**20).astype(np.int32)
+    if name == "dup90":
+        # 90% of the mass on one key — the investigator's worst case
+        return np.where(
+            rng.random(n) < 0.9, np.float32(3.0), rng.normal(0, 1, n)
+        ).astype(np.float32)
+    raise KeyError(name)
+
+
+# ------------------------------------------------------------- exactness
+
+
+@pytest.mark.parametrize("dist", ["uniform", "zipf", "dup90"])
+def test_sort_external_exact_8x(dist):
+    """>= 8x over chunk capacity, output exactly np.sort-equal."""
+    rng = np.random.default_rng(0)
+    x = _dataset(dist, 8 * CHUNK, rng)
+    got = sort_external(x, CFG)
+    assert got.dtype == x.dtype
+    assert np.array_equal(got, np.sort(x))
+
+
+def test_sort_external_non_multiple_length():
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, 8 * CHUNK + 777).astype(np.float32)
+    assert np.array_equal(sort_external(x, CFG), np.sort(x))
+
+
+def test_sort_stream_chunks_bounded_and_ordered():
+    rng = np.random.default_rng(2)
+    x = _dataset("zipf", 8 * CHUNK, rng)
+    out_chunk = CHUNK // 2
+    cfg = dataclasses.replace(CFG, out_chunk_elems=out_chunk)
+    chunks = list(sort_stream(x, cfg))
+    assert all(c.shape[0] <= out_chunk for c in chunks)
+    assert np.array_equal(np.concatenate(chunks), np.sort(x))
+
+
+def test_iterator_input():
+    """The input never has to exist as one array."""
+    rng = np.random.default_rng(3)
+    pieces = [rng.uniform(0, 1, 1000).astype(np.float32) for _ in range(40)]
+    got = sort_external(iter(pieces), CFG)
+    assert np.array_equal(got, np.sort(np.concatenate(pieces)))
+
+
+def test_iter_chunks_rechunks_iterators():
+    pieces = [np.arange(i, dtype=np.int32) for i in (3, 700, 1, 600)]
+    chunks = list(iter_chunks(iter(pieces), 512))
+    assert all(c.shape[0] <= 512 for c in chunks)
+    assert np.array_equal(np.concatenate(chunks), np.concatenate(pieces))
+
+
+def test_empty_dataset_is_empty_not_error():
+    """np.sort of empty is empty — so is ours, dtype preserved."""
+    out = sort_external(np.empty(0, np.int32), CFG)
+    assert out.shape == (0,) and out.dtype == np.int32
+    assert list(sort_stream(np.empty(0, np.float32), CFG)) == []
+    part = partition_runs([], CFG)
+    assert part.n_buckets == 0 and part.load_imbalance() == 1.0
+
+
+def test_mismatched_values_rejected():
+    """Short AND surplus value streams both raise the diagnostic error
+    (surplus used to be silently dropped)."""
+    k = np.arange(2048, dtype=np.int32)
+    with pytest.raises(ValueError, match="chunk identically"):
+        sort_external_kv(k, np.arange(1024, dtype=np.int32), CFG)
+    with pytest.raises(ValueError, match="chunk identically"):
+        sort_external_kv(k, np.arange(3072, dtype=np.int32), CFG)
+
+
+# ----------------------------------------------------------- provenance
+
+
+def test_kv_provenance_roundtrip_multipass():
+    """Provenance payload survives run generation, partitioning and the
+    final merge: every output element points back to an input slot that
+    holds exactly its key, and no index is lost or duplicated."""
+    rng = np.random.default_rng(4)
+    k = _dataset("zipf", 8 * CHUNK, rng)
+    v = np.arange(k.size, dtype=np.int32)
+    mk, mv = sort_external_kv(k, v, CFG)
+    assert np.array_equal(mk, np.sort(k))
+    assert np.array_equal(np.sort(mv), v)  # a permutation — nothing dropped
+    assert np.array_equal(k[mv], mk)  # round-trip: origin slot holds the key
+
+
+def test_api_facade_external_paths():
+    lib = SortLibrary(SortConfig(use_pallas=False))
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, 8 * 4096).astype(np.float32)
+    assert np.array_equal(lib.sort_external(x, chunk_elems=4096), np.sort(x))
+    k = rng.integers(0, 9, 4 * 4096).astype(np.int32)
+    mk, mv = lib.sort_external_kv(k, np.arange(k.size, dtype=np.int32),
+                                  chunk_elems=4096)
+    assert np.array_equal(k[mv], mk)
+    chunks = list(lib.sort_stream(x, chunk_elems=4096))
+    assert np.array_equal(np.concatenate(chunks), np.sort(x))
+
+
+# -------------------------------------------------------------- balance
+
+
+def test_range_buckets_balanced_under_90pct_duplication():
+    """Table II across passes: realized bucket imbalance <= 1.05 on a
+    90%-duplicate input (acceptance criterion)."""
+    rng = np.random.default_rng(6)
+    x = _dataset("dup90", 8 * CHUNK, rng)
+    part = partition_runs(generate_runs(x, CFG), CFG)
+    assert part.n_buckets >= 8
+    assert part.load_imbalance() <= 1.05
+
+
+def test_naive_partition_is_the_pathology():
+    """Without the investigator the duplicated key floods one bucket —
+    the Fig. 3b failure mode the balanced path is measured against."""
+    rng = np.random.default_rng(7)
+    x = _dataset("dup90", 8 * CHUNK, rng)
+    runs = generate_runs(x, CFG)
+    balanced = partition_runs(runs, CFG, investigator=True)
+    naive = partition_runs(runs, CFG, investigator=False)
+    assert naive.load_imbalance() > 2.0 * balanced.load_imbalance()
+
+
+# -------------------------------------------------------------- service
+
+
+def test_service_exact_and_batched():
+    svc = SortService(config=SortConfig(use_pallas=False), n_procs=4)
+    rng = np.random.default_rng(8)
+    arrs = [rng.normal(0, 1, 512).astype(np.float32) for _ in range(8)]
+    outs = svc.sort_many(arrs)
+    for a, o in zip(arrs, outs):
+        assert np.array_equal(o, np.sort(a))
+    # 8 same-shape requests ride ONE vmapped program launch
+    assert svc.stats["batches"] == 1
+    assert svc.stats["programs"] == 1
+
+
+def test_service_program_cache_reuse():
+    svc = SortService(config=SortConfig(use_pallas=False), n_procs=4)
+    rng = np.random.default_rng(9)
+    svc.sort_many([rng.normal(0, 1, 512).astype(np.float32) for _ in range(4)])
+    svc.sort_many([rng.normal(0, 1, 512).astype(np.float32) for _ in range(4)])
+    assert svc.stats["programs"] == 1  # steady state: zero recompiles
+    assert svc.stats["hits"] >= 1
+
+
+def test_service_non_pow2_procs():
+    """Row capacity is ceil-divided, so any processor count works."""
+    rng = np.random.default_rng(12)
+    for p in (3, 6, 7):
+        svc = SortService(config=SortConfig(use_pallas=False), n_procs=p)
+        x = rng.normal(0, 1, 1000).astype(np.float32)
+        assert np.array_equal(svc.sort(x), np.sort(x))
+
+
+def test_service_terminal_failure_is_isolated():
+    """A request that overflows past max_doublings raises — after the
+    whole flush completed, with survivors retrievable on the error."""
+    from repro.stream import SortServiceError
+
+    svc = SortService(
+        config=SortConfig(use_pallas=False, capacity_factor=0.001),
+        n_procs=4, max_doublings=1,
+    )
+    rng = np.random.default_rng(13)
+    big = rng.normal(0, 1, 4096).astype(np.float32)  # overflows terminally
+    tiny = rng.normal(0, 1, 16).astype(np.float32)  # +32 cap floor: succeeds
+    rid_big, rid_tiny = svc.submit(big), svc.submit(tiny)
+    with pytest.raises(SortServiceError, match="failed terminally") as ei:
+        svc.flush()
+    assert rid_big in ei.value.errors
+    assert np.array_equal(ei.value.results[rid_tiny], np.sort(tiny))
+
+
+def test_service_mixed_shapes_and_dtypes():
+    svc = SortService(config=SortConfig(use_pallas=False), n_procs=4)
+    rng = np.random.default_rng(10)
+    arrs = [
+        rng.normal(0, 1, 300).astype(np.float32),
+        rng.integers(0, 100, 2000).astype(np.int32),
+        rng.normal(0, 1, 300).astype(np.float32),
+        rng.integers(0, 5, 77).astype(np.int32),
+    ]
+    outs = svc.sort_many(arrs)
+    for a, o in zip(arrs, outs):
+        assert o.dtype == a.dtype
+        assert np.array_equal(o, np.sort(a))
+
+
+def test_service_overflow_retries_per_request():
+    """A capacity-starved config overflows; the service retries only the
+    overflowed requests (sort_with_retry semantics) and still returns the
+    exact sort."""
+    svc = SortService(
+        config=SortConfig(use_pallas=False, capacity_factor=0.02),
+        n_procs=4, max_doublings=8,
+    )
+    rng = np.random.default_rng(11)
+    arrs = [rng.normal(0, 1, 4096).astype(np.float32) for _ in range(3)]
+    outs = svc.sort_many(arrs)
+    for a, o in zip(arrs, outs):
+        assert np.array_equal(o, np.sort(a))
+    assert svc.stats["retries"] >= 1

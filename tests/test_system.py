@@ -1,9 +1,11 @@
 """End-to-end behaviour: the paper's claims as executable assertions, plus
 a small full-loop training run through the public launcher."""
 import dataclasses
+import os
 import subprocess
 import sys
-import os
+
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +52,7 @@ def test_sample_size_tradeoff_fig9():
     assert float(load_imbalance(full.counts)) <= float(load_imbalance(small.counts))
 
 
+@pytest.mark.slow
 def test_train_launcher_end_to_end(tmp_path):
     """The real launcher: a few steps, checkpoint, resume (restart path)."""
     env = dict(os.environ)
