@@ -1,0 +1,86 @@
+"""Unified-API benchmarks: planner dispatch overhead + backend matrix.
+
+``planner_overhead`` is the acceptance gate of the front-end redesign:
+``repro.sort`` (plan -> dispatch -> SortOutput) must cost <5% over
+calling the backend directly. ``api_matrix`` records wall time and
+achieved balance of planner-dispatched sorts per backend/size/dtype for
+the cross-PR JSON trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+import repro
+from repro.core import sample_sort_sim
+
+CFG = repro.SortConfig(use_pallas=False)
+
+
+def _best_us(fn, *args, warmup=2, iters=7):
+    """Min wall time (us): the contention-robust estimator — the gate
+    below must not flake when CI neighbors steal CPU mid-run."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    return min(_timed(fn, args) for _ in range(iters)) * 1e6
+
+
+def _timed(fn, args):
+    import time
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def planner_overhead():
+    """repro.sort (planner dispatch) vs direct sample_sort_sim on the same
+    device-resident (p, n) input — both sides block on the sorted values,
+    so the delta is pure front-end cost (plan + SortOutput wrapping)."""
+    rng = np.random.default_rng(0)
+    p, n = 8, 1 << 16
+    x = jnp.asarray(rng.normal(0, 1, (p, n)).astype(np.float32))
+
+    us_direct = _best_us(lambda v: sample_sort_sim(v, CFG).values, x)
+    us_via = _best_us(
+        lambda v: repro.sort(v, where="sim", config=CFG).raw.values, x
+    )
+    overhead = us_via / us_direct - 1.0
+    emit("api_dispatch_direct", us_direct, backend="sim", size=p * n,
+         dtype="float32")
+    emit("api_dispatch_planner", us_via,
+         f"overhead_pct={100 * overhead:.2f}", backend="sim", size=p * n,
+         dtype="float32", overhead_pct=round(100 * overhead, 2))
+    assert overhead < 0.05, (
+        f"planner dispatch overhead {100 * overhead:.2f}% >= 5%"
+    )
+
+
+def api_matrix():
+    """Planner-dispatched repro.sort across backends / sizes / dtypes,
+    recording wall time and achieved balance."""
+    rng = np.random.default_rng(1)
+    cases = [
+        ("sim", 1 << 18, np.float32),
+        ("sim", 1 << 18, np.int32),
+        ("stream", 1 << 18, np.float32),
+    ]
+    limits = repro.SortLimits(chunk_elems=1 << 15, n_procs=8)
+    for backend, size, dtype in cases:
+        if np.issubdtype(dtype, np.floating):
+            x = rng.normal(0, 1, size).astype(dtype)
+        else:
+            x = rng.integers(0, 50, size).astype(dtype)  # duplicate-heavy
+        out = repro.sort(x, where=backend, limits=limits, config=CFG)
+        _ = out.keys  # warm compile + materialize; counts reused below
+        def run():
+            o = repro.sort(x, where=backend, limits=limits, config=CFG)
+            return jax.block_until_ready(np.asarray(o.keys))
+        us = timeit(run)
+        balance = round(out.imbalance(), 4) if out.counts is not None else None
+        emit(f"api_sort_{backend}_{np.dtype(dtype).name}_{size}", us,
+             f"elems_per_s={size / (us / 1e6):.0f}",
+             backend=backend, size=size, dtype=np.dtype(dtype).name,
+             balance=balance)

@@ -47,5 +47,25 @@ def distribution(name: str, rng, p: int, n: int, dtype=np.float32):
 DISTRIBUTIONS = ("uniform", "normal", "right_skewed", "exponential")
 
 
-def emit(name: str, us: float, derived: str):
+_RECORDS: list[dict] = []
+
+
+def emit(name: str, us: float, derived: str = "", *, size=None, dtype=None,
+         backend=None, balance=None, **extra):
+    """Print the CSV line AND append a machine-readable record; ``run.py``
+    drains the records into BENCH_<suite>.json so the perf trajectory is
+    tracked across PRs."""
     print(f"{name},{us:.1f},{derived}")
+    rec = {"op": name, "us_per_call": round(float(us), 2), "derived": derived}
+    for k, v in (("size", size), ("dtype", dtype), ("backend", backend),
+                 ("balance", balance)):
+        if v is not None:
+            rec[k] = v
+    rec.update(extra)
+    _RECORDS.append(rec)
+
+
+def drain_records() -> list[dict]:
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

@@ -15,7 +15,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import SortConfig, sample_sort_sim
-from repro.stream import SortService, StreamConfig, sort_external
+from repro.stream import SortService
 
 
 CHUNK = 1 << 16
@@ -33,7 +33,6 @@ def external_vs_incore():
     import jax.numpy as jnp
 
     sort_cfg = SortConfig(use_pallas=False)
-    cfg = StreamConfig(chunk_elems=CHUNK, n_procs=PROCS, sort=sort_cfg)
     rng = np.random.default_rng(0)
 
     for mult in (4, 8, 16):
@@ -47,21 +46,26 @@ def external_vs_incore():
         r = jax.block_until_ready(sample_sort_sim(xd, sort_cfg))
         t_in = time.perf_counter() - t0
 
-        # out-of-core: chunk-capacity programs + host staging. Warm up
-        # with the full dataset so the partition/merge programs (whose
-        # shapes depend on the bucket count) are compiled out of the
-        # timed region, not just the chunk-sort program.
-        sort_external(x, cfg)
+        # out-of-core through the unified front end (stream backend).
+        # Warm up with the full dataset so the partition/merge programs
+        # (whose shapes depend on the bucket count) are compiled out of
+        # the timed region, not just the chunk-sort program.
+        import repro
+
+        limits = repro.SortLimits(chunk_elems=CHUNK, n_procs=PROCS)
+        _ = repro.sort(x, where="stream", limits=limits, config=sort_cfg).keys
         t0 = time.perf_counter()
-        got = sort_external(x, cfg)
+        got = repro.sort(x, where="stream", limits=limits, config=sort_cfg).keys
         t_ext = time.perf_counter() - t0
         assert np.array_equal(got, np.sort(x))
 
         emit(f"external_sort_{mult}x_incore", t_in * 1e6,
-             f"elems_per_s={_elems_per_s(n, t_in):.0f}")
+             f"elems_per_s={_elems_per_s(n, t_in):.0f}",
+             backend="sim", size=n, dtype="float32")
         emit(f"external_sort_{mult}x_external", t_ext * 1e6,
              f"elems_per_s={_elems_per_s(n, t_ext):.0f};"
-             f"vs_incore={t_ext / t_in:.2f}x")
+             f"vs_incore={t_ext / t_in:.2f}x",
+             backend="stream", size=n, dtype="float32")
 
 
 def service_batching():

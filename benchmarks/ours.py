@@ -9,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.configs.registry import smoke_config
-from repro.core import SortConfig, load_imbalance, sample_sort_sim
+from repro.core import SortConfig
 from repro.kernels import ops as kops
 from repro.models import moe as moe_lib
 
@@ -35,17 +35,25 @@ def moe_dispatch():
 
 def investigator_ablation():
     """Load balance + exchanged data: investigator ON vs OFF on heavily
-    duplicated keys (paper Fig. 3 pathology)."""
+    duplicated keys (paper Fig. 3 pathology), through the unified
+    planner-dispatched front end."""
+    import repro
+
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(0, 5, (8, 1 << 18)), jnp.int32)
-    on = sample_sort_sim(x, SortConfig(capacity_factor=1.5, use_pallas=False))
-    off = sample_sort_sim(x, SortConfig(capacity_factor=16.0, use_pallas=False),
-                          investigator=False)
-    emit("investigator_on", 0.0,
-         f"imbalance={float(load_imbalance(on.counts)):.4f}")
+    on = repro.sort(x, where="sim",
+                    config=SortConfig(capacity_factor=1.5, use_pallas=False))
+    off = repro.sort(x, where="sim",
+                     config=SortConfig(capacity_factor=16.0, use_pallas=False),
+                     investigator=False)
+    emit("investigator_on", 0.0, f"imbalance={on.imbalance():.4f}",
+         backend=on.meta.backend, size=x.size, dtype="int32",
+         balance=round(on.imbalance(), 4))
     emit("investigator_off", 0.0,
-         f"imbalance={float(load_imbalance(off.counts)):.4f};"
-         f"starved_procs={int((np.asarray(off.counts)==0).sum())}")
+         f"imbalance={off.imbalance():.4f};"
+         f"starved_procs={int((np.asarray(off.counts)==0).sum())}",
+         backend=off.meta.backend, size=x.size, dtype="int32",
+         balance=round(off.imbalance(), 4))
 
 
 def sort_collective_schedule():

@@ -1,9 +1,14 @@
 """Benchmark harness: one function per paper table/figure + beyond-paper
-studies. Prints ``name,us_per_call,derived`` CSV.
+studies. Prints ``name,us_per_call,derived`` CSV and writes a
+machine-readable ``BENCH_<suite>.json`` per suite (op, size, dtype,
+backend, wall-time, achieved balance) so the perf trajectory is tracked
+across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--suite paper|external|all] [--only fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|all]
+                                            [--only fig5,...] [--out-dir .]
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -12,12 +17,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--suite", default="paper",
-                    choices=("paper", "external", "all"),
+                    choices=("paper", "external", "api", "all"),
                     help="paper = in-core tables/figures; external = "
-                         "out-of-core + sort-service benchmarks")
+                         "out-of-core + sort-service benchmarks; api = "
+                         "unified-front-end dispatch overhead + matrix")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<suite>.json files land")
     args = ap.parse_args()
 
-    from benchmarks import external_sort, ours, paper_figs
+    from benchmarks import api_bench, common, external_sort, ours, paper_figs
 
     suites = {
         "paper": {
@@ -36,21 +44,31 @@ def main() -> None:
             "external_sort": external_sort.external_vs_incore,
             "sort_service": external_sort.service_batching,
         },
+        "api": {
+            "planner_overhead": api_bench.planner_overhead,
+            "api_matrix": api_bench.api_matrix,
+        },
     }
-    table = {}
-    for name in suites if args.suite == "all" else (args.suite,):
-        table.update(suites[name])
-    only = set(args.only.split(",")) if args.only else set(table)
+    selected = list(suites) if args.suite == "all" else [args.suite]
+    only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in table.items():
-        if name not in only:
-            continue
-        try:
-            fn()
-        except Exception:
-            failed.append(name)
-            traceback.print_exc()
+    for suite_name in selected:
+        common.drain_records()
+        for name, fn in suites[suite_name].items():
+            if only is not None and name not in only:
+                continue
+            try:
+                fn()
+            except Exception:
+                failed.append(name)
+                traceback.print_exc()
+        records = common.drain_records()
+        if records:
+            path = f"{args.out_dir}/BENCH_{suite_name}.json"
+            with open(path, "w") as f:
+                json.dump({"suite": suite_name, "records": records}, f, indent=1)
+            print(f"wrote {path} ({len(records)} records)", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

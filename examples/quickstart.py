@@ -1,50 +1,61 @@
-"""Quickstart: the PGX.D sort library public API in 2 minutes.
+"""Quickstart: the unified `repro.sort()` front end in 2 minutes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Migration note (PR 2): the old ``SortLibrary`` facade still works behind
+deprecation shims, but new code should call ``repro.sort`` — one entry
+point, one ``SortOutput`` result type, and a planner that picks the
+backend (sim / mesh / stream) from input placement and size. See the
+deprecation table in ``repro/core/api.py``.
 """
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SortConfig, SortLibrary, load_imbalance
-from repro.core import topk as topk_lib
+import repro
 
 
 def main():
     rng = np.random.default_rng(0)
-    lib = SortLibrary(SortConfig())  # paper defaults: 64KB sample buffer
 
-    # --- 1. sort data spread over 8 (virtual) processors -----------------
-    p, n = 8, 100_000
-    x = jnp.asarray(rng.exponential(1.0, (p, n)).astype(np.float32))
-    r = lib.sort(x)
-    print(f"sorted {p*n:,} keys over {p} processors; "
-          f"imbalance={float(load_imbalance(r.counts)):.4f}; "
-          f"overflow={bool(r.overflowed)}")
+    # --- 1. one call; the planner picks the backend and explains why ----
+    x = rng.exponential(1.0, 800_000).astype(np.float32)
+    print(repro.explain(x))
+    out = repro.sort(x)
+    print(f"sorted {len(out):,} keys on backend={out.meta.backend!r}; "
+          f"imbalance={out.imbalance():.4f}; overflow={out.overflowed}")
+    assert np.array_equal(out.keys, np.sort(x))
 
     # --- 2. heavy duplication: the investigator keeps balance ------------
-    dup = jnp.asarray(rng.integers(0, 4, (p, n)), jnp.int32)  # 4 distinct keys
-    r2 = lib.sort(dup)
-    print(f"duplicated keys: counts={np.asarray(r2.counts)} "
-          f"(imbalance={float(load_imbalance(r2.counts)):.4f})")
+    dup = rng.integers(0, 4, 800_000).astype(np.int32)  # 4 distinct keys
+    r2 = repro.sort(dup)
+    print(f"duplicated keys: counts={r2.counts} (imbalance={r2.imbalance():.4f})")
 
-    # --- 3. provenance: where did each element come from? ----------------
-    r3 = lib.sort_with_provenance(dup)
-    from repro.core import decode_provenance
-    proc, idx = decode_provenance(r3.values[0][:5], n)
-    print(f"first 5 sorted elements came from procs {np.asarray(proc)} "
-          f"at local indices {np.asarray(idx)}")
+    # --- 3. capabilities every backend inherits at once ------------------
+    d = repro.sort(x, order="desc")                  # descending
+    assert np.array_equal(d.keys, np.sort(x)[::-1])
+    order = repro.sort(dup, want="order").order()    # stable argsort
+    assert np.array_equal(order, np.argsort(dup, kind="stable"))
+    k2 = rng.integers(0, 9, dup.size).astype(np.int32)
+    lex = repro.sort((dup, k2), want="order")        # 2-key lexicographic
+    assert np.array_equal(lex.order(), np.lexsort((k2, dup)))
+    print("descending / argsort / multi-key: all np-exact")
 
-    # --- 4. binary search + top-k on the sorted result --------------------
-    q = jnp.asarray([0.5, 2.0], jnp.float32)
-    proc, loc = lib.searchsorted(r, q)
-    print(f"searchsorted({np.asarray(q)}) -> proc {np.asarray(proc)}, "
-          f"local pos {np.asarray(loc)}")
-    v, _ = topk_lib.local_topk(x.reshape(-1), 5)
-    print(f"top-5 values: {np.asarray(v)}")
+    # --- 4. provenance + binary search + top-k on the result -------------
+    grid = rng.integers(0, 6, (8, 4096)).astype(np.int32)  # (p, n_local)
+    r3 = repro.sort(grid, want="order")
+    proc, idx = r3.provenance()
+    print(f"first 5 sorted elements came from procs {proc[:5]} "
+          f"at local indices {idx[:5]}")
+    print(f"searchsorted([0.5, 2.0]) -> ranks {out.searchsorted([0.5, 2.0])}; "
+          f"top-5: {out.topk(5)}")
 
-    # --- 5. sort several independent arrays simultaneously ----------------
-    rs = lib.sort_many([x, x * 2])
-    print(f"sorted {len(rs)} datasets simultaneously")
+    # --- 5. out-of-core: same call, stream backend -----------------------
+    big_plan = repro.plan(x, limits=repro.SortLimits(stream_threshold=100_000))
+    print(f"above stream_threshold the planner picks: {big_plan.backend!r}")
+    s = repro.sort(x, where="stream",
+                   limits=repro.SortLimits(chunk_elems=1 << 16),
+                   config=repro.SortConfig(use_pallas=False))
+    n_chunks = sum(1 for _ in s.chunks())
+    print(f"streamed the same sort in {n_chunks} bounded-memory chunks")
 
 
 if __name__ == "__main__":

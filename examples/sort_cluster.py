@@ -1,5 +1,6 @@
-"""Distributed sort on a real device mesh (the paper's full pipeline with
-jax.lax collectives). Spawns 8 virtual host devices if launched on one.
+"""Distributed sort on a real device mesh through the unified front end
+(`repro.sort(x, where=mesh)` -> shard_map + jax.lax collectives). Spawns
+8 virtual host devices if launched on one.
 
     PYTHONPATH=src python examples/sort_cluster.py
 """
@@ -12,35 +13,40 @@ if "XLA_FLAGS" not in os.environ and __name__ == "__main__":
     os.execv(sys.executable, [sys.executable] + sys.argv)
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SortConfig, distributed_sort, distributed_sort_kv
+import repro
 
 
 def main():
     print(f"devices: {len(jax.devices())}")
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
-    cfg = SortConfig(capacity_factor=1.5)
+    cfg = repro.SortConfig(capacity_factor=1.5)
 
-    # sort 1M keys sharded over the "data" axis (4 processors)
-    x = jnp.asarray(rng.normal(0, 1, 1 << 20).astype(np.float32))
-    r = distributed_sort(x, mesh, "data", cfg)
-    counts = np.asarray(r.count)
-    got = np.concatenate([np.asarray(r.values[i][:counts[i]]) for i in range(4)])
-    assert (np.diff(got) >= 0).all()
-    print(f"4-proc distributed sort ok; per-proc counts {counts}")
+    # sort 1M keys over the "data" axis (4 processors) — where=mesh pins
+    # the mesh backend; everything else (plan, result type) is unchanged
+    x = rng.normal(0, 1, 1 << 20).astype(np.float32)
+    print(repro.explain(x, where=(mesh, "data"), config=cfg))
+    r = repro.sort(x, where=(mesh, "data"), config=cfg)
+    assert r.meta.backend == "mesh"
+    assert (np.diff(r.keys) >= 0).all()
+    print(f"4-proc distributed sort ok; per-proc counts {r.counts}")
 
     # multi-axis sort over ("data","model") = 8 processors — the multi-pod
-    # pattern (axis tuples work in every collective)
-    keys = rng.integers(0, 6, 1 << 20).astype(np.int32)  # heavy duplication
-    vals = np.arange(keys.size, dtype=np.int32)
-    rkv = distributed_sort_kv(jnp.asarray(keys), jnp.asarray(vals), mesh,
-                              ("data", "model"), cfg)
-    counts = np.asarray(rkv.count)
+    # pattern (axis tuples work in every collective); descending + argsort
+    # work here exactly as on every other backend
+    keys = rng.integers(1, 6, 1 << 20).astype(np.int32)  # heavy duplication
+    rkv = repro.sort(keys, np.arange(keys.size, dtype=np.int32),
+                     where=(mesh, ("data", "model")), config=cfg)
+    counts = np.asarray(rkv.counts)
+    assert np.array_equal(keys[rkv.values], rkv.keys)
     print(f"8-proc kv sort under duplication: counts {counts} "
           f"(max/mean {counts.max()/counts.mean():.4f})")
+
+    rd = repro.sort(keys, order="desc", where=(mesh, ("data", "model")), config=cfg)
+    assert np.array_equal(rd.keys, np.sort(keys)[::-1])
+    print("descending on the mesh backend: np-exact")
 
 
 if __name__ == "__main__":

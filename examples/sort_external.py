@@ -1,25 +1,20 @@
 """Out-of-core sort demo: a dataset 8x larger than the per-chunk device
-capacity, sorted exactly with the repro.stream pipeline
+capacity, sorted exactly through the unified front end's stream backend
 (runs -> range partition -> streaming merge).
 
     PYTHONPATH=src python examples/sort_external.py
 """
 import numpy as np
 
-from repro.core import SortConfig, SortLibrary
-from repro.stream import (
-    SortService,
-    StreamConfig,
-    generate_runs,
-    partition_runs,
-    sort_stream,
-)
+import repro
+from repro.stream import SortService, StreamConfig, generate_runs, partition_runs
 
 
 def main():
     chunk = 1 << 14
-    cfg = StreamConfig(chunk_elems=chunk, n_procs=8,
-                       sort=SortConfig(use_pallas=False))
+    cfg = repro.SortConfig(use_pallas=False)
+    limits = repro.SortLimits(chunk_elems=chunk, n_procs=8,
+                              stream_threshold=2 * chunk)
     rng = np.random.default_rng(0)
 
     # -- 8x over-capacity, 90% duplicated keys (the investigator's regime)
@@ -27,26 +22,31 @@ def main():
     x = np.where(rng.random(n) < 0.9, 7.0,
                  rng.normal(0, 1, n)).astype(np.float32)
 
-    runs = generate_runs(x, cfg)
-    print(f"pass 1: {len(runs)} runs of <= {chunk} elements")
-    part = partition_runs(runs, cfg)
-    print(f"pass 2: {part.n_buckets} range buckets, "
-          f"imbalance {part.load_imbalance():.4f} (1.0 = perfect)")
+    # the planner picks the stream backend from the size alone
+    print(repro.explain(x, limits=limits))
+    out = repro.sort(x, limits=limits, config=cfg)
+    assert out.meta.backend == "stream"
+    chunks = list(out.chunks())
+    assert np.array_equal(np.concatenate(chunks), np.sort(x))
+    print(f"streamed {n} elements in {len(chunks)} chunks, exactly "
+          f"np.sort-equal (chunk imbalance {out.imbalance():.4f})")
 
-    out = np.concatenate(list(sort_stream(x, cfg)))
-    assert np.array_equal(out, np.sort(x))
-    print(f"pass 3: streamed {n} elements, exactly np.sort-equal")
+    # -- the pass structure underneath (runs -> partition)
+    scfg = StreamConfig(chunk_elems=chunk, n_procs=8, sort=cfg)
+    runs = generate_runs(x, scfg)
+    part = partition_runs(runs, scfg)
+    print(f"pass 1: {len(runs)} runs; pass 2: {part.n_buckets} range "
+          f"buckets, imbalance {part.load_imbalance():.4f} (1.0 = perfect)")
 
-    # -- same thing through the library facade, with provenance
-    lib = SortLibrary(SortConfig(use_pallas=False))
+    # -- provenance payload rides the multi-pass sort
     keys = rng.integers(0, 100, 4 * chunk).astype(np.int32)
-    mk, mv = lib.sort_external_kv(keys, np.arange(keys.size, dtype=np.int32),
-                                  chunk_elems=chunk)
-    assert np.array_equal(keys[mv], mk)
-    print(f"kv: provenance round-trips through the multi-pass sort")
+    kv = repro.sort(keys, np.arange(keys.size, dtype=np.int32),
+                    where="stream", limits=limits, config=cfg)
+    assert np.array_equal(keys[kv.values], kv.keys)
+    print("kv: provenance round-trips through the multi-pass sort")
 
     # -- sort-service front end: micro-batched concurrent requests
-    svc = SortService(config=SortConfig(use_pallas=False), n_procs=8)
+    svc = SortService(config=cfg, n_procs=8)
     reqs = [rng.normal(0, 1, 1000).astype(np.float32) for _ in range(16)]
     outs = svc.sort_many(reqs)
     assert all(np.array_equal(o, np.sort(a)) for a, o in zip(reqs, outs))

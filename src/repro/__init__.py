@@ -1,0 +1,39 @@
+"""repro — load-balanced distributed sort (PGX.D, arXiv:1611.00463) as a
+production JAX library.
+
+The public surface is ONE sort call with planner-driven backend dispatch::
+
+    import repro
+    out = repro.sort(keys)                       # -> repro.SortOutput
+    repro.plan(keys).backend                     # which backend, and why
+    repro.sort(keys, order="desc")               # descending
+    repro.sort(keys, want="order")               # stable argsort
+    repro.sort((k1, k2))                         # lexicographic multi-key
+    repro.sort(keys, where=mesh)                 # real-mesh shard_map sort
+    repro.sort(chunks_iter, where="stream")      # out-of-core
+
+See ``repro.core.api`` for the full API reference and the deprecation
+table of the legacy ``SortLibrary`` facade.
+"""
+from repro.core import (
+    OverflowPolicy,
+    SortConfig,
+    SortLibrary,
+    SortLimits,
+    SortMeta,
+    SortOutput,
+    SortOverflowError,
+    SortPlan,
+    explain,
+    load_imbalance,
+    plan,
+    register_backend,
+    sort,
+)
+
+__all__ = [
+    "sort", "plan", "explain",
+    "SortOutput", "SortMeta", "SortPlan", "SortLimits", "SortConfig",
+    "OverflowPolicy", "SortOverflowError", "register_backend",
+    "SortLibrary", "load_imbalance",
+]

@@ -1,6 +1,18 @@
 # The paper's primary contribution: load-balanced distributed sample sort
-# (PGX.D, 2016) as a composable JAX module. See DESIGN.md.
-from repro.core.api import SortLibrary, encode_provenance, decode_provenance, load_imbalance
+# (PGX.D, 2016) as a composable JAX module, fronted by the unified
+# planner-dispatched `repro.sort()` entry point. See DESIGN.md.
+from repro.core.api import (
+    SortLibrary,
+    decode_provenance,
+    encode_provenance,
+    explain,
+    load_imbalance,
+    plan,
+    sort,
+)
+from repro.core.overflow import OverflowPolicy, SortOverflowError
+from repro.core.planner import SortLimits, SortPlan, register_backend
+from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import (
     SortConfig,
     investigator_bounds,
@@ -17,6 +29,9 @@ from repro.core.sample_sort import (
 )
 
 __all__ = [
+    "sort", "plan", "explain",
+    "SortOutput", "SortMeta", "SortPlan", "SortLimits",
+    "OverflowPolicy", "SortOverflowError", "register_backend",
     "SortLibrary", "SortConfig", "SortResult", "SortKVResult",
     "sample_sort_sim", "sample_sort_sim_kv",
     "distributed_sort", "distributed_sort_kv",

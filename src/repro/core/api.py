@@ -1,24 +1,99 @@
-"""Public SortLibrary API — the paper's user-facing sort library.
+"""Unified sort API — reference.
 
-Features promised by the paper and exposed here:
-  * generic over key dtype (float32 / bf16 / int32 / uint32),
-  * provenance: every element can report its original processor and local
-    index after sorting (``sort_with_provenance``),
-  * multiple independent arrays sorted simultaneously (``sort_many``),
-  * binary search / top-k over the sorted result,
-  * runs either on virtual processors (single device — benchmarks, CPU) or
-    on a real mesh axis (shard_map — production).
+One entry point, planner-driven backend dispatch, one result type::
+
+    import repro
+    out = repro.sort(keys)                 # -> SortOutput
+    out.keys                               # flat sorted host array (lazy)
+
+Entry points
+------------
+``repro.sort(keys, values=None, *, order="asc", want="values",
+where=None, limits=None, config=None, investigator=True)``
+    keys:   flat array (np/jnp), a (p, n_local) global-view array, an
+            iterator of arrays (out-of-core), or a tuple of equal-length
+            arrays (lexicographic multi-key).
+    values: optional payload that rides the sort (provenance, ids).
+    order:  "asc" | "desc", or a tuple with one flag per key.
+    want:   "values" (sorted keys [+payload]) | "order" (the stable
+            sorting permutation — argsort).
+    where:  backend override: "sim" | "stream" | "mesh", a
+            ``jax.sharding.Mesh``, or (mesh, axis_name). Default: the
+            planner decides (see ``repro.plan``).
+    limits: ``SortLimits`` resource hints (n_procs, chunk_elems,
+            stream_threshold, overflow ladder).
+    config: ``SortConfig`` tuning knobs (paper defaults).
+
+``repro.plan(...)`` / ``repro.explain(...)``
+    Same signature; returns the ``SortPlan`` (backend + reasons) the
+    planner would execute / its human-readable rendering.
+
+``SortOutput`` fields & methods
+    .keys .values .counts .overflowed .send_counts .raw .meta
+    .order() .provenance() .imbalance() .searchsorted(q) .topk(k)
+    .chunks()  (stream backend: bounded-memory sorted chunk iterator)
+
+Deprecation table (old ``SortLibrary`` facade -> unified front end)
+-------------------------------------------------------------------
+    lib.sort(x)                  -> repro.sort(x).raw / repro.sort(x)
+    lib.sort_kv(k, v)            -> repro.sort(k, v)
+    lib.sort_with_provenance(x)  -> repro.sort(x, want="order")
+    lib.sort_with_retry(x)       -> repro.sort(x)  (overflow ladder is
+                                    the default policy; see SortLimits)
+    lib.sort_many(arrays)        -> repro.sort per array (same-shape
+                                    arrays share one vmapped program)
+    lib.sort_external(x)         -> repro.sort(x, where="stream").keys
+    lib.sort_external_kv(k, v)   -> repro.sort(k, v, where="stream")
+    lib.sort_stream(x)           -> repro.sort(x, where="stream").chunks()
+    lib.distributed_sort(x, m)   -> repro.sort(x, where=m)
+    lib.searchsorted(r, q)       -> repro.sort(x).searchsorted(q)
+
+The shims below keep every legacy method working (returning the legacy
+result types via ``SortOutput.raw``) and warn exactly once per method.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import sample_sort, sim, topk
+from repro.core import planner, sim, topk
+from repro.core.overflow import OverflowPolicy, SortOverflowError
+from repro.core.planner import SortLimits, SortPlan
+from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
+
+
+def sort(keys, values=None, *, order="asc", want="values", where=None,
+         limits: SortLimits | None = None, config: SortConfig | None = None,
+         investigator: bool = True) -> SortOutput:
+    """Sort ``keys`` (see module docstring for the full reference)."""
+    return planner.execute(
+        keys, values, order=order, want=want, where=where,
+        limits=limits, config=config, investigator=investigator,
+    )
+
+
+def plan(keys, values=None, *, order="asc", want="values", where=None,
+         limits: SortLimits | None = None, config: SortConfig | None = None,
+         investigator: bool = True) -> SortPlan:
+    """The backend the planner will use for this request, and why."""
+    return planner.make_plan(
+        keys, values, order=order, want=want, where=where,
+        limits=limits, config=config, investigator=investigator,
+    )
+
+
+def explain(keys, values=None, **kwargs) -> str:
+    """Human-readable rendering of ``repro.plan(...)``."""
+    return plan(keys, values, **kwargs).explain()
+
+
+# ---------------------------------------------------------- provenance
 
 
 def encode_provenance(p: int, n_local: int) -> jnp.ndarray:
@@ -36,97 +111,184 @@ def decode_provenance(payload: jnp.ndarray, n_local: int):
     return payload // n_local, payload % n_local
 
 
+def load_imbalance(counts: jnp.ndarray) -> jnp.ndarray:
+    """max/mean shard size — 1.0 is perfect balance (paper Table II)."""
+    return counts.max() / jnp.maximum(counts.mean(), 1)
+
+
+# ------------------------------------------------------ legacy facade
+
+
+_DEPRECATION_SEEN: set[str] = set()
+
+
+def _warn_deprecated(name: str, instead: str) -> None:
+    if name in _DEPRECATION_SEEN:
+        return
+    _DEPRECATION_SEEN.add(name)
+    warnings.warn(
+        f"SortLibrary.{name} is deprecated; use {instead}",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def _reset_deprecation_registry() -> None:
+    """Test hook: make every shim warn again."""
+    _DEPRECATION_SEEN.clear()
+
+
 @dataclasses.dataclass(frozen=True)
 class SortLibrary:
-    """Facade over the simulator and the distributed implementation."""
+    """Deprecated facade over the unified front end (kept so seed-era
+    callers run unchanged). Every method routes through ``repro.sort``'s
+    planner with an explicit backend pin and returns the legacy result
+    type from ``SortOutput.raw``; each warns once per process."""
 
     config: SortConfig = SortConfig()
     investigator: bool = True
 
+    def _limits(self, **kw) -> SortLimits:
+        return SortLimits(**kw)
+
     # ---- virtual-processor (single device) paths ----
     def sort(self, x: jnp.ndarray) -> sim.SortResult:
         """x: (p, n_local) — sort across virtual processors."""
-        return sim.sample_sort_sim(x, self.config, investigator=self.investigator)
+        _warn_deprecated("sort", "repro.sort(x)")
+        out = sort(x, where="sim", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=0, raise_on_overflow=False))
+        return out.raw
 
     def sort_with_provenance(self, x: jnp.ndarray) -> sim.SortKVResult:
-        p, n = x.shape
-        prov = encode_provenance(p, n)
-        return sim.sample_sort_sim_kv(x, prov, self.config, investigator=self.investigator)
+        _warn_deprecated("sort_with_provenance", 'repro.sort(x, want="order")')
+        out = sort(x, want="order", where="sim", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=0, raise_on_overflow=False))
+        return out.raw
 
     def sort_kv(self, keys: jnp.ndarray, values: jnp.ndarray) -> sim.SortKVResult:
-        return sim.sample_sort_sim_kv(keys, values, self.config, investigator=self.investigator)
+        _warn_deprecated("sort_kv", "repro.sort(keys, values)")
+        out = sort(keys, values, where="sim", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=0, raise_on_overflow=False))
+        return out.raw
 
     def sort_many(self, arrays: Sequence[jnp.ndarray]):
         """Sort several independent datasets simultaneously (paper §IV end).
-        Each (p, n_i); sorts share one jit program per shape."""
-        return [self.sort(a) for a in arrays]
+        Same-shape arrays are stacked and run as ONE vmapped program
+        (shape-bucketed compiled-program cache, shared with the stream
+        SortService)."""
+        _warn_deprecated("sort_many", "repro.sort per array")
+        return _sort_many_vmapped(arrays, self.config, self.investigator)
 
     def sort_with_retry(self, x: jnp.ndarray, max_doublings: int = 3):
-        """Production wrapper: on (detected, never silent) bucket overflow,
-        retry with doubled capacity_factor. Each retry is a recompile, so
-        steady-state workloads converge to a single program."""
-        cfg = self.config
-        for _ in range(max_doublings + 1):
-            r = sim.sample_sort_sim(x, cfg, investigator=self.investigator)
-            if not bool(r.overflowed):
-                return r, cfg
-            cfg = dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2)
-        raise RuntimeError(
-            f"sort overflowed even at capacity_factor={cfg.capacity_factor}"
-        )
+        """On (detected, never silent) bucket overflow, retry with the
+        unified capacity ladder (``overflow.OverflowPolicy``)."""
+        _warn_deprecated("sort_with_retry", "repro.sort(x) (retries by default)")
+        out = sort(x, where="sim", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=max_doublings))
+        return out.raw, out.meta.config
 
     def searchsorted(self, result: sim.SortResult, queries: jnp.ndarray):
+        _warn_deprecated("searchsorted", "SortOutput.searchsorted(queries)")
         return topk.searchsorted_in_result(result.values, result.counts, queries)
 
     # ---- out-of-core paths (repro.stream) ----
     def sort_external(self, data, *, chunk_elems: int = 1 << 16, n_procs: int = 8):
-        """Sort a host-side dataset larger than one device program: run
-        generation -> splitter-driven range partition -> streaming merge.
-        ``data`` is a flat numpy array or an iterator of arrays; returns
-        the sorted numpy array (exactly np.sort-equal)."""
-        from repro.stream import StreamConfig, sort_external
-
-        return sort_external(
-            data,
-            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
-            investigator=self.investigator,
-        )
+        """Sort a host-side dataset larger than one device program."""
+        _warn_deprecated("sort_external", 'repro.sort(data, where="stream").keys')
+        out = sort(data, where="stream", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(chunk_elems=chunk_elems, n_procs=n_procs))
+        return out.keys
 
     def sort_external_kv(self, keys, values, *, chunk_elems: int = 1 << 16,
                          n_procs: int = 8):
-        """Out-of-core key/value sort; the payload (e.g. provenance from
-        ``encode_provenance``) rides every pass."""
-        from repro.stream import StreamConfig, sort_external_kv
-
-        return sort_external_kv(
-            keys, values,
-            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
-            investigator=self.investigator,
-        )
+        """Out-of-core key/value sort; the payload rides every pass."""
+        _warn_deprecated("sort_external_kv",
+                         'repro.sort(keys, values, where="stream")')
+        out = sort(keys, values, where="stream", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(chunk_elems=chunk_elems, n_procs=n_procs))
+        return out.keys, out.values
 
     def sort_stream(self, data, *, chunk_elems: int = 1 << 16, n_procs: int = 8):
         """Like ``sort_external`` but yields sorted chunks in bounded
         memory — the dataset is never host-materialized at once."""
-        from repro.stream import StreamConfig, sort_stream
-
-        return sort_stream(
-            data,
-            StreamConfig(chunk_elems=chunk_elems, n_procs=n_procs, sort=self.config),
-            investigator=self.investigator,
-        )
+        _warn_deprecated("sort_stream", 'repro.sort(data, where="stream").chunks()')
+        out = sort(data, where="stream", config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(chunk_elems=chunk_elems, n_procs=n_procs))
+        return out.chunks()
 
     # ---- real-mesh paths ----
+    @staticmethod
+    def _check_divisible(n: int, mesh, axis_name) -> None:
+        """Legacy contract: the facade never padded, so uneven inputs must
+        keep failing loudly (``repro.sort`` pads + unpads automatically —
+        but ``.raw`` counts would include the sentinels)."""
+        axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+        p = 1
+        for a in axes:
+            p *= mesh.shape[a]
+        if n % p:
+            raise ValueError(
+                f"input length {n} does not divide the {p}-way sort axis; "
+                f"use repro.sort(x, where=mesh) for automatic padding"
+            )
+
     def distributed_sort(self, x, mesh, axis_name="data"):
-        return sample_sort.distributed_sort(
-            x, mesh, axis_name, self.config, investigator=self.investigator
-        )
+        _warn_deprecated("distributed_sort", "repro.sort(x, where=mesh)")
+        self._check_divisible(int(np.size(x)), mesh, axis_name)
+        out = sort(x, where=(mesh, axis_name), config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=0, raise_on_overflow=False))
+        return out.raw
 
     def distributed_sort_kv(self, keys, values, mesh, axis_name="data"):
-        return sample_sort.distributed_sort_kv(
-            keys, values, mesh, axis_name, self.config, investigator=self.investigator
-        )
+        _warn_deprecated("distributed_sort_kv", "repro.sort(keys, values, where=mesh)")
+        self._check_divisible(int(np.size(keys)), mesh, axis_name)
+        out = sort(keys, values, where=(mesh, axis_name), config=self.config,
+                   investigator=self.investigator,
+                   limits=self._limits(max_doublings=0, raise_on_overflow=False))
+        return out.raw
 
 
-def load_imbalance(counts: jnp.ndarray) -> jnp.ndarray:
-    """max/mean shard size — 1.0 is perfect balance (paper Table II)."""
-    return counts.max() / jnp.maximum(counts.mean(), 1)
+# ------------------------------------------------- vmapped sort_many
+
+
+_SORT_MANY_CACHE = None
+
+
+def sort_many_cache():
+    """Shape-bucketed compiled-program cache behind SortLibrary.sort_many
+    (the SortService cache class, reused — one jit program per shape)."""
+    global _SORT_MANY_CACHE
+    if _SORT_MANY_CACHE is None:
+        from repro.stream.service import ProgramCache
+
+        _SORT_MANY_CACHE = ProgramCache()
+    return _SORT_MANY_CACHE
+
+
+def _sort_many_vmapped(arrays, config: SortConfig, investigator: bool):
+    """Group same-(shape, dtype) arrays, stack each group, and execute it
+    as one vmapped sample-sort program."""
+    cache = sort_many_cache()
+    groups: dict[tuple, list[int]] = {}
+    arrays = [jnp.asarray(a) for a in arrays]
+    for i, a in enumerate(arrays):
+        groups.setdefault((a.shape, str(a.dtype)), []).append(i)
+    results: list = [None] * len(arrays)
+    for idxs in groups.values():
+        stacked = jnp.stack([arrays[i] for i in idxs])
+        fn = cache.get(len(idxs), stacked.shape[1], stacked.shape[2],
+                       stacked.dtype, config, investigator)
+        res = fn(stacked)
+        for slot, i in enumerate(idxs):
+            results[i] = sim.SortResult(
+                res.values[slot], res.counts[slot],
+                res.overflowed[slot], res.send_counts[slot],
+            )
+    return results

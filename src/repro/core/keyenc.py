@@ -1,0 +1,68 @@
+"""Key-encoding layer: front-end capabilities as encodings over the
+stable single-key kv machinery.
+
+Every capability the unified ``repro.sort`` front end grows — descending
+order, argsort (``want="order"``), lexicographic multi-key — is expressed
+here as a *key transformation* plus a payload convention, so all three
+backends (sim / mesh / stream) inherit each capability at once instead of
+re-implementing it:
+
+  * descending  -> ``flip``: an order-reversing bijection per dtype
+                   (``~x`` for integers, ``-x`` for floats). Ascending
+                   sort of flipped keys == stable descending sort.
+  * argsort     -> payload = the flat global index (the paper's
+                   provenance encoding); the kv sort is exactly stable
+                   for unique increasing payloads, so the returned
+                   permutation matches ``np.argsort(kind="stable")``.
+  * multi-key   -> LSD passes: stable argsort by the last key, then by
+                   each earlier key over the gathered order — the classic
+                   radix-over-columns construction on top of the stable
+                   single-key sort (see ``api._lexsort_passes``).
+
+Representable-key restriction (mirror of the ascending sentinel rule):
+ascending sorts cannot contain the dtype's maximum (it is the padding
+sentinel); descending sorts with a payload cannot contain the dtype's
+*minimum* (it flips onto the sentinel). Keys-only descending sorts have
+no restriction — they run ascending and reverse the materialized output.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flip(x):
+    """Order-reversing bijection; its own inverse. np and jnp arrays."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return -x
+    return ~x
+
+
+def flip_np(x: np.ndarray) -> np.ndarray:
+    """numpy-side flip (host materialization decode path)."""
+    if np.issubdtype(x.dtype, np.floating):
+        return -x
+    return ~x
+
+
+def encode(keys, descending: bool):
+    return flip(keys) if descending else keys
+
+
+def decode_np(keys: np.ndarray, descending: bool) -> np.ndarray:
+    return flip_np(keys) if descending else keys
+
+
+def stable_argsort(keys: jnp.ndarray, *, tile: int = 1024,
+                   use_pallas: bool = False):
+    """Stable local argsort: (sorted_keys, order) for a flat shard.
+
+    The shared primitive under MoE sorted dispatch (expert ids are the
+    keys, slots the payload) and the front end's local argsort paths —
+    payload = iota is globally unique and increasing, which makes the kv
+    sort exactly stable.
+    """
+    from repro.core.local_sort import local_sort_kv
+
+    slots = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    return local_sort_kv(keys, slots, tile=tile, use_pallas=use_pallas)

@@ -1,0 +1,100 @@
+"""Unified bucket-overflow retry policy.
+
+The static-capacity exchange can overflow (detected, never silent — see
+``sim.SortResult.overflowed``). Before this module, every layer had its
+own retry ladder: ``SortLibrary.sort_with_retry``, the run generator in
+``stream/runs.py`` and the per-request path in ``stream/service.py`` each
+doubled ``capacity_factor`` with subtly different attempt counts. They now
+all walk the same ladder, so library and service behavior cannot diverge.
+
+``run_with_capacity_retry`` is the full policy (initial attempt + ladder);
+``retry_overflowed`` enters the ladder directly when the caller already
+holds an overflowed result (the service's batched path, the run
+generator's in-flight chunk).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+class SortOverflowError(RuntimeError):
+    """The sort still overflowed after exhausting the capacity ladder."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OverflowPolicy:
+    """Capacity-growth ladder applied when static buckets overflow.
+
+    max_doublings: growth steps before giving up (0 = never retry).
+    growth: capacity_factor multiplier per step (the planner may choose a
+      cheaper bump than doubling; every consumer inherits it here).
+    raise_on_overflow: False returns the overflowed result instead of
+      raising — the legacy ``SortLibrary.sort`` contract.
+    """
+
+    max_doublings: int = 3
+    growth: float = 2.0
+    raise_on_overflow: bool = True
+
+
+def _overflowed(result) -> bool:
+    # scalar (sim) and per-device-array (mesh) overflow flags both reduce
+    return bool(np.any(np.asarray(result.overflowed)))
+
+
+def bump_capacity(config, policy: OverflowPolicy):
+    return dataclasses.replace(
+        config, capacity_factor=config.capacity_factor * policy.growth
+    )
+
+
+def retry_overflowed(
+    run: Callable,
+    config,
+    policy: OverflowPolicy,
+    *,
+    last=None,
+    on_retry: Callable | None = None,
+):
+    """The attempt at ``config`` already overflowed; walk the ladder.
+
+    ``run(config)`` must return a result with an ``overflowed`` field.
+    Returns (result, config_used, retries). Raises ``SortOverflowError``
+    when the ladder is exhausted and the policy says to raise.
+    """
+    result = last
+    for i in range(policy.max_doublings):
+        config = bump_capacity(config, policy)
+        if on_retry is not None:
+            on_retry(config)
+        result = run(config)
+        if not _overflowed(result):
+            return result, config, i + 1
+    if policy.raise_on_overflow:
+        raise SortOverflowError(
+            f"sort overflowed even at capacity_factor={config.capacity_factor}"
+        )
+    return result, config, policy.max_doublings
+
+
+def run_with_capacity_retry(
+    run: Callable,
+    config,
+    policy: OverflowPolicy = OverflowPolicy(),
+    *,
+    on_retry: Callable | None = None,
+):
+    """Initial attempt + capacity ladder. Returns (result, config, retries)."""
+    result = run(config)
+    if not _overflowed(result):
+        return result, config, 0
+    if policy.max_doublings == 0:
+        if policy.raise_on_overflow:
+            raise SortOverflowError(
+                f"sort overflowed even at capacity_factor={config.capacity_factor}"
+            )
+        return result, config, 0
+    return retry_overflowed(run, config, policy, last=result, on_retry=on_retry)

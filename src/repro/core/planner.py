@@ -1,0 +1,656 @@
+"""Execution planner + backend registry for the unified sort front end.
+
+The paper pitches one library call that stays load-balanced everywhere;
+backend choice (single-device virtual processors, real-mesh shard_map,
+out-of-core streaming) is therefore a *planner decision* driven by input
+placement/size/shape — not a method name the caller memorizes (cf. Cérin
+et al.'s partitioning-method selection for heterogeneous clusters).
+
+    plan   = repro.plan(keys, ...)    # inspect: which backend, and why
+    output = repro.sort(keys, ...)    # plan + execute -> SortOutput
+
+Placement rules (in order):
+  1. ``where`` names a backend, or is a ``jax.sharding.Mesh`` (-> mesh).
+  2. Iterator inputs stream (size unknown / not host-resident).
+  3. Inputs above ``limits.stream_threshold`` elements stream.
+  4. Everything else runs on the virtual-processor simulator.
+
+Capabilities (descending / argsort / multi-key) are *front-end
+encodings* over the stable kv machinery (see ``keyenc``), so every
+registered backend inherits them at once. The overflow-retry ladder is
+the single policy in ``overflow.py`` for all backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import keyenc, sample_sort, sim
+from repro.core.overflow import OverflowPolicy, run_with_capacity_retry
+from repro.core.result import SortMeta, SortOutput
+from repro.core.splitters import SortConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SortLimits:
+    """Resource hints the planner dispatches on.
+
+    n_procs: virtual processors for sim/stream chunk sorts.
+    chunk_elems: device-program capacity of one stream chunk.
+    stream_threshold: element count above which the planner picks the
+      out-of-core backend; None disables size-based streaming (explicit
+      ``where="stream"`` and iterator inputs still stream).
+    max_doublings / growth / raise_on_overflow: the unified overflow
+      policy (see ``overflow.OverflowPolicy``). The stream backend
+      honors max_doublings and growth but always raises when the ladder
+      is exhausted — a partially exchanged run cannot be returned.
+    """
+
+    n_procs: int = 8
+    chunk_elems: int = 1 << 16
+    stream_threshold: int | None = 1 << 22
+    max_doublings: int = 3
+    growth: float = 2.0
+    raise_on_overflow: bool = True
+
+    def policy(self) -> OverflowPolicy:
+        return OverflowPolicy(
+            max_doublings=self.max_doublings,
+            growth=self.growth,
+            raise_on_overflow=self.raise_on_overflow,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SortPlan:
+    """The planner's decision: backend + shape of the execution."""
+
+    backend: str
+    n_procs: int
+    chunk_elems: int
+    limits: SortLimits
+    reasons: tuple = ()
+    mesh: Any = None
+    axis_name: Any = "data"
+
+    def explain(self) -> str:
+        lines = [f"repro.sort plan: backend={self.backend!r}"]
+        for r in self.reasons:
+            lines.append(f"  - {r}")
+        lines.append(
+            f"  n_procs={self.n_procs} chunk_elems={self.chunk_elems} "
+            f"overflow: up to {self.limits.max_doublings} capacity bumps "
+            f"(x{self.limits.growth})"
+        )
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    description: str
+    execute: Callable  # (_Req, SortPlan) -> SortOutput
+
+
+BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, execute: Callable, description: str) -> None:
+    BACKENDS[name] = Backend(name, description, execute)
+
+
+# --------------------------------------------------------------- request
+
+
+@dataclasses.dataclass
+class _Req:
+    """Normalized sort request (internal)."""
+
+    keys: Any  # array | list of arrays (multi-key) | iterator
+    values: Any
+    want: str  # "values" | "order"
+    descending: tuple  # per-key flags
+    config: SortConfig
+    investigator: bool
+    n: int | None  # None for iterator inputs
+    n_local: int | None  # set for (p, n_local) global-view inputs
+    dtype: Any
+    is_iterator: bool
+    multikey: bool
+
+    @property
+    def needs_payload(self) -> bool:
+        return self.want == "order" or self.values is not None
+
+
+def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
+    if want not in ("values", "order"):
+        raise ValueError(f"want must be 'values' or 'order', got {want!r}")
+    if want == "order" and values is not None:
+        raise ValueError(
+            'want="order" returns the permutation itself; pass values with '
+            'want="values", or gather them with keys[out.order()]'
+        )
+    # multi-key is a *tuple* of key arrays; a list is an iterable of
+    # chunks (stream input), matching the stream drivers' contract
+    multikey = isinstance(keys, tuple)
+    klist = list(keys) if multikey else [keys]
+    n_keys = len(klist)
+    if multikey and n_keys == 1:
+        multikey, keys = False, klist[0]
+
+    if isinstance(order, (tuple, list)):
+        orders = tuple(order)
+    else:
+        orders = (order,) * n_keys
+    if len(orders) != n_keys:
+        raise ValueError(f"{len(orders)} order flags for {n_keys} keys")
+    for o in orders:
+        if o not in ("asc", "desc"):
+            raise ValueError(f"order must be 'asc' or 'desc', got {o!r}")
+    descending = tuple(o == "desc" for o in orders)
+
+    def _check_dtype(dt):
+        # jax runs in 32-bit mode here; 64-bit keys would silently
+        # truncate (and the int64 sentinel overflows) — fail at the door
+        if np.dtype(str(dt)).itemsize > 4 and str(dt) != "bfloat16":
+            raise TypeError(
+                f"64-bit keys ({dt}) need jax x64 mode; cast to "
+                f"int32/uint32/float32 first (np defaults Python ints "
+                f"to int64)"
+            )
+
+    is_iterator = not multikey and not hasattr(keys, "dtype")
+    if isinstance(keys, list) and keys and not hasattr(keys[0], "dtype"):
+        # a bare list of Python scalars: treat as one flat array
+        keys = np.asarray(keys)
+        is_iterator = False
+    n = n_local = None
+    dtype = None
+    if multikey:
+        klist = [np.asarray(k).reshape(-1) for k in klist]
+        n = klist[0].shape[0]
+        if any(k.shape[0] != n for k in klist):
+            raise ValueError("multi-key arrays must have equal lengths")
+        keys = klist
+        dtype = klist[0].dtype
+        for k in klist:
+            _check_dtype(k.dtype)
+    elif not is_iterator:
+        _check_dtype(keys.dtype)
+        dtype = np.dtype(str(keys.dtype)) if keys.dtype != "bfloat16" else keys.dtype
+        if getattr(keys, "ndim", 1) == 2:
+            n_local = int(keys.shape[1])
+            n = int(keys.shape[0] * keys.shape[1])
+        elif getattr(keys, "ndim", 1) > 2:
+            raise ValueError("keys must be flat, (p, n_local), or an iterator")
+        else:
+            n = int(keys.shape[0])
+
+    if multikey and is_iterator:
+        raise ValueError("multi-key sorts need array inputs")
+    return _Req(
+        keys=keys, values=values, want=want, descending=descending,
+        config=config or SortConfig(), investigator=investigator,
+        n=n, n_local=n_local, dtype=dtype, is_iterator=is_iterator,
+        multikey=multikey,
+    )
+
+
+def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
+    limits = limits or SortLimits()
+    mesh = None
+    axis_name = "data"
+    reasons: list[str] = []
+
+    choice = None
+    if where is not None:
+        if isinstance(where, str):
+            choice = where
+            reasons.append(f"caller pinned backend {where!r}")
+        elif isinstance(where, (tuple, list)) and len(where) == 2:
+            choice, (mesh, axis_name) = "mesh", where
+            reasons.append("caller provided (mesh, axis)")
+        else:  # a jax.sharding.Mesh
+            choice, mesh = "mesh", where
+            reasons.append("caller provided a device mesh")
+    elif req.is_iterator:
+        choice = "stream"
+        reasons.append("iterator input: size unknown, not host-resident")
+    elif limits.stream_threshold is not None and req.n > limits.stream_threshold:
+        choice = "stream"
+        reasons.append(
+            f"n={req.n} exceeds stream_threshold={limits.stream_threshold}"
+        )
+    else:
+        choice = "sim"
+        reasons.append(
+            f"n={req.n} fits one device program "
+            f"(stream_threshold={limits.stream_threshold})"
+        )
+    if choice not in BACKENDS:
+        raise KeyError(f"unknown backend {choice!r}; have {sorted(BACKENDS)}")
+    if choice == "mesh" and mesh is None:
+        raise ValueError('backend "mesh" needs where=<Mesh> or (mesh, axis)')
+    if req.is_iterator and choice != "stream":
+        raise ValueError(
+            f"iterator inputs can only run on the stream backend, "
+            f"not {choice!r} (sim/mesh need the whole array resident)"
+        )
+    if any(req.descending):
+        reasons.append("descending: order-flip key encoding (keyenc.flip)")
+    if req.multikey:
+        reasons.append(
+            f"{len(req.keys)}-key lexicographic: LSD stable-argsort passes"
+        )
+    if req.want == "order":
+        reasons.append("argsort: provenance-index payload over the kv sort")
+
+    n_procs = limits.n_procs
+    if req.n_local is not None and choice == "sim":
+        n_procs = int(req.keys.shape[0])
+        reasons.append(f"(p={n_procs}, n_local) input: rows are the shards")
+    elif choice == "mesh":
+        axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+        n_procs = 1
+        for a in axes:
+            n_procs *= mesh.shape[a]
+        reasons.append(f"mesh sort axis spans {n_procs} device(s)")
+    return SortPlan(
+        backend=choice, n_procs=n_procs, chunk_elems=limits.chunk_elems,
+        limits=limits, reasons=tuple(reasons), mesh=mesh, axis_name=axis_name,
+    )
+
+
+# ------------------------------------------------------------- execution
+
+
+def pad_grid(flat: np.ndarray, p: int, per: int, fill) -> np.ndarray:
+    """Pack a flat host array into the (p, per) shard grid, sentinel
+    padded. The canonical pad helper — ``stream/runs.py`` and the
+    SortService reuse it for chunk staging."""
+    buf = np.full(p * per, fill, flat.dtype)
+    buf[: flat.shape[0]] = flat
+    return buf.reshape(p, per)
+
+
+def unpad_grid(values, counts, m: int) -> np.ndarray:
+    """Concatenate valid per-shard prefixes, drop sentinel padding (pads
+    sort to the global tail, so the first m slots are the real data).
+    One bulk device->host transfer, then numpy slicing."""
+    values = np.asarray(values)
+    counts = np.asarray(counts)
+    parts = [values[i, : int(counts[i])] for i in range(values.shape[0])]
+    return np.concatenate(parts)[:m]
+
+
+_pad_grid = pad_grid
+_unpad_grid = unpad_grid
+
+
+def _trim_pad_counts(counts, pad: int) -> np.ndarray:
+    """Per-shard counts with the sentinel pads removed. Pads carry the
+    order-maximal sentinel, so they occupy the global tail — walk shards
+    from the back subtracting until ``pad`` elements are gone. Keeps
+    SortOutput.counts/imbalance() honest for non-divisible inputs (the
+    raw backend result keeps the padded counts)."""
+    counts = np.asarray(counts).copy()
+    i = counts.shape[0] - 1
+    while pad > 0 and i >= 0:
+        take = min(int(counts[i]), pad)
+        counts[i] -= take
+        pad -= take
+        i -= 1
+    return counts
+
+
+def _check_sentinel_free(keys, descending: bool) -> None:
+    """Payload sorts that the FRONT END pads (flat inputs not divisible
+    by the shard count, and every stream chunk) use an order-extreme
+    sentinel; a real key equal to it would interleave with the pads and
+    leak sentinel payload into the output. Reject loudly instead of
+    corrupting silently (the ascending restriction is the dtype max;
+    descending flips it to the dtype min). One cheap reduction over the
+    keys — only called when padding actually happens, so unpadded
+    seed-era inputs containing the extreme still sort fine."""
+    dt = np.dtype(str(keys.dtype)) if str(keys.dtype) != "bfloat16" else None
+    if dt is None:
+        return  # bf16 keys are sorted as f32; inf keys already disallowed
+    if np.issubdtype(dt, np.floating):
+        bad = -np.inf if descending else np.inf
+        hit = bool(np.asarray((keys == bad).any()))
+    else:
+        info = np.iinfo(dt)
+        bad = info.min if descending else info.max
+        hit = bool(np.asarray((keys == bad).any()))
+    if hit:
+        raise ValueError(
+            f"keys contain {bad!r}, which is the "
+            f"{'descending' if descending else 'ascending'} padding "
+            f"sentinel for {dt} — payload sorts cannot represent it "
+            f"(shift the keys or drop those elements first)"
+        )
+
+
+def _stable_order_fix(ks: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Restore exact stability of an argsort permutation.
+
+    The investigator deliberately splits tied key ranges across
+    destinations to balance load (paper Fig. 3c), so the raw index
+    payload comes back segment-interleaved within runs of equal keys.
+    Reordering the payload inside each equal-key segment (a cheap host
+    pass over already-sorted keys) yields exactly
+    ``np.argsort(kind="stable")``.
+    """
+    if idx.size <= 1:
+        return idx
+    seg = np.empty(ks.size, np.int64)
+    seg[0] = 0
+    np.cumsum(ks[1:] != ks[:-1], out=seg[1:])
+    return idx[np.lexsort((idx, seg))]
+
+
+def _sentinel(dtype) -> np.ndarray:
+    from repro.kernels import ops as kops
+    import jax.numpy as jnp
+
+    return np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
+
+
+def _prep_single(req: _Req):
+    """Encode the key array + build the payload for a single-key sort.
+
+    Returns (enc_keys flat-or-grid np/jnp, payload or None, descending,
+    keys_only_reverse) — keys-only descending sorts run ascending on the
+    raw keys and reverse at materialization (no key-range restriction).
+    """
+    descending = req.descending[0]
+    keys = req.keys
+    payload = None
+    if req.needs_payload:
+        enc = keyenc.encode(keys, descending) if descending else keys
+        if req.want == "order":
+            payload = np.arange(req.n, dtype=np.int32)
+            if req.n_local is not None:
+                payload = payload.reshape(keys.shape)
+        else:
+            payload = req.values
+        return enc, payload, descending, False
+    # keys-only: ascending sort + reverse is exact and unrestricted
+    return keys, None, descending, descending
+
+
+def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
+    import jax.numpy as jnp
+
+    enc, payload, descending, reverse = _prep_single(req)
+    p = plan.n_procs
+    m = req.n
+    if req.n_local is not None:
+        xk = jnp.asarray(enc)
+        xv = jnp.asarray(payload) if payload is not None else None
+        pad = 0
+    else:
+        per = max(1, -(-req.n // p))
+        pad = p * per - m
+        if pad == 0:
+            # divisible: no host round-trip, the array stays device-resident
+            xk = jnp.asarray(enc).reshape(p, per)
+            xv = (jnp.asarray(payload).reshape(p, per)
+                  if payload is not None else None)
+        else:
+            if payload is not None:
+                _check_sentinel_free(req.keys, descending)
+            flat = np.asarray(enc).reshape(-1)
+            xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)))
+            xv = None
+            if payload is not None:
+                vflat = np.asarray(payload).reshape(-1)
+                xv = jnp.asarray(_pad_grid(vflat, p, per, _sentinel(vflat.dtype)))
+
+    if xv is None:
+        run = lambda cfg: sim.sample_sort_sim(
+            xk, cfg, investigator=req.investigator
+        )
+    else:
+        run = lambda cfg: sim.sample_sort_sim_kv(
+            xk, xv, cfg, investigator=req.investigator
+        )
+    res, cfg_used, retries = run_with_capacity_retry(
+        run, req.config, plan.limits.policy()
+    )
+
+    def materialize():
+        if xv is None:
+            ks = _unpad_grid(res.values, res.counts, m)
+            vs = None
+        else:
+            ks = _unpad_grid(res.keys, res.counts, m)
+            vs = _unpad_grid(res.values, res.counts, m)
+            if req.want == "order":
+                vs = _stable_order_fix(ks, vs)
+        if reverse:
+            ks = ks[::-1].copy()
+        elif descending:
+            ks = keyenc.decode_np(ks, True)
+        return ks, vs
+
+    meta = _meta(req, plan, "sim", cfg_used, retries)
+    return SortOutput(
+        meta,
+        counts=_trim_pad_counts(res.counts, pad),
+        overflowed=bool(np.any(np.asarray(res.overflowed))),
+        send_counts=np.asarray(res.send_counts),
+        raw=res,
+        materialize=materialize,
+    )
+
+
+def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
+    import jax.numpy as jnp
+
+    enc, payload, descending, reverse = _prep_single(req)
+    axes = plan.axis_name if isinstance(plan.axis_name, tuple) else (plan.axis_name,)
+    p = 1
+    for a in axes:
+        p *= plan.mesh.shape[a]
+    per = max(1, -(-req.n // p))
+    m = req.n
+    pad = p * per - m
+    if pad == 0:
+        # divisible: pass the (possibly mesh-sharded) array straight to
+        # shard_map — no host materialization round-trip
+        xk = jnp.asarray(enc).reshape(-1)
+        xv = (jnp.asarray(payload).reshape(-1)
+              if payload is not None else None)
+    else:
+        if payload is not None:
+            _check_sentinel_free(req.keys, descending)
+        flat = np.asarray(enc).reshape(-1)
+        xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)).reshape(-1))
+        xv = None
+        if payload is not None:
+            vflat = np.asarray(payload).reshape(-1)
+            xv = jnp.asarray(_pad_grid(vflat, p, per, _sentinel(vflat.dtype)).reshape(-1))
+
+    if xv is None:
+        run = lambda cfg: sample_sort.distributed_sort(
+            xk, plan.mesh, plan.axis_name, cfg, investigator=req.investigator
+        )
+    else:
+        run = lambda cfg: sample_sort.distributed_sort_kv(
+            xk, xv, plan.mesh, plan.axis_name, cfg, investigator=req.investigator
+        )
+    res, cfg_used, retries = run_with_capacity_retry(
+        run, req.config, plan.limits.policy()
+    )
+
+    def materialize():
+        if xv is None:
+            ks = _unpad_grid(res.values, res.count, m)
+            vs = None
+        else:
+            ks = _unpad_grid(res.keys, res.count, m)
+            vs = _unpad_grid(res.values, res.count, m)
+            if req.want == "order":
+                vs = _stable_order_fix(ks, vs)
+        if reverse:
+            ks = ks[::-1].copy()
+        elif descending:
+            ks = keyenc.decode_np(ks, True)
+        return ks, vs
+
+    meta = _meta(req, plan, "mesh", cfg_used, retries)
+    return SortOutput(
+        meta,
+        counts=_trim_pad_counts(res.count, pad),
+        overflowed=bool(np.any(np.asarray(res.overflowed))),
+        send_counts=np.asarray(res.send_counts),
+        raw=res,
+        materialize=materialize,
+    )
+
+
+def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
+    from repro.stream import StreamConfig, sort_external_kv, sort_stream
+
+    if req.is_iterator and req.needs_payload:
+        raise ValueError(
+            "streamed argsort/kv over an iterator needs array inputs "
+            "(the index payload must chunk with the keys)"
+        )
+    scfg = StreamConfig(
+        chunk_elems=plan.chunk_elems,
+        n_procs=plan.n_procs,
+        sort=req.config,
+        max_doublings=plan.limits.max_doublings,
+        growth=plan.limits.growth,
+    )
+    enc, payload, descending, reverse = _prep_single(req)
+    if not req.is_iterator:
+        enc = np.asarray(enc).reshape(-1)
+    meta = _meta(req, plan, "stream", req.config, 0)
+
+    if payload is None:
+        gen = sort_stream(enc, scfg, investigator=req.investigator)
+        if reverse:
+            out = SortOutput(meta, materialize=None)
+
+            def materialize():
+                parts = list(gen)
+                out.counts = np.asarray([p.shape[0] for p in parts], np.int64)
+                ks = (np.concatenate(parts) if parts
+                      else np.empty(0, req.dtype or np.float64))
+                return ks[::-1].copy(), None
+
+            out._materialize = materialize
+            return out
+        return SortOutput(meta, chunks=gen)
+
+    # stream chunks are always sentinel-padded, so payload sorts must be
+    # sentinel-free regardless of divisibility
+    _check_sentinel_free(req.keys, descending)
+    vflat = np.asarray(payload).reshape(-1)
+
+    def materialize():
+        ks, vs = sort_external_kv(enc, vflat, scfg, investigator=req.investigator)
+        if req.want == "order":
+            vs = _stable_order_fix(ks, vs)
+        if descending:
+            ks = keyenc.decode_np(ks, True)
+        return ks, vs
+
+    return SortOutput(meta, materialize=materialize)
+
+
+def _meta(req: _Req, plan: SortPlan, backend: str, cfg, retries: int) -> SortMeta:
+    orders = tuple("desc" if d else "asc" for d in req.descending)
+    return SortMeta(
+        backend=backend,
+        plan=plan,
+        config=cfg,
+        retries=retries,
+        n=req.n or 0,
+        want=req.want,
+        order=orders[0] if len(orders) == 1 else orders,
+        n_keys=len(req.keys) if req.multikey else 1,
+        n_local=req.n_local,
+        dtype=req.dtype,
+    )
+
+
+# ------------------------------------------------------------ multi-key
+
+
+def _exec_multikey(req: _Req, plan: SortPlan) -> SortOutput:
+    """Lexicographic sort: LSD stable-argsort passes over the backend.
+
+    perm = argsort(k_last); then for each earlier key:
+    perm = perm[argsort(k[perm])] — every pass is the backend's exactly
+    stable kv sort, so the composition matches np.lexsort.
+    """
+    backend = BACKENDS[plan.backend]
+
+    def sub_sort(karr: np.ndarray, descending: bool) -> SortOutput:
+        sub = _Req(
+            keys=karr, values=None, want="order",
+            descending=(descending,), config=req.config,
+            investigator=req.investigator, n=int(karr.shape[0]), n_local=None,
+            dtype=karr.dtype, is_iterator=False, multikey=False,
+        )
+        return backend.execute(sub, plan)
+
+    klist = req.keys
+    perm = np.asarray(sub_sort(klist[-1], req.descending[-1]).values)
+    last = None
+    for karr, desc in zip(klist[-2::-1], req.descending[-2::-1]):
+        last = sub_sort(karr[perm], desc)
+        perm = perm[np.asarray(last.values)]
+
+    sorted_keys = tuple(k[perm] for k in klist)
+    values = req.values[perm] if req.values is not None else None
+    meta = _meta(req, plan, plan.backend, req.config,
+                 last.meta.retries if last is not None else 0)
+    if req.want == "order":
+        return SortOutput(meta, keys=sorted_keys, values=perm,
+                          counts=last.counts if last is not None else None)
+    return SortOutput(meta, keys=sorted_keys, values=values,
+                      counts=last.counts if last is not None else None)
+
+
+# --------------------------------------------------------------- public
+
+
+register_backend("sim", _exec_sim, "virtual processors on one device")
+register_backend("mesh", _exec_mesh, "shard_map over a real mesh axis")
+register_backend("stream", _exec_stream, "out-of-core runs/partition/merge")
+
+
+def make_plan(keys, values=None, *, order="asc", want="values", where=None,
+              limits=None, config=None, investigator=True) -> SortPlan:
+    req = _normalize(keys, values, order=order, want=want, config=config,
+                     investigator=investigator)
+    return _make_plan(req, where, limits)
+
+
+def execute(keys, values=None, *, order="asc", want="values", where=None,
+            limits=None, config=None, investigator=True) -> SortOutput:
+    req = _normalize(keys, values, order=order, want=want, config=config,
+                     investigator=investigator)
+    plan = _make_plan(req, where, limits)
+    if req.n == 0:
+        meta = _meta(req, plan, plan.backend, req.config, 0)
+        if req.multikey:
+            keys_out = tuple(np.empty(0, k.dtype) for k in req.keys)
+        else:
+            keys_out = np.empty(0, req.dtype or np.float64)
+        vals = np.empty(0, np.int32) if req.want == "order" else None
+        out = SortOutput(meta, keys=keys_out, values=vals,
+                         counts=np.zeros(0, np.int64))
+        out._chunks = iter(())
+        return out
+    if req.multikey:
+        return _exec_multikey(req, plan)
+    return BACKENDS[plan.backend].execute(req, plan)

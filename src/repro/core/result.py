@@ -1,0 +1,203 @@
+"""``SortOutput`` — the one result type of the unified sort front end.
+
+Replaces the three divergent shapes the library used to return
+(``sim.SortResult``/``SortKVResult`` named tuples, ``ShardSortResult``
+global views, raw numpy arrays from the stream drivers) with a single
+object whose host views materialize lazily — the stream backend never
+concatenates its output until somebody asks for ``.keys``.
+
+The raw backend result stays reachable on ``.raw`` (global-view padded
+shards for sim/mesh, None for stream) so the deprecation shims on
+``SortLibrary`` can keep returning the legacy types unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SortMeta:
+    """Backend + plan metadata recorded on every SortOutput.
+
+    backend: the backend that actually executed (``plan.backend`` is the
+      one the planner *chose*; they match unless the caller overrode it).
+    config: the SortConfig actually used — after any capacity retries.
+    retries: capacity-ladder steps taken by the unified overflow policy.
+      The stream backend sorts many chunks, each walking its own ladder
+      inside run generation, so it reports the requested config and
+      retries=0 (per-chunk ladder accounting is a ROADMAP follow-on).
+    n_local: per-processor row length when the input arrived in the
+      (p, n_local) global-view layout (enables provenance decoding).
+    """
+
+    backend: str
+    plan: Any = None
+    config: Any = None
+    retries: int = 0
+    n: int = 0
+    want: str = "values"
+    order: Any = "asc"
+    n_keys: int = 1
+    n_local: int | None = None
+    dtype: Any = None
+
+
+class SortOutput:
+    """Sorted result with lazy host materialization.
+
+    keys:    flat sorted key array (tuple of arrays for multi-key sorts).
+    values:  payload in sorted-key order — the user's values, or the
+             original flat indices when ``want="order"``; None otherwise.
+    counts:  per-shard (sim/mesh) or per-output-chunk (stream) sizes.
+    """
+
+    def __init__(
+        self,
+        meta: SortMeta,
+        *,
+        keys=None,
+        values=None,
+        counts=None,
+        overflowed: bool = False,
+        send_counts=None,
+        raw: Any = None,
+        materialize: Callable | None = None,
+        chunks: Iterator[np.ndarray] | None = None,
+    ):
+        self.meta = meta
+        self.counts = counts
+        self.overflowed = overflowed
+        self.send_counts = send_counts
+        self.raw = raw
+        self._keys = keys
+        self._values = values
+        self._materialize = materialize
+        self._chunks = chunks
+        self._chunks_consumed = False
+
+    # ------------------------------------------------------ lazy views
+    def _force(self):
+        if self._materialize is not None:
+            self._keys, self._values = self._materialize()
+            self._materialize = None
+        elif self._chunks_consumed:
+            raise ValueError(
+                "the stream result was already consumed via chunks(); "
+                "keep the yielded chunks if you also need .keys"
+            )
+        elif self._chunks is not None:
+            parts = list(self.chunks())
+            if parts:
+                self._keys = np.concatenate(parts)
+            else:
+                self._keys = np.empty(0, self.meta.dtype or np.float64)
+        if not self.meta.n and self._keys is not None:
+            # iterator inputs have unknown n until materialization
+            first = self._keys[0] if isinstance(self._keys, tuple) else self._keys
+            self.meta.n = int(first.shape[0])
+
+    @property
+    def keys(self):
+        """Flat sorted keys (host), materialized on first access."""
+        if self._keys is None:
+            self._force()
+        return self._keys
+
+    @property
+    def values(self):
+        """Payload in sorted order (host); None for keys-only sorts."""
+        if self._values is None and (self._materialize is not None):
+            self._force()
+        return self._values
+
+    def chunks(self) -> Iterator[np.ndarray]:
+        """Stream backend only: yield sorted chunks in bounded memory
+        (single use — consuming it is the materialization)."""
+        if self._chunks is None:
+            if self._chunks_consumed:
+                raise ValueError("chunks() was already consumed (single use)")
+            if self.meta.backend == "stream":
+                raise ValueError(
+                    "this stream result does not stream: descending/kv/"
+                    "order results materialize on host (the reverse/"
+                    "gather is not bounded-memory) — use .keys/.values"
+                )
+            raise ValueError(
+                f"chunks() is only available on the stream backend "
+                f"(this result came from {self.meta.backend!r})"
+            )
+        gen, self._chunks = self._chunks, None
+        self._chunks_consumed = True
+        sizes = []
+        for c in gen:
+            sizes.append(c.shape[0])
+            yield c
+        if self.counts is None:
+            self.counts = np.asarray(sizes, np.int64)
+        if not self.meta.n:
+            self.meta.n = int(sum(sizes))
+
+    def order(self) -> np.ndarray:
+        """The sorting permutation (``want="order"`` results)."""
+        if self.meta.want != "order":
+            raise ValueError('order() requires sort(..., want="order")')
+        return self.values
+
+    # ------------------------------------------------------ diagnostics
+    def imbalance(self) -> float:
+        """max/mean shard (or output-chunk) size — 1.0 is perfect balance
+        (paper Table II). NaN when the backend recorded no per-shard
+        counts (stream kv/argsort results materialize whole)."""
+        if self.counts is None:
+            return float("nan")
+        counts = np.asarray(self.counts, np.float64)
+        if counts.size == 0 or counts.sum() == 0:
+            return 1.0
+        return float(counts.max() / max(counts.mean(), 1e-12))
+
+    def provenance(self):
+        """Where each sorted element came from. With the (p, n_local)
+        input layout returns (processor, local index) arrays, the paper's
+        provenance view; for flat inputs returns the flat origin index."""
+        idx = self.order()
+        if self.meta.n_local:
+            n = self.meta.n_local
+            return idx // n, idx % n
+        return idx
+
+    def searchsorted(self, queries, side: str = "left") -> np.ndarray:
+        """Global insertion ranks of ``queries`` (np.searchsorted
+        semantics, aware of descending results)."""
+        keys = self.keys
+        if isinstance(keys, tuple):
+            raise ValueError("searchsorted is single-key only")
+        q = np.asarray(queries)
+        if self.meta.order == "desc":
+            other = {"left": "right", "right": "left"}[side]
+            return keys.shape[0] - np.searchsorted(keys[::-1], q, side=other)
+        return np.searchsorted(keys, q, side=side)
+
+    def topk(self, k: int, largest: bool = True) -> np.ndarray:
+        """Top-k keys, best first, straight off the sorted result."""
+        keys = self.keys
+        if isinstance(keys, tuple):
+            raise ValueError("topk is single-key only")
+        k = min(k, keys.shape[0])
+        descending = self.meta.order == "desc"
+        if largest:
+            return keys[:k] if descending else keys[-k:][::-1]
+        return keys[-k:][::-1] if descending else keys[:k]
+
+    def __len__(self) -> int:
+        return self.meta.n
+
+    def __repr__(self) -> str:
+        state = "materialized" if self._keys is not None else "lazy"
+        return (
+            f"SortOutput(n={self.meta.n}, backend={self.meta.backend!r}, "
+            f"want={self.meta.want!r}, order={self.meta.order!r}, "
+            f"overflowed={self.overflowed}, {state})"
+        )

@@ -1,11 +1,11 @@
 """Synthetic data pipeline with sort-based length bucketing.
 
 The paper's sort is used here as a data-layer primitive (DESIGN.md §3):
-documents are bucketed by length with the distributed sample sort
-(virtual-processor form) before packing, which minimizes padding waste —
+documents are bucketed by length with the unified ``repro.sort`` front
+end (``want="order"``) before packing, which minimizes padding waste —
 the classic production use of a distributed sort in an LM data pipeline.
-Rounds beyond the device-program capacity route through the out-of-core
-``repro.stream`` sort (``bucket_by_length_external``).
+Backend choice is the planner's: rounds beyond ``external_threshold``
+docs stream through the out-of-core pipeline automatically.
 
 Everything is deterministic in (seed, host_id) so multi-host loaders
 produce disjoint, reproducible shards; on restart the loader fast-forwards
@@ -17,7 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import SortConfig, sample_sort_sim_kv
+from repro.core import SortConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,66 +69,48 @@ def bucket_by_length_external(
     *,
     chunk_docs: int = 1 << 16,
 ):
-    """Corpus-scale length bucketing through the out-of-core sort.
+    """Corpus-scale length bucketing, pinned to the out-of-core backend.
 
-    Same contract as ``bucket_by_length`` but the length array is streamed
-    through ``repro.stream`` (run generation -> range partition -> merge),
-    so one bucketing round can cover many times the device-program
-    capacity. Lengths stay heavily duplicated keys across every pass — the
-    investigator keeps both the per-chunk shards and the global range
-    buckets balanced."""
-    import dataclasses
-
-    from repro.stream import StreamConfig, sort_external_kv
-
-    n = len(doc_lens)
-    cfg = StreamConfig(
-        chunk_elems=chunk_docs,
-        n_procs=n_procs,
-        sort=dataclasses.replace(sort_cfg, capacity_factor=2.0),
+    Same contract as ``bucket_by_length`` with the planner's choice
+    forced to ``stream``; kept for callers that know the round is
+    corpus-scale up front."""
+    return bucket_by_length(
+        doc_lens, n_procs, sort_cfg, external_threshold=chunk_docs,
+        _where="stream",
     )
-    _, ids = sort_external_kv(
-        doc_lens.astype(np.int32), np.arange(n, dtype=np.int32), cfg
-    )
-    return ids
 
 
 def bucket_by_length(
     doc_lens: np.ndarray, n_procs: int, sort_cfg=SortConfig(), *,
     external_threshold: int | None = None,
+    _where=None,
 ):
-    """Order document ids by length with the paper's distributed sort.
+    """Order document ids by length with the unified sort front end.
 
     Lengths are heavily duplicated keys (few distinct values) — the
     investigator keeps the virtual shards balanced. Returns the ids in
-    globally sorted (ascending length) order. Rounds larger than
-    ``external_threshold`` docs route through the out-of-core sort."""
-    import jax.numpy as jnp
-
+    globally sorted (ascending length, stable) order. Backend choice is
+    the planner's: rounds above ``external_threshold`` docs stream
+    through the out-of-core pipeline, the rest run in one device
+    program."""
     import dataclasses
 
+    from repro.core import api as sort_api
+
     n = len(doc_lens)
-    if external_threshold is not None and n > external_threshold:
-        return bucket_by_length_external(
-            doc_lens, n_procs, sort_cfg, chunk_docs=external_threshold
-        )
-    per = -(-n // n_procs)
-    pad = per * n_procs - n
-    keys = np.concatenate([doc_lens.astype(np.int32), np.full(pad, 2**30, np.int32)])
-    vals = np.concatenate([np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])
-    sort_cfg = dataclasses.replace(sort_cfg, capacity_factor=2.0)
-    r = sample_sort_sim_kv(
-        jnp.asarray(keys.reshape(n_procs, per)),
-        jnp.asarray(vals.reshape(n_procs, per)),
-        sort_cfg,
+    limits = sort_api.SortLimits(
+        n_procs=n_procs,
+        chunk_elems=external_threshold or (1 << 16),
+        stream_threshold=external_threshold,
     )
-    assert not bool(r.overflowed), "length-bucketing sort overflowed capacity"
-    out = []
-    counts = np.asarray(r.counts)
-    for i in range(n_procs):
-        out.append(np.asarray(r.values[i][: counts[i]]))
-    ids = np.concatenate(out)
-    return ids[ids >= 0]
+    out = sort_api.sort(
+        doc_lens.astype(np.int32),
+        want="order",
+        where=_where,
+        limits=limits,
+        config=dataclasses.replace(sort_cfg, capacity_factor=2.0),
+    )
+    return out.order()
 
 
 class PackedLoader:

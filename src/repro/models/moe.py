@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.local_sort import local_sort_kv
+from repro.core import keyenc
 from repro.core.merge import merge_padded_runs_kv
 from repro.models.layers import _init, _act
 from repro.sharding.spec import Axes, axis_size_compat, shard_map_compat
@@ -87,10 +87,10 @@ def _dispatch_body(
 
     w, ids, aux = _router(xf, p["router"], cfg)
 
-    # ---- (1) local stable sort of (expert_id, slot) — paper step 1
+    # ---- (1) local stable argsort of expert ids — paper step 1, via the
+    # front end's key-encoding layer (slot payload = the stable argsort)
     keys = ids.reshape(-1)  # (A,)
-    slots = jnp.arange(A, dtype=jnp.int32)
-    skeys, sslots = local_sort_kv(keys, slots, use_pallas=use_pallas)
+    skeys, sslots = keyenc.stable_argsort(keys, use_pallas=use_pallas)
 
     # ---- (2-4) static splitters = first expert of each shard
     shard_first = jnp.arange(n_shards + 1, dtype=jnp.int32) * E_loc

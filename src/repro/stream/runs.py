@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sim
+from repro.core import overflow, sim
+from repro.core import planner as planner_grid
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
 
@@ -44,7 +45,10 @@ class StreamConfig:
       ~bucket size ~= chunk_elems (splitters balance buckets to it).
     n_procs: virtual processors used for each in-core chunk sort.
     sort: the in-core SortConfig (buffer rule, capacity, pallas path).
-    max_doublings: capacity_factor doublings before a chunk sort fails.
+    max_doublings: capacity-ladder steps before a chunk sort fails.
+    growth: capacity_factor multiplier per ladder step (the unified
+      overflow policy's knob; overflow past the ladder always raises
+      here — a partially exchanged run cannot be returned).
     n_buckets: range buckets for pass 2; None = ceil(total/chunk_elems),
       i.e. each bucket targets one device-sized merge.
     out_chunk_elems: granularity of the sorted output stream; None =
@@ -55,6 +59,7 @@ class StreamConfig:
     n_procs: int = 8
     sort: SortConfig = SortConfig()
     max_doublings: int = 3
+    growth: float = 2.0
     n_buckets: int | None = None
     out_chunk_elems: int | None = None
 
@@ -98,21 +103,10 @@ def iter_chunks(
         yield np.concatenate(buf) if len(buf) > 1 else buf[0]
 
 
-def _pad_chunk(chunk: np.ndarray, p: int, per: int, fill) -> np.ndarray:
-    buf = np.full(p * per, fill, chunk.dtype)
-    buf[: chunk.shape[0]] = chunk
-    return buf.reshape(p, per)
-
-
-def _unpad(values, counts, m: int) -> np.ndarray:
-    """Concatenate the valid per-processor prefixes and drop the sentinel
-    padding (pads sort to the global tail, so the first m slots are the
-    real data). One bulk device->host transfer, then numpy slicing — not
-    p tiny transfers (this sits in the SortService per-request path)."""
-    values = np.asarray(values)
-    counts = np.asarray(counts)
-    parts = [values[i, : int(counts[i])] for i in range(values.shape[0])]
-    return np.concatenate(parts)[:m]
+# the pad/unpad grid invariant lives in one place — the planner — and is
+# shared by the chunk staging here and the SortService request path
+_pad_chunk = planner_grid.pad_grid
+_unpad = planner_grid.unpad_grid
 
 
 def generate_runs(
@@ -142,18 +136,16 @@ def generate_runs(
 
     def finalize(state) -> Run:
         dev_k, dev_v, res, sort_cfg, m = state
-        # retry ladder — recompiles, but steady-state inputs converge to
-        # one program (same semantics as SortLibrary.sort_with_retry)
-        for _ in range(cfg.max_doublings):
-            if not bool(res.overflowed):
-                break
-            sort_cfg = dataclasses.replace(
-                sort_cfg, capacity_factor=sort_cfg.capacity_factor * 2
-            )
-            res = dispatch(dev_k, dev_v, sort_cfg)
+        # unified capacity ladder (core.overflow) — recompiles, but
+        # steady-state inputs converge to one program
         if bool(res.overflowed):
-            raise RuntimeError(
-                f"run sort overflowed at capacity_factor={sort_cfg.capacity_factor}"
+            res, sort_cfg, _ = overflow.retry_overflowed(
+                lambda c: dispatch(dev_k, dev_v, c),
+                sort_cfg,
+                overflow.OverflowPolicy(
+                    max_doublings=cfg.max_doublings, growth=cfg.growth
+                ),
+                last=res,
             )
         if dev_v is None:
             return Run(_unpad(res.values, res.counts, m))

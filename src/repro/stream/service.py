@@ -6,13 +6,14 @@ concurrent sort requests of arbitrary length are padded up to power-of-two
 vmapped sample-sort program, and compiled executables are cached per
 (batch, shape, dtype, config) so a steady-state request mix runs with
 zero recompiles. Per-request overflow is detected from the vmapped
-overflow flags and retried individually with a doubled capacity_factor —
-``SortLibrary.sort_with_retry`` semantics, but paid only by the requests
-that actually overflowed, never by the whole batch. A request that still
-overflows after ``max_doublings`` fails alone: the rest of the flush
-completes first, and the ``SortServiceError`` raised at the end carries
-the completed results (``.results``) alongside the failures
-(``.errors``), so survivors are never lost.
+overflow flags and retried individually through the library's unified
+capacity ladder (``core.overflow.OverflowPolicy`` — the same policy
+``repro.sort`` applies), paid only by the requests that actually
+overflowed, never by the whole batch. A request that still overflows
+after the ladder fails alone: the rest of the flush completes first, and
+the ``SortServiceError`` raised at the end carries the completed results
+(``.results``) alongside the failures (``.errors``), so survivors are
+never lost.
 """
 from __future__ import annotations
 
@@ -25,10 +26,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sim
+from repro.core.overflow import OverflowPolicy, SortOverflowError, retry_overflowed
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
 from repro.stream.runs import _pad_chunk, _unpad
+
+
+class ProgramCache:
+    """Compiled vmapped sample-sort programs, keyed by
+    (batch, p, per, dtype, config, investigator). Shared between the
+    SortService flush path and ``SortLibrary.sort_many``."""
+
+    def __init__(self, stats: dict | None = None):
+        self.programs: dict = {}
+        self.stats = stats if stats is not None else {"programs": 0, "hits": 0}
+        self.stats.setdefault("programs", 0)
+        self.stats.setdefault("hits", 0)
+
+    def get(self, batch: int, p: int, per: int, dtype,
+            config: SortConfig, investigator: bool):
+        key = (batch, p, per, np.dtype(str(dtype)).str, config, investigator)
+        fn = self.programs.get(key)
+        if fn is None:
+            body = functools.partial(
+                sim.sample_sort_sim, config=config, investigator=investigator
+            )
+            fn = jax.jit(jax.vmap(body))
+            self.programs[key] = fn
+            self.stats["programs"] += 1
+        else:
+            self.stats["hits"] += 1
+        return fn
 
 
 @dataclasses.dataclass
@@ -53,6 +82,8 @@ class SortService:
 
     max_batch: requests per vmapped program (batch is padded to a
       power of two so batch sizes also shape-bucket).
+    policy: overflow ladder for per-request retries — the library-wide
+      default, so service and ``repro.sort`` behavior cannot diverge.
     """
 
     config: SortConfig = SortConfig()
@@ -62,25 +93,14 @@ class SortService:
     max_batch: int = 64
 
     def __post_init__(self):
-        self._programs: dict = {}
         self._queue: list[SortRequest] = []
         self._next_rid = 0
         self.stats = {"programs": 0, "hits": 0, "batches": 0, "retries": 0}
+        self._cache = ProgramCache(self.stats)
 
-    # ------------------------------------------------------ program cache
-    def _program(self, batch: int, per: int, dtype, cfg: SortConfig):
-        key = (batch, per, np.dtype(dtype).str, cfg, self.investigator)
-        fn = self._programs.get(key)
-        if fn is None:
-            body = functools.partial(
-                sim.sample_sort_sim, config=cfg, investigator=self.investigator
-            )
-            fn = jax.jit(jax.vmap(body))
-            self._programs[key] = fn
-            self.stats["programs"] += 1
-        else:
-            self.stats["hits"] += 1
-        return fn
+    @property
+    def policy(self) -> OverflowPolicy:
+        return OverflowPolicy(max_doublings=self.max_doublings)
 
     def _bucket_elems(self, n: int) -> int:
         """Pad target: next power of two, at least one element per proc."""
@@ -146,7 +166,7 @@ class SortService:
         for i, req in enumerate(reqs):
             batch[i] = _pad_chunk(req.data, p, per, fill)
 
-        fn = self._program(b, per, dtype, self.config)
+        fn = self._cache.get(b, p, per, dtype, self.config, self.investigator)
         res = fn(jnp.asarray(batch))
         self.stats["batches"] += 1
 
@@ -158,27 +178,30 @@ class SortService:
             if overflowed[i]:
                 try:
                     out.append(self._retry_one(req))
-                except RuntimeError as e:
-                    errors[req.rid] = e
+                except SortOverflowError as e:
+                    errors[req.rid] = RuntimeError(
+                        f"sort request rid={req.rid}: {e}"
+                    )
                     out.append(None)
                 continue
             out.append(_unpad(values[i], counts[i], req.data.shape[0]))
         return out
 
     def _retry_one(self, req: SortRequest) -> np.ndarray:
-        """sort_with_retry semantics for a single overflowed request."""
-        cfg = self.config
+        """Unified capacity ladder for a single overflowed request — the
+        batched attempt at ``self.config`` counts as the failed initial
+        attempt, so the ladder starts at the first capacity bump exactly
+        like ``repro.sort``'s overflow policy would."""
         elems = self._bucket_elems(req.data.shape[0])
         p, per = self.n_procs, -(-elems // self.n_procs)
         fill = np.asarray(kops.sentinel_for(jnp.dtype(req.data.dtype)))
         x = jnp.asarray(_pad_chunk(req.data, p, per, fill))
-        for _ in range(self.max_doublings):
-            cfg = dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2)
+
+        def on_retry(_cfg):
             self.stats["retries"] += 1
-            r = sim.sample_sort_sim(x, cfg, investigator=self.investigator)
-            if not bool(r.overflowed):
-                return _unpad(r.values, r.counts, req.data.shape[0])
-        raise RuntimeError(
-            f"sort request rid={req.rid} overflowed even at "
-            f"capacity_factor={cfg.capacity_factor}"
+
+        r, _cfg, _n = retry_overflowed(
+            lambda cfg: sim.sample_sort_sim(x, cfg, investigator=self.investigator),
+            self.config, self.policy, on_retry=on_retry,
         )
+        return _unpad(r.values, r.counts, req.data.shape[0])

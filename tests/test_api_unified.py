@@ -1,0 +1,392 @@
+"""Unified `repro.sort()` front end: planner dispatch, np-exactness on
+every backend, capability encodings (descending / argsort / multi-key),
+the one SortOutput type, deprecation shims, and the unified overflow
+policy."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core import api as api_mod
+from repro.core import keyenc
+from repro.core.overflow import OverflowPolicy, run_with_capacity_retry
+
+CFG = repro.SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(chunk_elems=1 << 12, n_procs=4)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    """Single-device mesh: exercises the shard_map backend in-process
+    (the 8-virtual-device runs live in tests/test_distributed.py)."""
+    return jax.make_mesh((1,), ("data",))
+
+
+def _where(backend, mesh1):
+    return (mesh1, "data") if backend == "mesh" else backend
+
+
+def _dataset(dtype, n, rng, duplicate_heavy):
+    hi = 5 if duplicate_heavy else max(2, n)
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        x = rng.integers(0, hi, n) if duplicate_heavy else rng.normal(0, 1, n) * 100
+        return np.asarray(x, dtype)
+    return rng.integers(1, hi + 1, n).astype(dtype)
+
+
+# ------------------------------------------------------------- planner
+
+
+def test_planner_backend_selection():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, 1000).astype(np.float32)
+    assert repro.plan(x).backend == "sim"
+    assert repro.plan(x, where="stream").backend == "stream"
+    small = repro.SortLimits(stream_threshold=100)
+    assert repro.plan(x, limits=small).backend == "stream"
+    assert repro.plan(iter([x])).backend == "stream"
+    assert "backend='sim'" in repro.explain(x)
+    with pytest.raises(KeyError):
+        repro.plan(x, where="gpu-cluster")
+    with pytest.raises(ValueError):
+        repro.plan(x, where="mesh")  # needs an actual Mesh
+
+
+def test_meta_records_backend_actually_used(mesh1):
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 9, 2000).astype(np.int32)
+    for backend in ("sim", "stream", "mesh"):
+        p = repro.plan(x, where=_where(backend, mesh1), limits=LIMITS, config=CFG)
+        out = repro.sort(x, where=_where(backend, mesh1), limits=LIMITS, config=CFG)
+        assert p.backend == backend
+        assert out.meta.backend == backend
+        assert out.meta.plan.backend == backend
+
+
+# ---------------------------------------------- exactness on all backends
+
+
+@pytest.mark.parametrize("backend", ["sim", "stream", "mesh"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.uint32])
+@pytest.mark.parametrize("descending", [False, True])
+def test_sort_np_exact_all_backends(backend, dtype, descending, mesh1):
+    rng = np.random.default_rng(2)
+    x = _dataset(dtype, 6000, rng, duplicate_heavy=True)
+    out = repro.sort(x, order="desc" if descending else "asc",
+                     where=_where(backend, mesh1), limits=LIMITS, config=CFG)
+    expect = np.sort(x)[::-1] if descending else np.sort(x)
+    np.testing.assert_array_equal(out.keys, expect)
+    assert out.keys.dtype == np.dtype(dtype)
+
+
+def test_argsort_matches_np_stable_all_backends(mesh1):
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 4, 5000).astype(np.int32)  # duplicate-heavy
+    for backend in ("sim", "stream", "mesh"):
+        out = repro.sort(x, want="order", where=_where(backend, mesh1),
+                         limits=LIMITS, config=CFG)
+        np.testing.assert_array_equal(out.order(), np.argsort(x, kind="stable"))
+        np.testing.assert_array_equal(out.keys, np.sort(x))
+
+
+def test_argsort_descending_stable():
+    rng = np.random.default_rng(4)
+    x = rng.integers(1, 5, 3000).astype(np.int32)
+    out = repro.sort(x, want="order", order="desc", config=CFG)
+    np.testing.assert_array_equal(
+        out.order(), np.argsort(keyenc.flip_np(x), kind="stable"))
+
+
+def test_multikey_lexicographic_all_backends(mesh1):
+    rng = np.random.default_rng(5)
+    k1 = rng.integers(0, 4, 4000).astype(np.int32)
+    k2 = rng.integers(0, 6, 4000).astype(np.int32)
+    expect = np.lexsort((k2, k1))  # primary k1, secondary k2
+    for backend in ("sim", "stream", "mesh"):
+        out = repro.sort((k1, k2), want="order", where=_where(backend, mesh1),
+                         limits=LIMITS, config=CFG)
+        np.testing.assert_array_equal(out.order(), expect)
+        np.testing.assert_array_equal(out.keys[0], k1[expect])
+        np.testing.assert_array_equal(out.keys[1], k2[expect])
+
+
+def test_multikey_mixed_order_and_values():
+    rng = np.random.default_rng(6)
+    k1 = rng.integers(0, 3, 2000).astype(np.int32)
+    k2 = rng.normal(0, 1, 2000).astype(np.float32)
+    v = rng.integers(0, 1000, 2000).astype(np.int32)
+    expect = np.lexsort((keyenc.flip_np(k2), k1))
+    out = repro.sort((k1, k2), v, order=("asc", "desc"), config=CFG)
+    np.testing.assert_array_equal(out.values, v[expect])
+    np.testing.assert_array_equal(out.keys[0], k1[expect])
+
+
+def test_kv_payload_roundtrip_all_backends(mesh1):
+    rng = np.random.default_rng(7)
+    k = rng.integers(0, 9, 3000).astype(np.int32)
+    v = np.arange(k.size, dtype=np.int32)
+    for backend in ("sim", "stream", "mesh"):
+        out = repro.sort(k, v, where=_where(backend, mesh1),
+                         limits=LIMITS, config=CFG)
+        np.testing.assert_array_equal(k[out.values], out.keys)
+        np.testing.assert_array_equal(np.sort(out.values), v)
+
+
+# (hypothesis property tests live in test_api_unified_props.py so this
+# module still runs when hypothesis is unavailable)
+
+
+# ------------------------------------------------------------ SortOutput
+
+
+def test_sortoutput_views_and_diagnostics():
+    rng = np.random.default_rng(8)
+    x = rng.integers(0, 6, (4, 512)).astype(np.int32)
+    out = repro.sort(x, want="order", config=CFG)
+    assert out.meta.n_local == 512
+    proc, idx = out.provenance()
+    flat = x.reshape(-1)
+    np.testing.assert_array_equal(flat[proc * 512 + idx], out.keys)
+    assert 1.0 <= out.imbalance() < 1.2
+    q = np.asarray([0, 3, 99], np.int32)
+    np.testing.assert_array_equal(out.searchsorted(q),
+                                  np.searchsorted(np.sort(flat), q))
+    np.testing.assert_array_equal(out.topk(5), np.sort(flat)[-5:][::-1])
+    assert len(out) == flat.size
+    assert "backend='sim'" in repr(out)
+
+
+def test_sortoutput_descending_searchsorted_topk():
+    x = np.asarray([5, 1, 3, 3, 2], np.int32)
+    out = repro.sort(x, order="desc", config=CFG)
+    np.testing.assert_array_equal(out.keys, [5, 3, 3, 2, 1])
+    np.testing.assert_array_equal(out.topk(2), [5, 3])
+    np.testing.assert_array_equal(out.topk(2, largest=False), [1, 2])
+    # rank of 3 in descending order, leftmost position
+    assert out.searchsorted([3])[0] == 1
+
+
+def test_stream_lazy_chunks_and_empty():
+    rng = np.random.default_rng(9)
+    x = rng.normal(0, 1, 20000).astype(np.float32)
+    out = repro.sort(x, where="stream", limits=LIMITS, config=CFG)
+    chunks = list(out.chunks())
+    assert len(chunks) > 1
+    np.testing.assert_array_equal(np.concatenate(chunks), np.sort(x))
+    assert out.counts is not None  # chunk sizes recorded on consumption
+    with pytest.raises(ValueError, match="single use|stream"):
+        next(iter(out.chunks()))  # consumed
+    empty = repro.sort(np.empty(0, np.int32))
+    assert empty.keys.shape == (0,) and empty.keys.dtype == np.int32
+    assert list(empty.chunks()) == []
+
+
+def test_counts_exclude_padding_on_nondivisible_input():
+    rng = np.random.default_rng(20)
+    x = rng.normal(0, 1, 1001).astype(np.float32)
+    out = repro.sort(x, config=CFG)  # 1001 % 8 != 0 -> 7 pads
+    assert int(np.asarray(out.counts).sum()) == 1001
+    np.testing.assert_array_equal(out.keys, np.sort(x))
+
+
+def test_sentinel_keys_only_rejected_when_padded():
+    import jax.numpy as jnp
+
+    # unpadded (p, n_local) grid: dtype-max keys sort fine (seed contract)
+    k = np.random.default_rng(21).integers(0, 5, (4, 64)).astype(np.int32)
+    k[0, 0] = np.iinfo(np.int32).max
+    out = repro.sort(jnp.asarray(k), want="order", config=CFG)
+    np.testing.assert_array_equal(out.keys, np.sort(k.reshape(-1)))
+    # padded flat payload sort: the same key must be rejected loudly
+    with pytest.raises(ValueError, match="padding sentinel"):
+        repro.sort(np.array([2**31 - 1] * 10 + [3], np.int32),
+                   want="order", config=CFG)
+    # descending payload: the dtype minimum is the flipped sentinel
+    with pytest.raises(ValueError, match="padding sentinel"):
+        repro.sort(np.array([-2**31, 5, 3], np.int32),
+                   want="order", order="desc", config=CFG)
+
+
+def test_empty_multikey_preserves_dtypes():
+    out = repro.sort((np.empty(0, np.int32), np.empty(0, np.float32)))
+    assert out.keys[0].dtype == np.int32
+    assert out.keys[1].dtype == np.float32
+
+
+def test_iterator_rejected_on_non_stream_backends():
+    x = np.arange(8, dtype=np.int32)
+    with pytest.raises(ValueError, match="stream backend"):
+        repro.sort(iter([x]), where="sim", config=CFG)
+
+
+# ------------------------------------------------------ overflow policy
+
+
+def test_unified_overflow_retries_and_raises():
+    rng = np.random.default_rng(10)
+    x = rng.uniform(0, 1, 4096).astype(np.float32)
+    tight = dataclasses.replace(CFG, capacity_factor=0.3)
+    out = repro.sort(x, config=tight, limits=repro.SortLimits(n_procs=4))
+    assert not out.overflowed and out.meta.retries > 0
+    assert out.meta.config.capacity_factor > tight.capacity_factor
+    np.testing.assert_array_equal(out.keys, np.sort(x))
+    with pytest.raises(repro.SortOverflowError, match="overflowed even at"):
+        repro.sort(x, config=dataclasses.replace(CFG, capacity_factor=1e-5),
+                   limits=repro.SortLimits(max_doublings=1))
+
+
+def test_service_retry_matches_library_ladder():
+    """The service's per-request retry walks the same capacity ladder as
+    repro.sort (the unified policy), so they converge to the same config."""
+    from repro.core import sim
+    from repro.stream import SortService
+
+    rng = np.random.default_rng(11)
+    x = rng.uniform(0, 1, 4096).astype(np.float32)
+    tight = dataclasses.replace(CFG, capacity_factor=0.3)
+
+    svc = SortService(config=tight, n_procs=4)
+    got = svc.sort(x)
+    np.testing.assert_array_equal(got, np.sort(x))
+    assert svc.stats["retries"] > 0
+
+    # library ladder on the identically padded grid
+    lib_out = repro.sort(x, config=tight,
+                         limits=repro.SortLimits(n_procs=4))
+    ladder_cfgs = [
+        tight.capacity_factor * (2.0 ** i)
+        for i in range(1, svc.policy.max_doublings + 1)
+    ]
+    assert lib_out.meta.config.capacity_factor in ladder_cfgs
+
+
+def test_run_with_capacity_retry_counts():
+    calls = []
+
+    class R:
+        def __init__(self, overflowed):
+            self.overflowed = np.asarray(overflowed)
+
+    def run(cfg):
+        calls.append(cfg.capacity_factor)
+        return R(len(calls) < 3)
+
+    r, cfg, retries = run_with_capacity_retry(
+        run, CFG, OverflowPolicy(max_doublings=3))
+    assert retries == 2 and len(calls) == 3
+    assert cfg.capacity_factor == CFG.capacity_factor * 4
+
+
+# ------------------------------------------------------------- sort_many
+
+
+def test_sort_many_one_program_per_shape():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(12)
+    lib = repro.SortLibrary(CFG)
+    arrays = [jnp.asarray(rng.uniform(0, 1, (4, 256)).astype(np.float32))
+              for _ in range(3)]
+    cache = api_mod.sort_many_cache()
+    before = dict(cache.stats)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rs = lib.sort_many(arrays)
+    assert cache.stats["programs"] - before["programs"] <= 1  # one per shape
+    for a, r in zip(arrays, rs):
+        got = np.concatenate(
+            [np.asarray(r.values[i][: int(r.counts[i])]) for i in range(4)]
+        )
+        np.testing.assert_array_equal(got, np.sort(np.asarray(a).reshape(-1)))
+    # second call with the same shape: zero new programs
+    before = dict(cache.stats)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        lib.sort_many(arrays)
+    assert cache.stats["programs"] == before["programs"]
+    assert cache.stats["hits"] > before["hits"]
+
+
+def test_sort_many_mixed_shapes():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(13)
+    lib = repro.SortLibrary(CFG)
+    arrays = [
+        jnp.asarray(rng.uniform(0, 1, (4, 128)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, 50, (4, 64)).astype(np.int32)),
+        jnp.asarray(rng.uniform(0, 1, (4, 128)).astype(np.float32)),
+    ]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rs = lib.sort_many(arrays)
+    for a, r in zip(arrays, rs):
+        got = np.concatenate(
+            [np.asarray(r.values[i][: int(r.counts[i])]) for i in range(4)]
+        )
+        np.testing.assert_array_equal(got, np.sort(np.asarray(a).reshape(-1)))
+
+
+# ------------------------------------------------------- deprecation shims
+
+
+def test_deprecation_shims_warn_exactly_once():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(14)
+    lib = repro.SortLibrary(CFG)
+    x = jnp.asarray(rng.uniform(0, 1, (4, 128)).astype(np.float32))
+    api_mod._reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lib.sort(x)
+        lib.sort(x)  # second call: no second warning
+        dep = [m for m in w if issubclass(m.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "SortLibrary.sort is deprecated" in str(dep[0].message)
+
+    # every shim warns (once) and still returns the legacy result shape
+    api_mod._reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = lib.sort(x)
+        lib.sort_kv(x, jnp.asarray(np.arange(512, dtype=np.int32).reshape(4, 128)))
+        lib.sort_with_provenance(x)
+        lib.sort_with_retry(x)
+        lib.sort_many([x])
+        lib.searchsorted(r, jnp.asarray([0.5], jnp.float32))
+        xf = np.random.default_rng(0).normal(0, 1, 4096).astype(np.float32)
+        lib.sort_external(xf, chunk_elems=1024)
+        lib.sort_external_kv(xf, np.arange(xf.size, dtype=np.int32),
+                             chunk_elems=1024)
+        list(lib.sort_stream(xf, chunk_elems=1024))
+        dep = {str(m.message).split(" is deprecated")[0]
+               for m in w if issubclass(m.category, DeprecationWarning)}
+    assert dep == {
+        "SortLibrary.sort", "SortLibrary.sort_kv",
+        "SortLibrary.sort_with_provenance", "SortLibrary.sort_with_retry",
+        "SortLibrary.sort_many", "SortLibrary.searchsorted",
+        "SortLibrary.sort_external", "SortLibrary.sort_external_kv",
+        "SortLibrary.sort_stream",
+    }
+
+
+def test_shim_results_match_unified_front_end():
+    """Old facade and new front end agree bit-for-bit."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(15)
+    x = jnp.asarray(rng.integers(0, 5, (4, 512)).astype(np.int32))
+    lib = repro.SortLibrary(CFG)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = lib.sort(x)
+    unified = repro.sort(x, config=CFG)
+    flat_legacy = np.concatenate(
+        [np.asarray(legacy.values[i][: int(legacy.counts[i])]) for i in range(4)]
+    )
+    np.testing.assert_array_equal(flat_legacy, unified.keys)
+    np.testing.assert_array_equal(np.asarray(legacy.counts), unified.counts)
