@@ -12,40 +12,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, gate_ratio, timeit
 import repro
 from repro.core import sample_sort_sim
 
 CFG = repro.SortConfig(use_pallas=False)
 
 
-def _best_us(fn, *args, warmup=2, iters=7):
-    """Min wall time (us): the contention-robust estimator — the gate
-    below must not flake when CI neighbors steal CPU mid-run."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    return min(_timed(fn, args) for _ in range(iters)) * 1e6
-
-
-def _timed(fn, args):
-    import time
-
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    return time.perf_counter() - t0
-
-
 def planner_overhead():
     """repro.sort (planner dispatch) vs direct sample_sort_sim on the same
     device-resident (p, n) input — both sides block on the sorted values,
-    so the delta is pure front-end cost (plan + SortOutput wrapping)."""
+    so the delta is pure front-end cost (plan + SortOutput wrapping).
+    Gated on ``common.gate_ratio`` (interleaved median-of-N with warmup),
+    so one CI load spike cannot fail the assert."""
     rng = np.random.default_rng(0)
     p, n = 8, 1 << 16
     x = jnp.asarray(rng.normal(0, 1, (p, n)).astype(np.float32))
 
-    us_direct = _best_us(lambda v: sample_sort_sim(v, CFG).values, x)
-    us_via = _best_us(
-        lambda v: repro.sort(v, where="sim", config=CFG).raw.values, x
+    us_via, us_direct = gate_ratio(
+        lambda: repro.sort(x, where="sim", config=CFG).raw.values,
+        lambda: sample_sort_sim(x, CFG).values,
+        warmup=3, iters=9,
     )
     overhead = us_via / us_direct - 1.0
     emit("api_dispatch_direct", us_direct, backend="sim", size=p * n,

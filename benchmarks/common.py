@@ -28,6 +28,36 @@ def timeit(fn, *args, warmup=2, iters=5):
     return float(np.median(ts) * 1e6)
 
 
+def gate_us(fn, *args, warmup=3, iters=9):
+    """Median-of-N wall time (us) after warmup — the estimator for GATED
+    assertions against an absolute bound. A single timing (or a small
+    min-of-N on one side only) flakes when CI neighbors steal CPU
+    mid-run; the median of N post-warmup runs is robust to load spikes
+    in either direction. Same loop as ``timeit``, with deeper defaults
+    because a gate failure aborts the suite."""
+    return timeit(fn, *args, warmup=warmup, iters=iters)
+
+
+def gate_ratio(fn_a, fn_b, *, warmup=2, iters=9):
+    """Paired estimator for gated A-vs-B comparisons: INTERLEAVE the A
+    and B timings so a load spike degrades both sides instead of biasing
+    whichever happened to be running, then compare medians. Returns
+    ``(us_a, us_b)``. This is what every timing gate (planner-overhead,
+    serve-throughput) compares on."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta) * 1e6), float(np.median(tb) * 1e6)
+
+
 def distribution(name: str, rng, p: int, n: int, dtype=np.float32):
     """The paper's Fig. 4 inputs. right_skewed / exponential are quantized
     so they contain heavy duplication (the investigator's regime)."""

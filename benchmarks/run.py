@@ -4,8 +4,11 @@ machine-readable ``BENCH_<suite>.json`` per suite (op, size, dtype,
 backend, wall-time, achieved balance) so the perf trajectory is tracked
 across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|all]
+    PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|serve|all]
                                             [--only fig5,...] [--out-dir .]
+
+The serve suite honors REPRO_SERVE_SMOKE=1 (tiny sizes, correctness-only
+gates — the CI profile; see benchmarks/serve_bench.py).
 """
 import argparse
 import json
@@ -17,15 +20,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--suite", default="paper",
-                    choices=("paper", "external", "api", "all"),
+                    choices=("paper", "external", "api", "serve", "all"),
                     help="paper = in-core tables/figures; external = "
                          "out-of-core + sort-service benchmarks; api = "
-                         "unified-front-end dispatch overhead + matrix")
+                         "unified-front-end dispatch overhead + matrix; "
+                         "serve = async sort-server throughput/latency")
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_<suite>.json files land")
     args = ap.parse_args()
 
-    from benchmarks import api_bench, common, external_sort, ours, paper_figs
+    from benchmarks import (api_bench, common, external_sort, ours,
+                            paper_figs, serve_bench)
 
     suites = {
         "paper": {
@@ -47,6 +52,10 @@ def main() -> None:
         "api": {
             "planner_overhead": api_bench.planner_overhead,
             "api_matrix": api_bench.api_matrix,
+        },
+        "serve": {
+            "serve_throughput": serve_bench.serve_throughput,
+            "serve_latency": serve_bench.serve_latency,
         },
     }
     selected = list(suites) if args.suite == "all" else [args.suite]

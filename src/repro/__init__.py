@@ -12,6 +12,11 @@ The public surface is ONE sort call with planner-driven backend dispatch::
     repro.sort(keys, where=mesh)                 # real-mesh shard_map sort
     repro.sort(chunks_iter, where="stream")      # out-of-core
 
+For serving traffic, ``repro.serve.SortServer`` is the asynchronous
+front end: ``submit() -> SortFuture`` with planner-routed dispatch,
+micro-batching on slot/deadline targets, admission control, and a
+telemetry surface (see ``repro.serve.sortd``).
+
 See ``repro.core.api`` for the full API reference and the deprecation
 table of the legacy ``SortLibrary`` facade.
 """

@@ -21,8 +21,14 @@ where=None, limits=None, config=None, investigator=True)``
             ``jax.sharding.Mesh``, or (mesh, axis_name). Default: the
             planner decides (see ``repro.plan``).
     limits: ``SortLimits`` resource hints (n_procs, chunk_elems,
-            stream_threshold, overflow ladder).
+            stream_threshold, overflow ladder, serving size caps).
     config: ``SortConfig`` tuning knobs (paper defaults).
+
+Documented limitation: jax runs in 32-bit mode here, so 64-bit key and
+value dtypes are rejected at input checking with a ``TypeError`` (for
+iterator/stream inputs, at the first staged chunk) rather than silently
+truncated on device — cast to int32/uint32/float32 first. Note numpy
+defaults Python ints to int64 (``np.arange(n)`` included).
 
 ``repro.plan(...)`` / ``repro.explain(...)``
     Same signature; returns the ``SortPlan`` (backend + reasons) the

@@ -45,6 +45,15 @@ def _overflowed(result) -> bool:
     return bool(np.any(np.asarray(result.overflowed)))
 
 
+def ladder_totals(chunk_retries) -> tuple[int, int]:
+    """Aggregate per-chunk ladder steps (one entry per stream pass-1
+    chunk, or per request in a serving flush) into the accounting the
+    result meta and ``SortServer.stats()`` report:
+    ``(total_ladder_steps, units_that_retried)``."""
+    cr = [int(r) for r in chunk_retries]
+    return sum(cr), sum(1 for r in cr if r > 0)
+
+
 def bump_capacity(config, policy: OverflowPolicy):
     return dataclasses.replace(
         config, capacity_factor=config.capacity_factor * policy.growth

@@ -28,9 +28,34 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core import keyenc, sample_sort, sim
-from repro.core.overflow import OverflowPolicy, run_with_capacity_retry
+from repro.core.overflow import (
+    OverflowPolicy,
+    ladder_totals,
+    run_with_capacity_retry,
+)
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
+
+
+def check_key_dtype(dt, what: str = "keys") -> None:
+    """Reject 64-bit dtypes at the door with an actionable message.
+
+    jax runs in 32-bit mode here: the device sort would silently truncate
+    64-bit keys/payloads, and the int64 padding sentinel overflows deep in
+    the kernel with an opaque error. Applied to key arrays and value
+    payloads at ``repro.sort`` input checking, and to every staged chunk
+    of iterator (stream) inputs — the earliest point their dtype is
+    knowable. Documented limitation; x64-mode support is a ROADMAP item.
+    """
+    if str(dt) == "bfloat16":
+        return  # sorted as f32 on device — supported
+    if np.dtype(str(dt)).itemsize > 4:
+        raise TypeError(
+            f"64-bit {what} ({dt}) need jax x64 mode, which this library "
+            f"runs without: the device sort would truncate to 32 bits and "
+            f"the padding sentinel overflows. Cast to int32/uint32/float32 "
+            f"first (note np defaults Python ints to int64)."
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +71,11 @@ class SortLimits:
       policy (see ``overflow.OverflowPolicy``). The stream backend
       honors max_doublings and growth but always raises when the ladder
       is exhausted — a partially exchanged run cannot be returned.
+    max_request_elems: serving admission control — the async sort server
+      (``repro.serve.sortd``) rejects a single request above this many
+      elements at submit time (``RequestTooLargeError``) so one huge
+      sort cannot monopolize the flush loop. None (default) disables
+      the limit; plain ``repro.sort`` calls ignore it.
     """
 
     n_procs: int = 8
@@ -54,6 +84,7 @@ class SortLimits:
     max_doublings: int = 3
     growth: float = 2.0
     raise_on_overflow: bool = True
+    max_request_elems: int | None = None
 
     def policy(self) -> OverflowPolicy:
         return OverflowPolicy(
@@ -152,15 +183,12 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
             raise ValueError(f"order must be 'asc' or 'desc', got {o!r}")
     descending = tuple(o == "desc" for o in orders)
 
-    def _check_dtype(dt):
-        # jax runs in 32-bit mode here; 64-bit keys would silently
-        # truncate (and the int64 sentinel overflows) — fail at the door
-        if np.dtype(str(dt)).itemsize > 4 and str(dt) != "bfloat16":
-            raise TypeError(
-                f"64-bit keys ({dt}) need jax x64 mode; cast to "
-                f"int32/uint32/float32 first (np defaults Python ints "
-                f"to int64)"
-            )
+    if values is not None:
+        # payloads ride the device sort too: a silently truncated int64
+        # payload is a corrupted result, not a slow one — same door check
+        if not hasattr(values, "dtype"):
+            values = np.asarray(values)
+        check_key_dtype(values.dtype, what="values payload")
 
     is_iterator = not multikey and not hasattr(keys, "dtype")
     if isinstance(keys, list) and keys and not hasattr(keys[0], "dtype"):
@@ -177,9 +205,9 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
         keys = klist
         dtype = klist[0].dtype
         for k in klist:
-            _check_dtype(k.dtype)
+            check_key_dtype(k.dtype)
     elif not is_iterator:
-        _check_dtype(keys.dtype)
+        check_key_dtype(keys.dtype)
         dtype = np.dtype(str(keys.dtype)) if keys.dtype != "bfloat16" else keys.dtype
         if getattr(keys, "ndim", 1) == 2:
             n_local = int(keys.shape[1])
@@ -533,8 +561,27 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
         enc = np.asarray(enc).reshape(-1)
     meta = _meta(req, plan, "stream", req.config, 0)
 
+    # per-chunk ladder accounting: pass 1 fills stats["chunk_retries"]
+    # when it runs (lazily, at materialization / first chunk), and the
+    # meta is updated in place — SortMeta is mutable for exactly this
+    stats: dict = {}
+
+    def _account() -> None:
+        cr = stats.get("chunk_retries")
+        if cr is not None:
+            meta.chunk_retries = tuple(cr)
+            meta.retries, _ = ladder_totals(cr)
+
+    def _accounted(g):
+        for c in g:
+            _account()  # pass 1 has run once the first chunk arrives
+            yield c
+        _account()
+
     if payload is None:
-        gen = sort_stream(enc, scfg, investigator=req.investigator)
+        gen = _accounted(
+            sort_stream(enc, scfg, investigator=req.investigator, stats=stats)
+        )
         if reverse:
             out = SortOutput(meta, materialize=None)
 
@@ -555,7 +602,9 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
     vflat = np.asarray(payload).reshape(-1)
 
     def materialize():
-        ks, vs = sort_external_kv(enc, vflat, scfg, investigator=req.investigator)
+        ks, vs = sort_external_kv(enc, vflat, scfg,
+                                  investigator=req.investigator, stats=stats)
+        _account()
         if req.want == "order":
             vs = _stable_order_fix(ks, vs)
         if descending:
@@ -635,11 +684,14 @@ def make_plan(keys, values=None, *, order="asc", want="values", where=None,
     return _make_plan(req, where, limits)
 
 
-def execute(keys, values=None, *, order="asc", want="values", where=None,
-            limits=None, config=None, investigator=True) -> SortOutput:
-    req = _normalize(keys, values, order=order, want=want, config=config,
-                     investigator=investigator)
-    plan = _make_plan(req, where, limits)
+def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
+    """Execute an already-normalized request on an already-made plan.
+
+    ``repro.sort`` plans and dispatches in one call; the async serving
+    front end (``repro.serve.sortd``) plans every request at admission
+    time (via ``serve_profile``) and dispatches later from its flush
+    loop — both funnel through here, so serving traffic cannot bypass
+    the planner's backend decision."""
     if req.n == 0:
         meta = _meta(req, plan, plan.backend, req.config, 0)
         if req.multikey:
@@ -654,3 +706,38 @@ def execute(keys, values=None, *, order="asc", want="values", where=None,
     if req.multikey:
         return _exec_multikey(req, plan)
     return BACKENDS[plan.backend].execute(req, plan)
+
+
+def serve_profile(keys, values=None, *, order="asc", want="values",
+                  where=None, limits=None, config=None, investigator=True):
+    """Normalize + plan one serving request, and decide coalescability.
+
+    Returns ``(req, plan, batchable)``. ``batchable`` is True when the
+    request may be stacked into ONE vmapped same-shape-bucket program by
+    the async sort server's flush engine: a plain ascending single-key
+    keys-only sort that the planner routed to the sim backend. Anything
+    else (payloads, argsort, descending, multi-key, (p, n_local) global
+    views, stream-/mesh-bound requests) must dispatch through
+    ``execute_request`` individually — still planner-routed, just not
+    vmap-coalesced."""
+    req = _normalize(keys, values, order=order, want=want, config=config,
+                     investigator=investigator)
+    plan = _make_plan(req, where, limits)
+    batchable = (
+        plan.backend == "sim"
+        and not req.multikey
+        and not req.needs_payload
+        and not any(req.descending)
+        and req.n_local is None
+        and not req.is_iterator
+        and req.n > 0
+    )
+    return req, plan, batchable
+
+
+def execute(keys, values=None, *, order="asc", want="values", where=None,
+            limits=None, config=None, investigator=True) -> SortOutput:
+    req = _normalize(keys, values, order=order, want=want, config=config,
+                     investigator=investigator)
+    plan = _make_plan(req, where, limits)
+    return execute_request(req, plan)

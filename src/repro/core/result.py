@@ -27,8 +27,16 @@ class SortMeta:
     config: the SortConfig actually used — after any capacity retries.
     retries: capacity-ladder steps taken by the unified overflow policy.
       The stream backend sorts many chunks, each walking its own ladder
-      inside run generation, so it reports the requested config and
-      retries=0 (per-chunk ladder accounting is a ROADMAP follow-on).
+      inside run generation; it reports the SUM of per-chunk ladder
+      steps here (filled in at materialization, when pass 1 has actually
+      run) and the per-chunk breakdown on ``chunk_retries``.
+    chunk_retries: stream backend only — capacity-ladder steps per
+      pass-1 chunk, in chunk order (None elsewhere, and before the
+      stream pipeline has materialized).
+    coalesced: set by the async sort server (``repro.serve.sortd``) on
+      results that were executed as part of a vmapped same-shape-bucket
+      batch: the number of requests that shared the flush. None for
+      ordinary ``repro.sort`` calls.
     n_local: per-processor row length when the input arrived in the
       (p, n_local) global-view layout (enables provenance decoding).
     """
@@ -43,6 +51,8 @@ class SortMeta:
     n_keys: int = 1
     n_local: int | None = None
     dtype: Any = None
+    chunk_retries: tuple | None = None
+    coalesced: int | None = None
 
 
 class SortOutput:

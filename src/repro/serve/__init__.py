@@ -1,0 +1,30 @@
+"""Serving layer: sort serving (``sortd``) + model serving (``engine``,
+``batching``).
+
+``sortd`` is the asynchronous, latency-targeted sort front end —
+``SortServer.submit -> SortFuture`` with planner-driven dispatch, the
+slot/deadline flush model of ``batching.py`` applied to sort traffic.
+
+The model-serving pieces pull in the full transformer stack, so they are
+exposed as lazy attributes: importing ``repro.serve`` for ``SortServer``
+does not build models.
+"""
+from repro.serve.sortd import (
+    QueueFullError,
+    RequestTooLargeError,
+    SortFuture,
+    SortServer,
+)
+
+__all__ = [
+    "SortServer", "SortFuture", "QueueFullError", "RequestTooLargeError",
+    "ContinuousBatcher",
+]
+
+
+def __getattr__(name):
+    if name in ("ContinuousBatcher", "Request", "Completion"):
+        from repro.serve import batching
+
+        return getattr(batching, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

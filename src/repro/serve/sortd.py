@@ -1,0 +1,382 @@
+"""repro.serve.sortd — asynchronous, latency-targeted sort serving.
+
+The synchronous ``stream.service.SortService`` blocks every caller until
+a whole flush completes. This module is the PGX.D-style "let the process
+continue without waiting" front end for sort traffic:
+
+* ``SortServer.submit(keys, values=None, **sort_kwargs)`` returns a
+  ``SortFuture`` immediately; a background flush loop coalesces
+  same-shape-bucket requests and fires a batch when EITHER ``max_batch``
+  requests share a bucket OR the oldest request in it has waited
+  ``max_delay_ms`` — the ``serve/batching.py`` slot-scheduler model
+  applied to sorts.
+* Dispatch is planner-driven: every request is planned at admission time
+  with ``repro.sort``'s machinery (``core.planner.serve_profile``).
+  Plain ascending single-key keys-only requests that the planner routes
+  to the sim backend coalesce into ONE vmapped program per shape bucket
+  (the ``stream.service.FlushEngine`` shared with the sync service);
+  everything else — kv payloads, argsort, descending, multi-key,
+  stream- or mesh-bound requests — dispatches through
+  ``core.planner.execute_request`` individually on a small worker pool
+  (so a seconds-long out-of-core sort cannot head-of-line block the
+  flush loop's deadlines), landing on any registered backend.
+* Overload degrades predictably: the pending queue is bounded
+  (``QueueFullError`` carries a ``retry_after_ms`` hint so clients can
+  back off instead of hammering), and single requests above
+  ``SortLimits.max_request_elems`` are rejected at admission
+  (``RequestTooLargeError``) before they can monopolize the flush loop.
+* ``stats()`` exposes queue depth, p50/p99 request latency, mean batch
+  occupancy, compiled-program cache hits, and overflow-ladder retries —
+  the telemetry surface ``benchmarks/serve_bench.py`` and autoscalers
+  consume.
+
+Every future resolves to a ``SortOutput`` (or raises the request's
+terminal error), so async results read exactly like ``repro.sort``
+results. Coalesced batch results carry ``meta.coalesced`` (how many
+requests shared the vmapped flush) and, being keys-only, have no
+``counts``/``values`` views.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import planner
+from repro.core.result import SortMeta, SortOutput
+from repro.core.splitters import SortConfig
+from repro.stream.service import FlushEngine
+
+
+class QueueFullError(RuntimeError):
+    """Admission control rejected the request: the server already holds
+    ``max_queue`` pending requests. ``retry_after_ms`` is the server's
+    estimate of when capacity frees (the next flush deadline) — clients
+    should back off at least that long before resubmitting."""
+
+    def __init__(self, msg: str, retry_after_ms: float):
+        super().__init__(msg)
+        self.retry_after_ms = float(retry_after_ms)
+
+
+class RequestTooLargeError(ValueError):
+    """A single request exceeded ``SortLimits.max_request_elems``."""
+
+
+class SortFuture(Future):
+    """``concurrent.futures.Future`` resolving to the request's
+    ``SortOutput``. ``cancel()`` succeeds while the request is still
+    queued (before its flush starts); ``result(timeout)`` / ``done()`` /
+    ``exception()`` / ``add_done_callback()`` behave as in the stdlib."""
+
+
+class _Pending:
+    """One admitted request waiting in a bucket."""
+
+    __slots__ = ("fut", "req", "plan", "data", "t_submit")
+
+    def __init__(self, fut, req, plan, data, t_submit):
+        self.fut = fut
+        self.req = req          # normalized planner request (direct path)
+        self.plan = plan        # SortPlan made at admission
+        self.data = data        # flat np array (coalescable path), else None
+        self.t_submit = t_submit
+
+
+class SortServer:
+    """Asynchronous micro-batching sort server with latency targets.
+
+    max_batch: a shape bucket flushes as soon as it holds this many
+      requests (slot target). Also the vmapped-program batch cap of the
+      shared ``FlushEngine``.
+    max_delay_ms: latency deadline — a nonempty bucket flushes when its
+      OLDEST request has waited this long, so a lone request never waits
+      for a full batch. Non-coalescable requests dispatch on the next
+      loop wakeup (no artificial delay: batching cannot help them).
+    max_queue: admission bound on pending requests across all buckets;
+      submits beyond it raise ``QueueFullError`` with a retry-after hint.
+    limits / config / investigator: planner defaults for every request
+      (overridable per submit). ``limits.n_procs`` shapes the engine's
+      grid; ``limits.max_request_elems`` is the per-request size cap.
+    direct_workers: worker threads for non-coalescable dispatches. A
+      stream/mesh request can run for seconds; executing it inline in
+      the flush loop would head-of-line block every coalescable bucket
+      past its deadline, so direct requests run on this small pool while
+      the loop keeps servicing slot/deadline targets.
+
+    The server starts its flush thread on construction; use it as a
+    context manager (or call ``close()``) to drain and stop it.
+    """
+
+    def __init__(self, *, max_batch: int = 16, max_delay_ms: float = 5.0,
+                 max_queue: int = 1024, limits=None,
+                 config: SortConfig | None = None, investigator: bool = True,
+                 direct_workers: int = 2, latency_window: int = 2048):
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay_ms) / 1e3
+        self.max_queue = int(max_queue)
+        self.limits = limits if limits is not None else planner.SortLimits()
+        self.config = config if config is not None else SortConfig()
+        self.investigator = investigator
+        self._stats = {
+            "submitted": 0, "completed": 0, "failed": 0, "cancelled": 0,
+            "rejected": 0, "flushes": 0, "flushed_requests": 0,
+        }
+        self._engine = FlushEngine(
+            config=self.config, n_procs=self.limits.n_procs,
+            investigator=self.investigator,
+            max_doublings=self.limits.max_doublings,
+            growth=self.limits.growth,
+            max_batch=self.max_batch, stats=self._stats,
+        )
+        self._direct_pool = ThreadPoolExecutor(
+            max_workers=int(direct_workers), thread_name_prefix="sortd-direct"
+        )
+        # request latencies (submit -> resolve, seconds); appended and
+        # snapshotted under the condition lock — stats() iterates it
+        self._lat: deque[float] = deque(maxlen=int(latency_window))
+        self._cond = threading.Condition()
+        self._buckets: dict[tuple, list[_Pending]] = {}
+        self._depth = 0
+        self._seq = 0
+        self._closed = False
+        self._force = False
+        self._thread = threading.Thread(
+            target=self._loop, name="sortd-flush", daemon=True
+        )
+        self._thread.start()
+
+    # ------------------------------------------------------------ client
+    def submit(self, keys, values=None, *, order="asc", want="values",
+               where=None, limits=None, config=None,
+               investigator=None) -> SortFuture:
+        """Plan + enqueue one sort request; returns immediately.
+
+        Accepts ``repro.sort``'s keyword surface; per-request overrides
+        fall back to the server defaults. Raises ``TypeError`` /
+        ``ValueError`` for invalid requests, ``RequestTooLargeError`` and
+        ``QueueFullError`` for admission failures — all synchronously at
+        submit, never on the future."""
+        cfg = config if config is not None else self.config
+        inv = self.investigator if investigator is None else investigator
+        lim = limits if limits is not None else self.limits
+        req, plan, batchable = planner.serve_profile(
+            keys, values, order=order, want=want, where=where,
+            limits=lim, config=cfg, investigator=inv,
+        )
+        cap = lim.max_request_elems
+        if cap is not None and (req.n or 0) > cap:
+            raise RequestTooLargeError(
+                f"request of {req.n} elements exceeds "
+                f"SortLimits.max_request_elems={cap}; split it or sort it "
+                f"directly with repro.sort"
+            )
+        # a request may only join a vmapped batch when it would both
+        # compile against the engine's exact program (config / grid /
+        # investigator) AND walk the engine's exact overflow ladder — a
+        # caller asking for a different retry policy must not silently
+        # inherit the server's
+        batchable = (
+            batchable and cfg == self.config and inv == self.investigator
+            and lim.n_procs == self.limits.n_procs
+            and lim.max_doublings == self.limits.max_doublings
+            and lim.growth == self.limits.growth
+        )
+        data = np.asarray(req.keys).reshape(-1) if batchable else None
+
+        fut = SortFuture()
+        now = time.monotonic()
+        pend = _Pending(fut, req, plan, data, now)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("SortServer is closed")
+            if self._depth >= self.max_queue:
+                self._stats["rejected"] += 1
+                raise QueueFullError(
+                    f"sort queue full ({self.max_queue} pending requests)",
+                    retry_after_ms=self._retry_after_ms(now),
+                )
+            if batchable:
+                key = ("batch",) + self._engine.bucket_key(data)
+            else:
+                self._seq += 1
+                key = ("direct", self._seq)
+            self._buckets.setdefault(key, []).append(pend)
+            self._depth += 1
+            self._stats["submitted"] += 1
+            self._cond.notify()
+        return fut
+
+    def sort_many_async(self, arrays, **sort_kwargs) -> list[SortOutput]:
+        """Submit every array, then wait for all: micro-batched execution
+        behind a synchronous signature (the async ``sort_many``)."""
+        futs = [self.submit(a, **sort_kwargs) for a in arrays]
+        return [f.result() for f in futs]
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Force-flush everything queued now and block until it resolves
+        (deadlines and slot targets are bypassed once)."""
+        with self._cond:
+            futs = [p.fut for pends in self._buckets.values() for p in pends]
+            self._force = True
+            self._cond.notify()
+        for f in futs:
+            try:
+                f.result(timeout)
+            except Exception:
+                pass  # the error belongs to that future's owner
+
+    def stats(self) -> dict:
+        """Telemetry snapshot: queue depth, latency percentiles (ms),
+        batch occupancy, program-cache and overflow-ladder counters."""
+        with self._cond:
+            s = dict(self._stats)
+            depth = self._depth
+            lat_ms = np.asarray(self._lat, np.float64) * 1e3
+        flushes = s["flushes"]
+        s.update(
+            queue_depth=depth,
+            occupancy_mean=(s["flushed_requests"] / flushes) if flushes else 0.0,
+            latency_ms_p50=float(np.percentile(lat_ms, 50)) if lat_ms.size else None,
+            latency_ms_p99=float(np.percentile(lat_ms, 99)) if lat_ms.size else None,
+        )
+        return s
+
+    def close(self, timeout: float | None = None) -> None:
+        """Drain every queued request, then stop the flush thread and the
+        direct-dispatch pool (waiting for in-flight direct requests)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify()
+        self._thread.join(timeout)
+        self._direct_pool.shutdown(wait=True)
+
+    def __enter__(self) -> "SortServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------- flush loop
+    def _deadline(self, key: tuple, pends: list[_Pending]) -> float:
+        # oldest request anchors the bucket deadline; direct requests get
+        # no artificial delay — batching cannot help them
+        delay = self.max_delay if key[0] == "batch" else 0.0
+        return pends[0].t_submit + delay
+
+    def _retry_after_ms(self, now: float) -> float:
+        """Called under the lock: time until the next flush frees slots."""
+        deadlines = [
+            self._deadline(k, p) for k, p in self._buckets.items() if p
+        ]
+        if not deadlines:
+            return self.max_delay * 1e3
+        return max(0.0, min(deadlines) - now) * 1e3
+
+    def _select_ready(self, now: float) -> list[tuple]:
+        ready = []
+        for key, pends in self._buckets.items():
+            if not pends:
+                continue
+            full = key[0] == "batch" and len(pends) >= self.max_batch
+            if self._force or self._closed or full or self._deadline(key, pends) <= now:
+                ready.append(key)
+        return ready
+
+    def _wait_timeout(self, now: float) -> float | None:
+        deadlines = [
+            self._deadline(k, p) for k, p in self._buckets.items() if p
+        ]
+        if not deadlines:
+            return None  # sleep until a submit notifies
+        return max(0.0, min(deadlines) - now)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    now = time.monotonic()
+                    ready = self._select_ready(now)
+                    if ready:
+                        break
+                    self._force = False  # nothing left to force-flush
+                    if self._closed:
+                        return
+                    self._cond.wait(self._wait_timeout(now))
+                # force selects every nonempty bucket, so it is spent here
+                self._force = False
+                work = [(k, self._buckets.pop(k)) for k in ready]
+                self._depth -= sum(len(p) for _, p in work)
+            for key, pends in work:
+                self._flush_group(key, pends)
+
+    # --------------------------------------------------------- execution
+    def _flush_group(self, key: tuple, pends: list[_Pending]) -> None:
+        live = [p for p in pends if p.fut.set_running_or_notify_cancel()]
+        cancelled = len(pends) - len(live)
+        if cancelled:
+            with self._cond:
+                self._stats["cancelled"] += cancelled
+        if not live:
+            return
+        with self._cond:
+            self._stats["flushes"] += 1
+            self._stats["flushed_requests"] += len(live)
+        if key[0] == "batch":
+            try:
+                results = self._engine.run_group([p.data for p in live])
+            except Exception as e:  # noqa: BLE001 — an unexpected error
+                # (XLA compile/runtime failure, MemoryError staging the
+                # batch, ...) must fail THESE futures, never kill the
+                # flush thread and strand every later request
+                for p in live:
+                    self._fail(p, e)
+                return
+            for p, (res, retries) in zip(live, results):
+                if isinstance(res, Exception):
+                    self._fail(p, res)
+                else:
+                    self._resolve(
+                        p, self._wrap_batched(p, res, len(live), retries))
+        else:
+            for p in live:
+                # off the flush loop: a slow stream/mesh dispatch must
+                # not hold coalescable buckets past their deadline
+                self._direct_pool.submit(self._dispatch_direct, p)
+
+    def _dispatch_direct(self, p: _Pending) -> None:
+        try:
+            out = planner.execute_request(p.req, p.plan)
+            # materialize HERE so terminal errors land on the future (not
+            # in the caller's .keys access) and the stream backend's
+            # ladder accounting is complete
+            _ = out.keys
+            with self._cond:
+                self._stats["retries"] += int(out.meta.retries)
+            self._resolve(p, out)
+        except Exception as e:  # noqa: BLE001 — future owns it
+            self._fail(p, e)
+
+    def _wrap_batched(self, p: _Pending, arr: np.ndarray,
+                      occupancy: int, retries: int) -> SortOutput:
+        meta = SortMeta(
+            backend="sim", plan=p.plan, config=self.config,
+            n=p.req.n or 0, want="values", order="asc",
+            dtype=p.req.dtype, coalesced=occupancy, retries=retries,
+        )
+        return SortOutput(meta, keys=arr)
+
+    def _resolve(self, p: _Pending, out: SortOutput) -> None:
+        with self._cond:
+            self._lat.append(time.monotonic() - p.t_submit)
+            self._stats["completed"] += 1
+        p.fut.set_result(out)
+
+    def _fail(self, p: _Pending, e: Exception) -> None:
+        with self._cond:
+            self._lat.append(time.monotonic() - p.t_submit)
+            self._stats["failed"] += 1
+        p.fut.set_exception(e)

@@ -36,12 +36,17 @@ from repro.stream.external_merge import (
     merge_segments_kv,
 )
 from repro.stream.driver import sort_external, sort_external_kv, sort_stream
-from repro.stream.service import SortRequest, SortService, SortServiceError
+from repro.stream.service import (
+    FlushEngine,
+    SortRequest,
+    SortService,
+    SortServiceError,
+)
 
 __all__ = [
     "Run", "StreamConfig", "generate_runs", "iter_chunks",
     "Partition", "partition_runs", "select_stream_splitters",
     "external_merge", "external_merge_kv", "merge_segments", "merge_segments_kv",
     "sort_external", "sort_external_kv", "sort_stream",
-    "SortRequest", "SortService", "SortServiceError",
+    "FlushEngine", "SortRequest", "SortService", "SortServiceError",
 ]

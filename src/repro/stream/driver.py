@@ -18,10 +18,17 @@ from repro.stream.runs import StreamConfig, generate_runs
 
 
 def _pipeline(
-    data, cfg: StreamConfig, values=None, *, investigator: bool = True
+    data, cfg: StreamConfig, values=None, *, investigator: bool = True,
+    stats: dict | None = None,
 ) -> Partition | None:
-    """None = empty dataset (np.sort of empty is empty, so no error)."""
+    """None = empty dataset (np.sort of empty is empty, so no error).
+
+    ``stats`` (optional, mutated) receives ``chunk_retries`` — the
+    per-chunk capacity-ladder steps of pass 1, which the planner threads
+    into ``SortOutput.meta`` ladder accounting."""
     runs = generate_runs(data, cfg, values, investigator=investigator)
+    if stats is not None:
+        stats["chunk_retries"] = [r.retries for r in runs]
     if not runs:
         return None
     return partition_runs(runs, cfg, investigator=investigator)
@@ -38,10 +45,12 @@ def sort_stream(
     cfg: StreamConfig = StreamConfig(),
     *,
     investigator: bool = True,
+    stats: dict | None = None,
 ) -> Iterator[np.ndarray]:
     """Out-of-core sort, streamed: yields ascending sorted chunks whose
-    concatenation equals np.sort(data). Peak device memory is O(chunk)."""
-    part = _pipeline(data, cfg, investigator=investigator)
+    concatenation equals np.sort(data). Peak device memory is O(chunk).
+    ``stats`` (optional dict) collects pass-1 ladder accounting."""
+    part = _pipeline(data, cfg, investigator=investigator, stats=stats)
     if part is None:
         return
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
@@ -55,9 +64,10 @@ def sort_external(
     cfg: StreamConfig = StreamConfig(),
     *,
     investigator: bool = True,
+    stats: dict | None = None,
 ) -> np.ndarray:
     """Out-of-core sort, materialized on host."""
-    chunks = list(sort_stream(data, cfg, investigator=investigator))
+    chunks = list(sort_stream(data, cfg, investigator=investigator, stats=stats))
     if not chunks:
         return _empty_like(data)
     return np.concatenate(chunks)
@@ -69,10 +79,11 @@ def sort_external_kv(
     cfg: StreamConfig = StreamConfig(),
     *,
     investigator: bool = True,
+    stats: dict | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Out-of-core key/value sort (the payload — e.g. provenance indices —
     rides every pass: run generation, partitioning and the final merge)."""
-    part = _pipeline(keys, cfg, values, investigator=investigator)
+    part = _pipeline(keys, cfg, values, investigator=investigator, stats=stats)
     if part is None:
         return _empty_like(keys), _empty_like(values)
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems

@@ -68,10 +68,13 @@ class StreamConfig:
 class Run:
     """One sorted, device-capacity-sized fragment of the dataset, resident
     on host. ``values`` (same order as ``keys``) is None for key-only
-    sorts."""
+    sorts. ``retries`` is the number of capacity-ladder steps this
+    chunk's sort took (0 = first attempt fit) — the drivers aggregate it
+    into ``SortOutput.meta`` ladder accounting."""
 
     keys: np.ndarray
     values: np.ndarray | None = None
+    retries: int = 0
 
     def __len__(self) -> int:
         return int(self.keys.shape[0])
@@ -138,8 +141,9 @@ def generate_runs(
         dev_k, dev_v, res, sort_cfg, m = state
         # unified capacity ladder (core.overflow) — recompiles, but
         # steady-state inputs converge to one program
+        retries = 0
         if bool(res.overflowed):
-            res, sort_cfg, _ = overflow.retry_overflowed(
+            res, sort_cfg, retries = overflow.retry_overflowed(
                 lambda c: dispatch(dev_k, dev_v, c),
                 sort_cfg,
                 overflow.OverflowPolicy(
@@ -148,13 +152,15 @@ def generate_runs(
                 last=res,
             )
         if dev_v is None:
-            return Run(_unpad(res.values, res.counts, m))
+            return Run(_unpad(res.values, res.counts, m), retries=retries)
         return Run(
-            _unpad(res.keys, res.counts, m), _unpad(res.values, res.counts, m)
+            _unpad(res.keys, res.counts, m), _unpad(res.values, res.counts, m),
+            retries=retries,
         )
 
     for chunk in key_chunks:
         m = int(chunk.shape[0])
+        planner_grid.check_key_dtype(chunk.dtype, what="stream chunk keys")
         kfill = np.asarray(kops.sentinel_for(jnp.dtype(chunk.dtype)))
         # H2D of the NEXT chunk goes on the wire while the previous
         # chunk's sort is still executing (async dispatch) — the
@@ -165,6 +171,7 @@ def generate_runs(
             vchunk = next(val_chunks, None)
             if vchunk is None or vchunk.shape[0] != m:
                 raise ValueError("values must chunk identically to keys")
+            planner_grid.check_key_dtype(vchunk.dtype, what="stream chunk values")
             vfill = np.asarray(kops.sentinel_for(jnp.dtype(vchunk.dtype)))
             dev_v = jax.device_put(_pad_chunk(vchunk, p, per, vfill))
         if inflight is not None:

@@ -14,6 +14,15 @@ after the ladder fails alone: the rest of the flush completes first, and
 the ``SortServiceError`` raised at the end carries the completed results
 (``.results``) alongside the failures (``.errors``), so survivors are
 never lost.
+
+``SortService`` here is the SYNCHRONOUS front end: ``submit`` enqueues
+and ``flush`` blocks the caller until the whole queue has executed. The
+asynchronous, latency-targeted front end — futures, a background flush
+loop with ``max_batch``/``max_delay_ms`` targets, admission control and
+backpressure — lives in ``repro.serve.sortd.SortServer``; new serving
+code should start there. Both share the ``FlushEngine`` below, so sync
+and async flushes cannot diverge in padding, program caching, or
+overflow-ladder behavior.
 """
 from __future__ import annotations
 
@@ -66,6 +75,103 @@ class SortRequest:
     data: np.ndarray  # flat, any supported key dtype
 
 
+class FlushEngine:
+    """The shared flush core of the sync ``SortService`` and the async
+    ``repro.serve.sortd.SortServer``.
+
+    Owns the shape-bucketed ``ProgramCache`` and the per-request overflow
+    ladder; callers own queueing, admission and error policy.
+    ``run_group`` executes one shape bucket's requests (slicing into
+    ``max_batch``-sized vmapped programs) and returns, per request,
+    ``(sorted array | terminal SortOverflowError, ladder_steps)`` —
+    callers decide whether to raise, collect, or fail a future with the
+    error, and surface the ladder accounting on their result meta."""
+
+    def __init__(self, *, config: SortConfig = SortConfig(), n_procs: int = 8,
+                 investigator: bool = True, max_doublings: int = 3,
+                 growth: float = 2.0, max_batch: int = 64,
+                 stats: dict | None = None):
+        self.config = config
+        self.n_procs = n_procs
+        self.investigator = investigator
+        self.max_doublings = max_doublings
+        self.growth = growth
+        self.max_batch = max_batch
+        self.stats = stats if stats is not None else {}
+        for k in ("programs", "hits", "batches", "retries"):
+            self.stats.setdefault(k, 0)
+        self.cache = ProgramCache(self.stats)
+
+    @property
+    def policy(self) -> OverflowPolicy:
+        return OverflowPolicy(max_doublings=self.max_doublings,
+                              growth=self.growth)
+
+    def bucket_elems(self, n: int) -> int:
+        """Pad target: next power of two, at least one element per proc."""
+        return _next_pow2(max(n, self.n_procs))
+
+    def bucket_key(self, data: np.ndarray) -> tuple:
+        """Requests with equal bucket keys may share one vmapped program."""
+        return (self.bucket_elems(data.shape[0]), data.dtype.str)
+
+    def run_group(self, datas: list[np.ndarray]) -> list[tuple]:
+        """Execute one shape bucket's flat arrays; per entry,
+        ``(sorted array | terminal exception, ladder_steps)``."""
+        elems = self.bucket_elems(datas[0].shape[0])
+        out: list = []
+        for i in range(0, len(datas), self.max_batch):
+            out.extend(self._run_batch(datas[i : i + self.max_batch], elems))
+        return out
+
+    def _run_batch(self, datas: list[np.ndarray], elems: int) -> list[tuple]:
+        p = self.n_procs
+        per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
+        dtype = datas[0].dtype
+        fill = np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
+        b = _next_pow2(len(datas))
+        batch = np.full((b, p, per), fill, dtype)
+        for i, d in enumerate(datas):
+            batch[i] = _pad_chunk(d, p, per, fill)
+
+        fn = self.cache.get(b, p, per, dtype, self.config, self.investigator)
+        res = fn(jnp.asarray(batch))
+        self.stats["batches"] += 1
+
+        overflowed = np.asarray(res.overflowed)
+        values = np.asarray(res.values)  # one D2H transfer for the batch
+        counts = np.asarray(res.counts)
+        out: list = []
+        for i, d in enumerate(datas):
+            if overflowed[i]:
+                try:
+                    out.append(self._retry_one(d, elems))
+                except SortOverflowError as e:
+                    out.append((e, self.max_doublings))
+                continue
+            out.append((_unpad(values[i], counts[i], d.shape[0]), 0))
+        return out
+
+    def _retry_one(self, data: np.ndarray, elems: int) -> tuple:
+        """Unified capacity ladder for a single overflowed request — the
+        batched attempt at ``self.config`` counts as the failed initial
+        attempt, so the ladder starts at the first capacity bump exactly
+        like ``repro.sort``'s overflow policy would. Returns
+        ``(sorted array, ladder_steps_taken)``."""
+        p, per = self.n_procs, -(-elems // self.n_procs)
+        fill = np.asarray(kops.sentinel_for(jnp.dtype(data.dtype)))
+        x = jnp.asarray(_pad_chunk(data, p, per, fill))
+
+        def on_retry(_cfg):
+            self.stats["retries"] += 1
+
+        r, _cfg, n = retry_overflowed(
+            lambda cfg: sim.sample_sort_sim(x, cfg, investigator=self.investigator),
+            self.config, self.policy, on_retry=on_retry,
+        )
+        return _unpad(r.values, r.counts, data.shape[0]), n
+
+
 class SortServiceError(RuntimeError):
     """Some requests failed terminally. ``results`` holds the flush's
     completed sorts (rid -> array); ``errors`` the per-rid failures."""
@@ -96,15 +202,18 @@ class SortService:
         self._queue: list[SortRequest] = []
         self._next_rid = 0
         self.stats = {"programs": 0, "hits": 0, "batches": 0, "retries": 0}
-        self._cache = ProgramCache(self.stats)
+        self._engine = FlushEngine(
+            config=self.config, n_procs=self.n_procs,
+            investigator=self.investigator, max_doublings=self.max_doublings,
+            max_batch=self.max_batch, stats=self.stats,
+        )
 
     @property
     def policy(self) -> OverflowPolicy:
-        return OverflowPolicy(max_doublings=self.max_doublings)
+        return self._engine.policy
 
     def _bucket_elems(self, n: int) -> int:
-        """Pad target: next power of two, at least one element per proc."""
-        return _next_pow2(max(n, self.n_procs))
+        return self._engine.bucket_elems(n)
 
     # ---------------------------------------------------------- batching
     def submit(self, data: np.ndarray) -> int:
@@ -123,17 +232,19 @@ class SortService:
         results, so one hopeless request never destroys its batch-mates."""
         groups: dict[tuple, list[SortRequest]] = {}
         for req in self._queue:
-            k = (self._bucket_elems(req.data.shape[0]), req.data.dtype.str)
-            groups.setdefault(k, []).append(req)
+            groups.setdefault(self._engine.bucket_key(req.data), []).append(req)
         self._queue = []
         out: dict[int, np.ndarray] = {}
         errors: dict[int, Exception] = {}
-        for (elems, _), reqs in groups.items():
-            for i in range(0, len(reqs), self.max_batch):
-                part = reqs[i : i + self.max_batch]
-                for req, res in zip(part, self._run_batch(part, elems, errors)):
-                    if res is not None:
-                        out[req.rid] = res
+        for reqs in groups.values():
+            results = self._engine.run_group([r.data for r in reqs])
+            for req, (res, _retries) in zip(reqs, results):
+                if isinstance(res, Exception):
+                    errors[req.rid] = RuntimeError(
+                        f"sort request rid={req.rid}: {res}"
+                    )
+                else:
+                    out[req.rid] = res
         if errors:
             rids = sorted(errors)
             raise SortServiceError(
@@ -152,56 +263,3 @@ class SortService:
 
     def sort(self, x: np.ndarray) -> np.ndarray:
         return self.sort_many([x])[0]
-
-    # ---------------------------------------------------------- execution
-    def _run_batch(
-        self, reqs: list[SortRequest], elems: int, errors: dict[int, Exception]
-    ) -> list[np.ndarray | None]:
-        p = self.n_procs
-        per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
-        dtype = reqs[0].data.dtype
-        fill = np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
-        b = _next_pow2(len(reqs))
-        batch = np.full((b, p, per), fill, dtype)
-        for i, req in enumerate(reqs):
-            batch[i] = _pad_chunk(req.data, p, per, fill)
-
-        fn = self._cache.get(b, p, per, dtype, self.config, self.investigator)
-        res = fn(jnp.asarray(batch))
-        self.stats["batches"] += 1
-
-        overflowed = np.asarray(res.overflowed)
-        values = np.asarray(res.values)  # one D2H transfer for the batch
-        counts = np.asarray(res.counts)
-        out: list[np.ndarray | None] = []
-        for i, req in enumerate(reqs):
-            if overflowed[i]:
-                try:
-                    out.append(self._retry_one(req))
-                except SortOverflowError as e:
-                    errors[req.rid] = RuntimeError(
-                        f"sort request rid={req.rid}: {e}"
-                    )
-                    out.append(None)
-                continue
-            out.append(_unpad(values[i], counts[i], req.data.shape[0]))
-        return out
-
-    def _retry_one(self, req: SortRequest) -> np.ndarray:
-        """Unified capacity ladder for a single overflowed request — the
-        batched attempt at ``self.config`` counts as the failed initial
-        attempt, so the ladder starts at the first capacity bump exactly
-        like ``repro.sort``'s overflow policy would."""
-        elems = self._bucket_elems(req.data.shape[0])
-        p, per = self.n_procs, -(-elems // self.n_procs)
-        fill = np.asarray(kops.sentinel_for(jnp.dtype(req.data.dtype)))
-        x = jnp.asarray(_pad_chunk(req.data, p, per, fill))
-
-        def on_retry(_cfg):
-            self.stats["retries"] += 1
-
-        r, _cfg, _n = retry_overflowed(
-            lambda cfg: sim.sample_sort_sim(x, cfg, investigator=self.investigator),
-            self.config, self.policy, on_retry=on_retry,
-        )
-        return _unpad(r.values, r.counts, req.data.shape[0])

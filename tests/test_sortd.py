@@ -1,0 +1,306 @@
+"""Async sort serving (repro.serve.sortd): concurrent multi-client
+correctness, deadline-triggered flushes, backpressure/cancel, planner
+routing across backends, and overflow-ladder accounting."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.splitters import SortConfig
+from repro.serve import (
+    QueueFullError,
+    RequestTooLargeError,
+    SortFuture,
+    SortServer,
+)
+
+CFG = SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(n_procs=4)
+RNG = np.random.default_rng(0)
+
+
+def _server(**kw):
+    kw.setdefault("config", CFG)
+    kw.setdefault("limits", LIMITS)
+    return SortServer(**kw)
+
+
+def _paused_server(**kw):
+    """A server whose deadline/slot targets never fire on their own:
+    requests sit queued until an explicit flush() — the admission-control
+    and cancel tests need the queue to hold still."""
+    return _server(max_batch=10_000, max_delay_ms=600_000, **kw)
+
+
+# ---------------------------------------------------------- concurrency
+
+
+def test_threaded_multi_client_ground_truth():
+    """N client threads submit concurrently; every future must resolve to
+    np.sort ground truth (the acceptance test of the flush loop's
+    bucketing + future bookkeeping under contention)."""
+    with _server(max_batch=8, max_delay_ms=10) as srv:
+        results: dict = {}
+        lock = threading.Lock()
+
+        def client(cid):
+            rng = np.random.default_rng(cid)
+            arrs = [
+                rng.normal(0, 1, int(rng.choice([200, 256, 512])))
+                .astype(np.float32)
+                for _ in range(5)
+            ]
+            futs = [srv.submit(a) for a in arrs]
+            got = [(a, f.result(120)) for a, f in zip(arrs, futs)]
+            with lock:
+                results[cid] = got
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        assert len(results) == 6
+        for got in results.values():
+            for a, out in got:
+                np.testing.assert_array_equal(out.keys, np.sort(a))
+        s = srv.stats()
+        assert s["completed"] == 30 and s["failed"] == 0
+        assert s["latency_ms_p50"] is not None
+        assert s["latency_ms_p99"] >= s["latency_ms_p50"]
+
+
+def test_sort_many_async_coalesces():
+    # paused server + explicit flush: the pop is deterministic (a live
+    # deadline could split the batch on scheduling and flake the
+    # coalesced/occupancy asserts — the serve_bench pre-warm note)
+    with _paused_server() as srv:
+        arrs = [RNG.normal(0, 1, 256).astype(np.float32) for _ in range(8)]
+        futs = [srv.submit(a) for a in arrs]
+        srv.flush(120)
+        outs = [f.result(1) for f in futs]
+        for a, o in zip(arrs, outs):
+            np.testing.assert_array_equal(o.keys, np.sort(a))
+        # all eight share one shape bucket -> one vmapped flush
+        assert all(o.meta.coalesced == 8 for o in outs)
+        assert srv.stats()["occupancy_mean"] == 8
+
+
+def test_deadline_flushes_lone_request():
+    """A lone request must resolve via the max_delay_ms deadline — with
+    max_batch=64 the slot target alone would wait forever. (The strict
+    2x-deadline latency bound is gated in benchmarks/serve_bench.py,
+    where timing runs exclusively.)"""
+    with _server(max_batch=64, max_delay_ms=50) as srv:
+        x = RNG.normal(0, 1, 256).astype(np.float32)
+        srv.submit(x).result(120)  # warm compile outside the probe
+        t0 = time.monotonic()
+        out = srv.submit(x).result(120)
+        elapsed = time.monotonic() - t0
+        np.testing.assert_array_equal(out.keys, np.sort(x))
+        assert out.meta.coalesced == 1
+        assert elapsed >= 0.04  # the deadline, not an instant flush
+        assert srv.stats()["flushes"] >= 2
+
+
+def test_program_cache_reuse_across_flushes():
+    # paused server + explicit flushes so both rounds pop as one batch
+    # of 4 and must hit the same compiled program
+    with _paused_server() as srv:
+        arrs = [RNG.normal(0, 1, 256).astype(np.float32) for _ in range(4)]
+        for _ in range(2):
+            futs = [srv.submit(a) for a in arrs]
+            srv.flush(120)
+            for f in futs:
+                f.result(1)
+        s = srv.stats()
+        assert s["programs"] == 1 and s["hits"] >= 1
+
+
+# ------------------------------------------------- admission / lifecycle
+
+
+def test_backpressure_queue_full_with_retry_hint():
+    with _paused_server(max_queue=2) as srv:
+        x = np.arange(64, dtype=np.int32)
+        f1, f2 = srv.submit(x), srv.submit(x)
+        with pytest.raises(QueueFullError) as ei:
+            srv.submit(x)
+        assert 0 < ei.value.retry_after_ms <= 600_000
+        assert srv.stats()["rejected"] == 1
+        srv.flush(120)
+        np.testing.assert_array_equal(f1.result(1).keys, np.sort(x))
+        np.testing.assert_array_equal(f2.result(1).keys, np.sort(x))
+        # capacity freed: admission accepts again (still a paused server,
+        # so flush explicitly rather than waiting out the 600s deadline)
+        f3 = srv.submit(x)
+        srv.flush(120)
+        np.testing.assert_array_equal(f3.result(1).keys, np.sort(x))
+
+
+def test_cancel_while_queued():
+    with _paused_server() as srv:
+        x = np.arange(128, dtype=np.int32)
+        f1, f2 = srv.submit(x), srv.submit(x)
+        assert isinstance(f1, SortFuture)
+        assert f1.cancel() and f1.cancelled()
+        srv.flush(120)
+        np.testing.assert_array_equal(f2.result(1).keys, np.sort(x))
+        s = srv.stats()
+        assert s["cancelled"] == 1 and s["completed"] == 1
+        assert not f2.cancel()  # already resolved
+
+
+def test_request_size_cap():
+    lim = dataclasses.replace(LIMITS, max_request_elems=100)
+    with _server(limits=lim, max_delay_ms=10) as srv:
+        big = np.arange(200, dtype=np.int32)
+        with pytest.raises(RequestTooLargeError, match="max_request_elems"):
+            srv.submit(big)
+        # a per-submit limits override lifts the cap for that request
+        out = srv.submit(big, limits=LIMITS).result(120)
+        np.testing.assert_array_equal(out.keys, big)
+
+
+def test_submit_after_close_raises_and_close_drains():
+    srv = _paused_server()
+    x = np.arange(64, dtype=np.int32)
+    fut = srv.submit(x)
+    srv.close(120)  # close must drain the queued request
+    np.testing.assert_array_equal(fut.result(1).keys, np.sort(x))
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(x)
+
+
+def test_invalid_requests_fail_synchronously():
+    with _server() as srv:
+        with pytest.raises(TypeError, match="64-bit"):
+            srv.submit(np.arange(10))  # int64 keys
+        with pytest.raises(TypeError, match="values payload"):
+            srv.submit(np.arange(10, dtype=np.int32), np.arange(10))
+        with pytest.raises(ValueError, match="order"):
+            srv.submit(np.arange(10, dtype=np.int32), order="sideways")
+
+
+# ------------------------------------------------------ planner routing
+
+
+def test_requests_route_through_planner_to_different_backends():
+    """The acceptance criterion: one server, two request shapes, two
+    different backends chosen by the planner (small -> coalesced sim,
+    above stream_threshold -> out-of-core stream)."""
+    lim = repro.SortLimits(n_procs=4, stream_threshold=2048,
+                          chunk_elems=2048)
+    with _server(max_batch=8, max_delay_ms=10, limits=lim) as srv:
+        small = RNG.normal(0, 1, 512).astype(np.float32)
+        big = RNG.normal(0, 1, 6000).astype(np.float32)
+        f_small, f_big = srv.submit(small), srv.submit(big)
+        out_small, out_big = f_small.result(120), f_big.result(300)
+        assert out_small.meta.backend == "sim"
+        assert out_small.meta.coalesced is not None
+        assert out_big.meta.backend == "stream"
+        assert out_big.meta.coalesced is None
+        np.testing.assert_array_equal(out_small.keys, np.sort(small))
+        np.testing.assert_array_equal(out_big.keys, np.sort(big))
+
+
+def test_non_coalescable_requests_dispatch_individually():
+    """kv / argsort / descending requests ride the planner's direct path
+    and keep repro.sort's full result surface."""
+    with _server(max_batch=8, max_delay_ms=10) as srv:
+        k = RNG.integers(0, 9, 500).astype(np.int32)
+        v = np.arange(500, dtype=np.int32)
+        kv = srv.submit(k, v).result(120)
+        np.testing.assert_array_equal(kv.keys, np.sort(k))
+        np.testing.assert_array_equal(k[kv.values], kv.keys)
+
+        order = srv.submit(k, want="order").result(120)
+        np.testing.assert_array_equal(
+            order.order(), np.argsort(k, kind="stable"))
+
+        desc = srv.submit(k, order="desc").result(120)
+        np.testing.assert_array_equal(desc.keys, np.sort(k)[::-1])
+
+
+def test_coalescing_respects_per_request_ladder_policy():
+    """A request with a different overflow ladder than the server's must
+    NOT coalesce (it would silently inherit the server's retry policy) —
+    it dispatches individually through the planner instead."""
+    with _paused_server() as srv:
+        x = np.arange(256, dtype=np.int32)
+        f_default = srv.submit(x)
+        f_strict = srv.submit(
+            x, limits=dataclasses.replace(LIMITS, max_doublings=0))
+        srv.flush(120)
+        assert f_default.result(1).meta.coalesced == 1
+        assert f_strict.result(1).meta.coalesced is None
+        np.testing.assert_array_equal(f_strict.result(1).keys, x)
+
+
+# ----------------------------------------------------- ladder accounting
+
+
+def test_coalesced_overflow_reports_retries_on_meta():
+    """Batched requests that walked the engine's capacity ladder must
+    say so on their result meta, like every other path."""
+    tight = dataclasses.replace(CFG, capacity_factor=0.3)
+    lim = dataclasses.replace(LIMITS, max_doublings=4)
+    x = np.random.default_rng(5).uniform(0, 1, 4096).astype(np.float32)
+    with _paused_server(config=tight, limits=lim) as srv:
+        futs = [srv.submit(x) for _ in range(2)]
+        srv.flush(300)
+        outs = [f.result(1) for f in futs]
+        for o in outs:
+            np.testing.assert_array_equal(o.keys, np.sort(x))
+            assert o.meta.coalesced == 2
+        assert any(o.meta.retries > 0 for o in outs)
+        assert srv.stats()["retries"] > 0
+
+
+def test_stream_backend_reports_ladder_accounting():
+    """Forced overflow on the stream backend: per-chunk ladder steps must
+    surface on SortOutput.meta (the ROADMAP retries=0 gap) and aggregate
+    into server.stats()."""
+    tight = dataclasses.replace(CFG, capacity_factor=0.3)
+    x = np.random.default_rng(7).uniform(0, 1, 6000).astype(np.float32)
+    lim = repro.SortLimits(n_procs=4, chunk_elems=2048, max_doublings=4)
+
+    # through repro.sort directly
+    out = repro.sort(x, where="stream", limits=lim, config=tight)
+    np.testing.assert_array_equal(out.keys, np.sort(x))
+    assert out.meta.retries > 0
+    assert out.meta.chunk_retries is not None
+    assert sum(out.meta.chunk_retries) == out.meta.retries
+    assert len(out.meta.chunk_retries) == 3  # ceil(6000 / 2048) chunks
+
+    # through the async server: same accounting lands in stats()
+    with _server(limits=lim, config=tight, max_delay_ms=10) as srv:
+        sout = srv.submit(x, where="stream").result(300)
+        np.testing.assert_array_equal(sout.keys, np.sort(x))
+        assert sout.meta.retries > 0
+        assert srv.stats()["retries"] >= sout.meta.retries
+
+
+def test_stream_chunks_iterator_accounts_retries():
+    tight = dataclasses.replace(CFG, capacity_factor=0.3)
+    x = np.random.default_rng(8).uniform(0, 1, 6000).astype(np.float32)
+    lim = repro.SortLimits(n_procs=4, chunk_elems=2048, max_doublings=4)
+    out = repro.sort(x, where="stream", limits=lim, config=tight)
+    chunks = list(out.chunks())
+    np.testing.assert_array_equal(np.concatenate(chunks), np.sort(x))
+    assert out.meta.retries > 0  # filled in as the chunks streamed
+
+
+def test_terminal_overflow_lands_on_future():
+    hopeless = dataclasses.replace(CFG, capacity_factor=1e-5)
+    lim = dataclasses.replace(LIMITS, max_doublings=1)
+    x = np.random.default_rng(9).uniform(0, 1, 4096).astype(np.float32)
+    with _server(config=hopeless, limits=lim, max_delay_ms=10) as srv:
+        fut = srv.submit(x, where="stream")
+        with pytest.raises(repro.SortOverflowError):
+            fut.result(300)
+        assert srv.stats()["failed"] == 1
