@@ -7,8 +7,13 @@ across PRs.
     PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|serve|all]
                                             [--only fig5,...] [--out-dir .]
 
-The serve suite honors REPRO_SERVE_SMOKE=1 (tiny sizes, correctness-only
-gates — the CI profile; see benchmarks/serve_bench.py).
+The serve suite honors REPRO_SERVE_SMOKE=1 and the api suite
+REPRO_API_SMOKE=1 (tiny sizes, correctness-only gates — the CI profile;
+see benchmarks/serve_bench.py / api_bench.py). The api decode gate
+(``decode_gate``) asserts the fused device-decode materialization is
+>=1.5x faster than the host-decode baseline for a 2^22 descending kv
+sort; ``serve_pad_retries`` asserts zero overflow-ladder retries for
+coalesced non-pow2 request sizes.
 """
 import argparse
 import json
@@ -51,11 +56,13 @@ def main() -> None:
         },
         "api": {
             "planner_overhead": api_bench.planner_overhead,
+            "decode_gate": api_bench.decode_materialization,
             "api_matrix": api_bench.api_matrix,
         },
         "serve": {
             "serve_throughput": serve_bench.serve_throughput,
             "serve_latency": serve_bench.serve_latency,
+            "serve_pad_retries": serve_bench.serve_pad_retries,
         },
     }
     selected = list(suites) if args.suite == "all" else [args.suite]

@@ -112,6 +112,44 @@ def serve_throughput():
         server.close()
 
 
+def serve_pad_retries():
+    """Sentinel-capacity gate: coalesced flushes of far-from-pow2
+    request sizes must take ZERO overflow-ladder retries.
+
+    2100-element requests pad to the 4096 bucket (~49% sentinel pads);
+    under PR 3's head-first staging every pure-pad grid row funneled the
+    head of the sentinel-tied range at one destination (320 elements
+    against a 112-element static bucket), so EVERY request in EVERY
+    flush walked the capacity ladder. With sentinel-aware staging
+    (``planner.pad_grid`` spreads real elements evenly across rows) the
+    ``stats()`` ladder-retry counter must stay flat — asserted in smoke
+    mode too: it is a correctness-of-accounting gate, not a wall-clock
+    one."""
+    reps = 2 if SMOKE else 4
+    rng = np.random.default_rng(3)
+    reqs = [rng.normal(0, 1, n).astype(np.float32)
+            for n in (2100, 1800, 2400, 2100)]
+    expect = [np.sort(a) for a in reqs]
+
+    server = SortServer(max_batch=32, max_delay_ms=20.0, config=CFG,
+                        limits=repro.SortLimits(n_procs=PROCS))
+    try:
+        for _ in range(reps):
+            for got, want in zip(server.sort_many_async(reqs), expect):
+                np.testing.assert_array_equal(got.keys, want)
+        stats = server.stats()
+        emit("serve_pad_overflow_retries", 0.0,
+             f"retries={stats['retries']};flushes={stats['flushes']}",
+             backend="sim", size=sum(a.size for a in reqs),
+             dtype="float32", retries=stats["retries"], smoke=SMOKE)
+        assert stats["retries"] == 0, (
+            f"coalesced non-pow2 flushes walked the capacity ladder "
+            f"{stats['retries']} time(s); expected 0"
+        )
+    finally:
+        server.close()
+
+
 def serve_latency():
     """A lone request must flush on the max_delay_ms deadline, not wait
     for a batch that never fills."""

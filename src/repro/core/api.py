@@ -24,11 +24,39 @@ where=None, limits=None, config=None, investigator=True)``
             stream_threshold, overflow ladder, serving size caps).
     config: ``SortConfig`` tuning knobs (paper defaults).
 
-Documented limitation: jax runs in 32-bit mode here, so 64-bit key and
-value dtypes are rejected at input checking with a ``TypeError`` (for
-iterator/stream inputs, at the first staged chunk) rather than silently
-truncated on device — cast to int32/uint32/float32 first. Note numpy
-defaults Python ints to int64 (``np.arange(n)`` included).
+Documented limitations
+----------------------
+* jax runs in 32-bit mode here, so 64-bit key and value dtypes are
+  rejected at input checking with a ``TypeError`` (for iterator/stream
+  inputs, at the first staged chunk) rather than silently truncated on
+  device — cast to int32/uint32/float32 first. Note numpy defaults
+  Python ints to int64 (``np.arange(n)`` included).
+* sorts that carry a payload (``values`` or ``want="order"``) cannot
+  contain the key that collides with the padding sentinel — the dtype
+  MAXIMUM (int max / inf) when ascending, the dtype MINIMUM (int min /
+  -inf) when descending (the order-flip encoding maps it onto the
+  sentinel): the exchange's in-program pads would leak sentinel payload
+  into the output, so the planner raises a ``ValueError`` naming the
+  offending value at input checking — always, not only when the front
+  end pads (``keyenc.check_payload_keys``); NaN keys are rejected for
+  payload sorts for the same reason (they order past the sentinel).
+  Keys-only sorts of NaN-free keys have no restriction in either
+  direction; NaN keys are unsupported throughout (seed-era limitation).
+
+Materialization decode
+----------------------
+Every plan records ``plan.decode``. The default ``"device"`` fuses the
+output decode — compaction gather out of the padded result grid, the
+inverse order-flip, the ``want="order"`` stability tie fix and the value
+gather — into one jitted device program per backend
+(``keyenc.decode_grid``; the stream backend decodes per output chunk,
+which also lets descending keys-only stream results use
+``SortOutput.chunks()``). Materializing ``.keys``/``.values`` is then a
+single device->host transfer (zero-copy where the backend allows it, so
+the returned arrays may be READ-ONLY views — ``.copy()`` them to
+mutate). ``SortLimits(decode="host")`` selects the legacy numpy decode
+— writable owned arrays — kept for differential testing and as the
+``--suite api`` decode-gate baseline.
 
 ``repro.plan(...)`` / ``repro.explain(...)``
     Same signature; returns the ``SortPlan`` (backend + reasons) the

@@ -1,5 +1,5 @@
 """Key-encoding layer: front-end capabilities as encodings over the
-stable single-key kv machinery.
+stable single-key kv machinery, plus the fused device-side decode.
 
 Every capability the unified ``repro.sort`` front end grows — descending
 order, argsort (``want="order"``), lexicographic multi-key — is expressed
@@ -19,14 +19,33 @@ re-implementing it:
                    radix-over-columns construction on top of the stable
                    single-key sort (see ``api._lexsort_passes``).
 
-Representable-key restriction (mirror of the ascending sentinel rule):
-ascending sorts cannot contain the dtype's maximum (it is the padding
-sentinel); descending sorts with a payload cannot contain the dtype's
-*minimum* (it flips onto the sentinel). Keys-only descending sorts have
-no restriction — they run ascending and reverse the materialized output.
+Device-side decode (``decode_grid`` / ``compact_rows``): the inverse of
+the encodings above runs *on device*, fused into one jitted program per
+backend output shape — compaction gather out of the sentinel-padded
+(p, W) result grid, the inverse order-flip, the stable-argsort tie fix
+(``local_sort.segment_stable_kv``) and the keys-only reverse — so
+``SortOutput`` materialization is a single device->host copy of exactly
+the n result elements instead of copy-then-decode host passes. The
+numpy twins (``flip_np``/``decode_np``) remain as the legacy
+``decode="host"`` path for differential testing (see ``SortLimits``).
+
+Representable-key restriction: payload sorts cannot contain the key
+dtype's order-maximal value in the ENCODED space — the dtype maximum
+when ascending, the dtype minimum when descending (it flips onto the
+sentinel) — enforced loudly and unconditionally by
+``check_payload_keys`` at the planner boundary (the exchange's
+in-program capacity pads corrupt the payload even when the front end
+never pads; NaN keys are rejected for the same reason — they order past
+the sentinel). Keys-only sorts of NaN-free keys have no restriction in
+either direction: a sentinel-valued key is value-identical to a pad, so
+the decoded keys are still bit-exact. NaN keys are unsupported
+throughout (seed-era limitation: they sort past the padding sentinel).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -39,7 +58,7 @@ def flip(x):
 
 
 def flip_np(x: np.ndarray) -> np.ndarray:
-    """numpy-side flip (host materialization decode path)."""
+    """numpy-side flip (legacy host materialization decode path)."""
     if np.issubdtype(x.dtype, np.floating):
         return -x
     return ~x
@@ -51,6 +70,64 @@ def encode(keys, descending: bool):
 
 def decode_np(keys: np.ndarray, descending: bool) -> np.ndarray:
     return flip_np(keys) if descending else keys
+
+
+def check_payload_keys(keys, descending: bool) -> None:
+    """Reject payload sorts whose keys collide with the padding sentinel.
+
+    Ascending payload sorts cannot contain the key dtype's MAXIMUM (it
+    is the padding sentinel); descending payload sorts cannot contain
+    the dtype's MINIMUM (the order-flip encoding maps it onto the
+    sentinel). Either way the colliding key is indistinguishable from a
+    pad once staged, the exchange's *in-program* capacity pads
+    interleave with it under stable ties, and sentinel payload values
+    leak into the output — front-end padding is NOT required (verified
+    empirically on shard-divisible inputs), which is why this check runs
+    unconditionally at the planner boundary for every sort that carries
+    a payload (user values or the argsort provenance index): a loud
+    ValueError naming the offending value instead of silent corruption.
+    Keys-only sorts are exempt in both directions — a sentinel-valued
+    key and a pad are value-identical, so the decoded keys stay
+    bit-exact.
+    """
+    dt_s = str(keys.dtype)
+    floating = dt_s == "bfloat16" or np.issubdtype(np.dtype(dt_s), np.floating)
+    if floating and bool(np.asarray((keys != keys).any())):
+        # NaN orders AFTER the +-inf sentinel in the device sort, so the
+        # in-program pads leak into the first-n slice ahead of the NaN
+        # elements — the same silent corruption mode as a sentinel
+        # collision, caught the same loud way (x != x is the dtype-
+        # agnostic NaN probe: works for np, jnp and bfloat16 alike)
+        raise ValueError(
+            "sort with a payload cannot contain NaN keys: NaN orders "
+            "after the padding sentinel, so padding would leak into the "
+            "output and the payload would come back corrupted. Drop or "
+            "impute the NaNs first (np.nan_to_num / boolean masking)."
+        )
+    if dt_s == "bfloat16":
+        # bf16 keys sort as f32 whose sentinel is +-inf — a bf16 inf key
+        # upcasts onto it, so the collision check applies here too
+        bad = -np.inf if descending else np.inf
+    else:
+        dt = np.dtype(dt_s)
+        if np.issubdtype(dt, np.floating):
+            bad = dt.type(-np.inf if descending else np.inf)
+        else:
+            info = np.iinfo(dt)
+            bad = dt.type(info.min if descending else info.max)
+    if bool(np.asarray((keys == bad).any())):
+        direction = "descending" if descending else "ascending"
+        cause = (
+            f"the order-flip encoding maps the {dt_s} minimum onto the "
+            f"padding sentinel" if descending
+            else f"it is the {dt_s} padding sentinel"
+        )
+        raise ValueError(
+            f"{direction} sort with a payload cannot represent the key "
+            f"{bad!r}: {cause}, so its payload would come back corrupted. "
+            f"Shift or drop those keys first, or sort them keys-only "
+            f"(no restriction without values/want='order')."
+        )
 
 
 def stable_argsort(keys: jnp.ndarray, *, tile: int = 1024,
@@ -66,3 +143,85 @@ def stable_argsort(keys: jnp.ndarray, *, tile: int = 1024,
 
     slots = jnp.arange(keys.shape[0], dtype=jnp.int32)
     return local_sort_kv(keys, slots, tile=tile, use_pallas=use_pallas)
+
+
+# ------------------------------------------------------ device-side decode
+
+
+def compact_rows(grid: jnp.ndarray, counts, m: int) -> jnp.ndarray:
+    """Front-compact a sorted, sentinel-padded (p, W) result grid into
+    its first ``m`` global elements on device (``m`` is static).
+
+    Row r holds its sorted bucket in positions [0, counts[r]); the
+    concatenation of those prefixes is the globally sorted dataset
+    (range-partitioned rows). Implemented as p contiguous
+    ``dynamic_update_slice`` row copies walked in row order — row r+1's
+    write starts exactly where row r's valid prefix ends, overwriting
+    row r's sentinel tail, so after the last row positions [0, m) hold
+    the answer. (An element gather expresses the same thing but lowers
+    to scalarized HLO on CPU and runs ~10x slower than these straight
+    row memcpys.) The ``+W`` scratch tail absorbs the last row's pads;
+    a row whose start offset exceeds m is pad-only beyond the result
+    and lands harmlessly in the scratch (dynamic_update_slice clamps
+    its start to m).
+    """
+    p, w = grid.shape
+    counts = jnp.asarray(counts).astype(jnp.int32).reshape(-1)
+    starts = jnp.cumsum(counts) - counts
+    buf = jnp.zeros((m + w,), grid.dtype)
+    for r in range(p):  # unrolled: p is the (small, static) shard count
+        buf = jax.lax.dynamic_update_slice(buf, grid[r], (starts[r],))
+    return buf[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "descending", "want_order")
+)
+def decode_grid(keys_grid, counts, values_grid=None, *, m: int,
+                descending: bool = False, want_order: bool = False):
+    """Fused device-side materialization: one program, one D2H copy.
+
+    Collapses everything the host decode used to do after the sort —
+    per-row unpad + concatenate, the ``want="order"`` stability tie fix,
+    and the descending inverse flip — into a single jitted program over
+    the backend's (p, W) sentinel-padded result grid, returning the
+    first ``m`` output positions. ``m`` is a static PROGRAM length, not
+    the request length: the planner rounds the request's n up to a
+    power-of-two shape bucket and slices ``[:n]`` on host, so serving
+    traffic with arbitrarily varied request sizes compiles O(log)
+    decode programs instead of one per distinct n. The planner
+    dispatches this program eagerly, right after the overflow ladder
+    resolves, so by the time a caller touches ``.keys`` the decode has
+    already executed asynchronously and materialization really is just
+    the D2H copy.
+
+      descending: keys were flip-encoded; apply the inverse flip.
+      want_order: payload is the provenance index; restore exact
+                  stability with the device segment-stable pass (the
+                  investigator splits tied ranges across destinations,
+                  so the raw payload comes back segment-interleaved).
+                  Output positions past the staged total (possible when
+                  the shape bucket exceeds it) are masked to the
+                  sentinel first, so tail garbage can never join a real
+                  tie segment.
+
+    Returns ``(keys, values-or-None)`` device arrays of shape (m,);
+    only the first min(n, m) positions are meaningful.
+    """
+    from repro.core.local_sort import segment_stable_kv
+    from repro.kernels.ops import sentinel_for
+
+    ks = compact_rows(keys_grid, counts, m)
+    vs = None
+    if values_grid is not None:
+        vs = compact_rows(values_grid, counts, m)
+        if want_order:
+            total = jnp.sum(jnp.asarray(counts).astype(jnp.int32))
+            valid = jnp.arange(m, dtype=jnp.int32) < total
+            vs = segment_stable_kv(
+                jnp.where(valid, ks, sentinel_for(ks.dtype)),
+                jnp.where(valid, vs, sentinel_for(vs.dtype)),
+            )
+    if descending:
+        ks = flip(ks)
+    return ks, vs

@@ -37,3 +37,28 @@ def local_sort_kv(
         k, v = jax.lax.sort([keys, values], dimension=0, is_stable=stable, num_keys=1)
         return k, v
     return kops.tile_sort_kv(keys, values, tile=tile, stable=stable, use_pallas=True)
+
+
+def segment_stable_kv(keys: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """Device tie fix: reorder ``values`` ascending within each run of
+    equal (already sorted) ``keys``.
+
+    The investigator deliberately splits tied key ranges across
+    destinations to balance load (paper Fig. 3c), so a provenance
+    payload comes back segment-interleaved within runs of equal keys.
+    Sorting the (segment id, payload) pairs — segment ids are already
+    non-decreasing, so the permutation only moves payloads *within*
+    their segment — restores exactly ``np.argsort(kind="stable")``.
+    This is the on-device replacement for the planner's host
+    ``_stable_order_fix`` numpy pass (``idx[np.lexsort((idx, seg))]``),
+    fused into the decode program by ``keyenc.decode_grid``.
+    """
+    if keys.shape[0] <= 1:
+        return values
+    seg = jnp.cumsum(
+        jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), (keys[1:] != keys[:-1]).astype(jnp.int32)]
+        )
+    )
+    _, out = jax.lax.sort([seg, values], dimension=0, is_stable=True, num_keys=2)
+    return out

@@ -18,7 +18,12 @@ Placement rules (in order):
 Capabilities (descending / argsort / multi-key) are *front-end
 encodings* over the stable kv machinery (see ``keyenc``), so every
 registered backend inherits them at once. The overflow-retry ladder is
-the single policy in ``overflow.py`` for all backends.
+the single policy in ``overflow.py`` for all backends. Decoding those
+encodings back out happens ON DEVICE by default (``plan.decode ==
+"device"``): each backend's materialization is one fused jitted program
+(compaction gather + inverse flip + tie fix, ``keyenc.decode_grid``)
+followed by a single D2H copy; ``SortLimits(decode="host")`` keeps the
+legacy numpy decode for differential testing.
 """
 from __future__ import annotations
 
@@ -76,6 +81,13 @@ class SortLimits:
       elements at submit time (``RequestTooLargeError``) so one huge
       sort cannot monopolize the flush loop. None (default) disables
       the limit; plain ``repro.sort`` calls ignore it.
+    decode: output materialization path. ``"device"`` (default) fuses
+      the compaction gather, inverse order-flip, stable-argsort tie fix
+      and value gather into one jitted device program per backend, so
+      materialization is a single D2H copy of exactly n elements
+      (``keyenc.decode_grid``). ``"host"`` keeps the legacy numpy
+      decode — per-row unpad+concat, host flip, host tie fix — for
+      differential testing and the decode benchmark baseline.
     """
 
     n_procs: int = 8
@@ -85,6 +97,7 @@ class SortLimits:
     growth: float = 2.0
     raise_on_overflow: bool = True
     max_request_elems: int | None = None
+    decode: str = "device"
 
     def policy(self) -> OverflowPolicy:
         return OverflowPolicy(
@@ -105,6 +118,7 @@ class SortPlan:
     reasons: tuple = ()
     mesh: Any = None
     axis_name: Any = "data"
+    decode: str = "device"
 
     def explain(self) -> str:
         lines = [f"repro.sort plan: backend={self.backend!r}"]
@@ -112,6 +126,7 @@ class SortPlan:
             lines.append(f"  - {r}")
         lines.append(
             f"  n_procs={self.n_procs} chunk_elems={self.chunk_elems} "
+            f"decode={self.decode} "
             f"overflow: up to {self.limits.max_doublings} capacity bumps "
             f"(x{self.limits.growth})"
         )
@@ -229,6 +244,11 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
 
 def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     limits = limits or SortLimits()
+    if limits.decode not in ("device", "host"):
+        raise ValueError(
+            f'SortLimits.decode must be "device" or "host", got '
+            f"{limits.decode!r}"
+        )
     mesh = None
     axis_name = "data"
     reasons: list[str] = []
@@ -286,9 +306,15 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
         for a in axes:
             n_procs *= mesh.shape[a]
         reasons.append(f"mesh sort axis spans {n_procs} device(s)")
+    if limits.decode == "host":
+        reasons.append(
+            'decode="host": legacy numpy materialization (differential-'
+            "testing / baseline path)"
+        )
     return SortPlan(
         backend=choice, n_procs=n_procs, chunk_elems=limits.chunk_elems,
         limits=limits, reasons=tuple(reasons), mesh=mesh, axis_name=axis_name,
+        decode=limits.decode,
     )
 
 
@@ -297,11 +323,30 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
 
 def pad_grid(flat: np.ndarray, p: int, per: int, fill) -> np.ndarray:
     """Pack a flat host array into the (p, per) shard grid, sentinel
-    padded. The canonical pad helper — ``stream/runs.py`` and the
+    padded, spreading the real elements EVENLY across rows (balanced
+    contiguous blocks) rather than packing them head-first.
+
+    Head-first packing makes every trailing row pure sentinel for
+    far-from-capacity inputs — a degenerate shard for the investigator,
+    whose ideal-rank division then funnels the whole head of the
+    sentinel-tied range at one destination and overflows the static
+    buckets (the serve coalescing pathology: a per-request capacity-
+    ladder retry on every flush of a far-from-pow2 bucket). With each
+    row holding the same real/pad occupancy, per-destination traffic
+    stays inside the standard ``SortConfig.capacity`` slack and steady-
+    state ladder retries are zero. Pads still carry the order-maximal
+    sentinel, so they sort to the global tail and unpadding is
+    unchanged. The canonical pad helper — ``stream/runs.py`` and the
     SortService reuse it for chunk staging."""
-    buf = np.full(p * per, fill, flat.dtype)
-    buf[: flat.shape[0]] = flat
-    return buf.reshape(p, per)
+    n = flat.shape[0]
+    buf = np.full((p, per), fill, flat.dtype)
+    base, extra = divmod(n, p)
+    off = 0
+    for r in range(p):
+        take = base + (1 if r < extra else 0)
+        buf[r, :take] = flat[off : off + take]
+        off += take
+    return buf
 
 
 def unpad_grid(values, counts, m: int) -> np.ndarray:
@@ -334,34 +379,6 @@ def _trim_pad_counts(counts, pad: int) -> np.ndarray:
     return counts
 
 
-def _check_sentinel_free(keys, descending: bool) -> None:
-    """Payload sorts that the FRONT END pads (flat inputs not divisible
-    by the shard count, and every stream chunk) use an order-extreme
-    sentinel; a real key equal to it would interleave with the pads and
-    leak sentinel payload into the output. Reject loudly instead of
-    corrupting silently (the ascending restriction is the dtype max;
-    descending flips it to the dtype min). One cheap reduction over the
-    keys — only called when padding actually happens, so unpadded
-    seed-era inputs containing the extreme still sort fine."""
-    dt = np.dtype(str(keys.dtype)) if str(keys.dtype) != "bfloat16" else None
-    if dt is None:
-        return  # bf16 keys are sorted as f32; inf keys already disallowed
-    if np.issubdtype(dt, np.floating):
-        bad = -np.inf if descending else np.inf
-        hit = bool(np.asarray((keys == bad).any()))
-    else:
-        info = np.iinfo(dt)
-        bad = info.min if descending else info.max
-        hit = bool(np.asarray((keys == bad).any()))
-    if hit:
-        raise ValueError(
-            f"keys contain {bad!r}, which is the "
-            f"{'descending' if descending else 'ascending'} padding "
-            f"sentinel for {dt} — payload sorts cannot represent it "
-            f"(shift the keys or drop those elements first)"
-        )
-
-
 def _stable_order_fix(ks: np.ndarray, idx: np.ndarray) -> np.ndarray:
     """Restore exact stability of an argsort permutation.
 
@@ -387,18 +404,27 @@ def _sentinel(dtype) -> np.ndarray:
     return np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
 
 
-def _prep_single(req: _Req):
+def _prep_single(req: _Req, *, raw: bool = False):
     """Encode the key array + build the payload for a single-key sort.
 
     Returns (enc_keys flat-or-grid np/jnp, payload or None, descending,
     keys_only_reverse) — keys-only descending sorts run ascending on the
     raw keys and reverse at materialization (no key-range restriction).
+    ``raw=True`` skips the host-side order-flip encode (the sentinel
+    check and payload construction still run): the stream backend's
+    device-decode path flips each chunk on device after H2D, so a
+    whole-array host flip here would be allocated and thrown away.
     """
     descending = req.descending[0]
     keys = req.keys
     payload = None
     if req.needs_payload:
-        enc = keyenc.encode(keys, descending) if descending else keys
+        # a key colliding with the (encoded-space) padding sentinel —
+        # dtype max ascending, dtype min descending — leaks sentinel
+        # payload into the output via the exchange's in-program pads,
+        # front-end padding or not: reject loudly, always
+        keyenc.check_payload_keys(keys, descending)
+        enc = keys if (raw or not descending) else keyenc.encode(keys, True)
         if req.want == "order":
             payload = np.arange(req.n, dtype=np.int32)
             if req.n_local is not None:
@@ -408,6 +434,63 @@ def _prep_single(req: _Req):
         return enc, payload, descending, False
     # keys-only: ascending sort + reverse is exact and unrestricted
     return keys, None, descending, descending
+
+
+def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
+                      counts, m: int, descending: bool, reverse: bool):
+    """Materialization closure for the grid-shaped (sim / mesh) backends.
+
+    decode="device" (default): one fused jitted program
+    (``keyenc.decode_grid``) runs the compaction gather, the inverse
+    order-flip, the stable-argsort tie fix and the keys-only reverse on
+    device, and the host does a single D2H copy of exactly m elements
+    per array. decode="host": the legacy numpy path (per-row unpad +
+    concat, host flip / reverse / ``_stable_order_fix``), kept for
+    differential testing and as the decode benchmark baseline.
+    """
+    want_order = req.want == "order"
+
+    if plan.decode == "device":
+        from repro.kernels.ops import _next_pow2
+
+        # dispatch the fused decode program NOW (jax dispatch is async):
+        # it executes on device behind the caller's back, exactly like
+        # the sort itself, so the closure below — the first .keys /
+        # .values access — is a D2H copy plus a host slice. The program
+        # length rounds n up to a power-of-two shape bucket so varied
+        # request sizes (a serving workload) reuse O(log) compiled
+        # decode programs instead of one per distinct n.
+        dk, dv = keyenc.decode_grid(
+            keys_grid, counts, values_grid, m=_next_pow2(m),
+            descending=descending and not reverse, want_order=want_order,
+        )
+
+        def materialize():
+            ks = np.asarray(dk)[:m]
+            if reverse:
+                # keys-only descending ran ascending on the raw keys:
+                # the descending view is the first m positions read
+                # backwards (a stride trick, not a host pass)
+                ks = ks[::-1]
+            return ks, (np.asarray(dv)[:m] if dv is not None else None)
+
+        return materialize
+
+    def materialize():
+        if values_grid is None:
+            ks, vs = _unpad_grid(keys_grid, counts, m), None
+        else:
+            ks = _unpad_grid(keys_grid, counts, m)
+            vs = _unpad_grid(values_grid, counts, m)
+            if want_order:
+                vs = _stable_order_fix(ks, vs)
+        if reverse:
+            ks = ks[::-1].copy()
+        elif descending:
+            ks = keyenc.decode_np(ks, True)
+        return ks, vs
+
+    return materialize
 
 
 def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
@@ -429,8 +512,6 @@ def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
             xv = (jnp.asarray(payload).reshape(p, per)
                   if payload is not None else None)
         else:
-            if payload is not None:
-                _check_sentinel_free(req.keys, descending)
             flat = np.asarray(enc).reshape(-1)
             xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)))
             xv = None
@@ -450,21 +531,9 @@ def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
         run, req.config, plan.limits.policy()
     )
 
-    def materialize():
-        if xv is None:
-            ks = _unpad_grid(res.values, res.counts, m)
-            vs = None
-        else:
-            ks = _unpad_grid(res.keys, res.counts, m)
-            vs = _unpad_grid(res.values, res.counts, m)
-            if req.want == "order":
-                vs = _stable_order_fix(ks, vs)
-        if reverse:
-            ks = ks[::-1].copy()
-        elif descending:
-            ks = keyenc.decode_np(ks, True)
-        return ks, vs
-
+    kg, vg = (res.values, None) if xv is None else (res.keys, res.values)
+    materialize = _grid_materialize(req, plan, kg, vg, res.counts, m,
+                                    descending, reverse)
     meta = _meta(req, plan, "sim", cfg_used, retries)
     return SortOutput(
         meta,
@@ -494,8 +563,6 @@ def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
         xv = (jnp.asarray(payload).reshape(-1)
               if payload is not None else None)
     else:
-        if payload is not None:
-            _check_sentinel_free(req.keys, descending)
         flat = np.asarray(enc).reshape(-1)
         xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)).reshape(-1))
         xv = None
@@ -515,21 +582,9 @@ def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
         run, req.config, plan.limits.policy()
     )
 
-    def materialize():
-        if xv is None:
-            ks = _unpad_grid(res.values, res.count, m)
-            vs = None
-        else:
-            ks = _unpad_grid(res.keys, res.count, m)
-            vs = _unpad_grid(res.values, res.count, m)
-            if req.want == "order":
-                vs = _stable_order_fix(ks, vs)
-        if reverse:
-            ks = ks[::-1].copy()
-        elif descending:
-            ks = keyenc.decode_np(ks, True)
-        return ks, vs
-
+    kg, vg = (res.values, None) if xv is None else (res.keys, res.values)
+    materialize = _grid_materialize(req, plan, kg, vg, res.count, m,
+                                    descending, reverse)
     meta = _meta(req, plan, "mesh", cfg_used, retries)
     return SortOutput(
         meta,
@@ -556,7 +611,20 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
         max_doublings=plan.limits.max_doublings,
         growth=plan.limits.growth,
     )
-    enc, payload, descending, reverse = _prep_single(req)
+    # device decode pushes the order-flip INTO the stream pipeline: every
+    # chunk is flip-encoded on device right after H2D and flip-decoded on
+    # device right before each output D2H (stream/runs.py +
+    # stream/external_merge.py), so descending keys-only results stream —
+    # chunks() yields descending chunks in bounded memory — and kv
+    # results skip the whole-array host flip (raw=True below keeps
+    # _prep_single from allocating one just to be discarded). Under
+    # decode="host" the legacy paths remain: keys-only reverses the
+    # materialized output, kv flip-decodes on host.
+    device_decode = plan.decode == "device"
+    enc, payload, descending, reverse = _prep_single(req, raw=device_decode)
+    stream_desc = device_decode and descending
+    if stream_desc:
+        reverse = False  # enc is already raw; the pipeline encodes on device
     if not req.is_iterator:
         enc = np.asarray(enc).reshape(-1)
     meta = _meta(req, plan, "stream", req.config, 0)
@@ -580,7 +648,8 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
 
     if payload is None:
         gen = _accounted(
-            sort_stream(enc, scfg, investigator=req.investigator, stats=stats)
+            sort_stream(enc, scfg, investigator=req.investigator,
+                        stats=stats, descending=stream_desc)
         )
         if reverse:
             out = SortOutput(meta, materialize=None)
@@ -589,25 +658,27 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
                 parts = list(gen)
                 out.counts = np.asarray([p.shape[0] for p in parts], np.int64)
                 ks = (np.concatenate(parts) if parts
-                      else np.empty(0, req.dtype or np.float64))
+                      else np.empty(0, req.dtype or np.float32))
                 return ks[::-1].copy(), None
 
             out._materialize = materialize
             return out
         return SortOutput(meta, chunks=gen)
 
-    # stream chunks are always sentinel-padded, so payload sorts must be
-    # sentinel-free regardless of divisibility
-    _check_sentinel_free(req.keys, descending)
     vflat = np.asarray(payload).reshape(-1)
 
     def materialize():
         ks, vs = sort_external_kv(enc, vflat, scfg,
-                                  investigator=req.investigator, stats=stats)
+                                  investigator=req.investigator, stats=stats,
+                                  descending=stream_desc)
         _account()
         if req.want == "order":
+            # stream tie fix stays on host: the whole out-of-core output
+            # can exceed device capacity, and the investigator may split
+            # a tied range across *buckets*, so the segment-stable pass
+            # must span the materialized array (sim/mesh fix on device)
             vs = _stable_order_fix(ks, vs)
-        if descending:
+        if descending and not stream_desc:
             ks = keyenc.decode_np(ks, True)
         return ks, vs
 
@@ -697,7 +768,9 @@ def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
         if req.multikey:
             keys_out = tuple(np.empty(0, k.dtype) for k in req.keys)
         else:
-            keys_out = np.empty(0, req.dtype or np.float64)
+            # req.dtype is None only for iterator inputs that never
+            # yielded a chunk; default to the library's 32-bit mode
+            keys_out = np.empty(0, req.dtype or np.float32)
         vals = np.empty(0, np.int32) if req.want == "order" else None
         out = SortOutput(meta, keys=keys_out, values=vals,
                          counts=np.zeros(0, np.int64))
@@ -714,12 +787,13 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
 
     Returns ``(req, plan, batchable)``. ``batchable`` is True when the
     request may be stacked into ONE vmapped same-shape-bucket program by
-    the async sort server's flush engine: a plain ascending single-key
-    keys-only sort that the planner routed to the sim backend. Anything
-    else (payloads, argsort, descending, multi-key, (p, n_local) global
-    views, stream-/mesh-bound requests) must dispatch through
-    ``execute_request`` individually — still planner-routed, just not
-    vmap-coalesced."""
+    the async sort server's flush engine: a single-key keys-only sort
+    (ascending OR descending — the order-flip encode/decode is fused
+    into the vmapped program, see ``sim.sample_sort_sim_flat``) that the
+    planner routed to the sim backend. Anything else (payloads, argsort,
+    multi-key, (p, n_local) global views, stream-/mesh-bound requests)
+    must dispatch through ``execute_request`` individually — still
+    planner-routed, just not vmap-coalesced."""
     req = _normalize(keys, values, order=order, want=want, config=config,
                      investigator=investigator)
     plan = _make_plan(req, where, limits)
@@ -727,7 +801,6 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
         plan.backend == "sim"
         and not req.multikey
         and not req.needs_payload
-        and not any(req.descending)
         and req.n_local is None
         and not req.is_iterator
         and req.n > 0

@@ -39,6 +39,9 @@ class SortMeta:
       ordinary ``repro.sort`` calls.
     n_local: per-processor row length when the input arrived in the
       (p, n_local) global-view layout (enables provenance decoding).
+    dtype: the planned key dtype, threaded at plan time; None only for
+      iterator inputs that never yielded a chunk (empty results then
+      default to float32 — the library's 32-bit mode).
     """
 
     backend: str
@@ -103,7 +106,12 @@ class SortOutput:
             if parts:
                 self._keys = np.concatenate(parts)
             else:
-                self._keys = np.empty(0, self.meta.dtype or np.float64)
+                # meta.dtype is the planned dtype, threaded at plan time;
+                # it is None only for iterator inputs that never yielded
+                # a chunk — default those to the library's 32-bit mode
+                # (the door check rejects 64-bit keys, so a float64
+                # empty result would be a dtype no sort can produce)
+                self._keys = np.empty(0, self.meta.dtype or np.float32)
         if not self.meta.n and self._keys is not None:
             # iterator inputs have unknown n until materialization
             first = self._keys[0] if isinstance(self._keys, tuple) else self._keys
@@ -111,7 +119,12 @@ class SortOutput:
 
     @property
     def keys(self):
-        """Flat sorted keys (host), materialized on first access."""
+        """Flat sorted keys (host), materialized on first access.
+
+        Under the default device decode these are zero-copy views of the
+        decode program's output buffer: they may be READ-ONLY and, for
+        keys-only descending results, negative-stride. Call ``.copy()``
+        to own/mutate them (``decode="host"`` results stay writable)."""
         if self._keys is None:
             self._force()
         return self._keys
@@ -125,15 +138,18 @@ class SortOutput:
 
     def chunks(self) -> Iterator[np.ndarray]:
         """Stream backend only: yield sorted chunks in bounded memory
-        (single use — consuming it is the materialization)."""
+        (single use — consuming it is the materialization). Keys-only
+        results stream in both orders: descending chunks are flip-decoded
+        on device per chunk under the default ``decode="device"`` plan."""
         if self._chunks is None:
             if self._chunks_consumed:
                 raise ValueError("chunks() was already consumed (single use)")
             if self.meta.backend == "stream":
                 raise ValueError(
-                    "this stream result does not stream: descending/kv/"
-                    "order results materialize on host (the reverse/"
-                    "gather is not bounded-memory) — use .keys/.values"
+                    "this stream result does not stream: kv/argsort "
+                    "results materialize on host (the value gather is "
+                    "not bounded-memory), as do descending results under "
+                    'the legacy decode="host" plan — use .keys/.values'
                 )
             raise ValueError(
                 f"chunks() is only available on the stream backend "

@@ -18,6 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import keyenc
 from repro.core import merge as merge_lib
 from repro.core import splitters as spl
 from repro.core.local_sort import local_sort, local_sort_kv
@@ -45,6 +46,22 @@ class SortResult(NamedTuple):
 class SortKVResult(NamedTuple):
     keys: jnp.ndarray
     values: jnp.ndarray
+    counts: jnp.ndarray
+    overflowed: jnp.ndarray
+    send_counts: jnp.ndarray
+
+
+class FlatSortResult(NamedTuple):
+    """``sample_sort_sim_flat`` output: the decode is fused in-program.
+
+    flat: (p*n_local,) globally sorted, front-compacted elements — every
+      staged element (sentinel pads included) in its final position, so
+      materialization is one D2H copy plus a host slice. For
+      ``descending=True`` programs the flip decode has been applied.
+    counts / overflowed / send_counts: as in ``SortResult``.
+    """
+
+    flat: jnp.ndarray
     counts: jnp.ndarray
     overflowed: jnp.ndarray
     send_counts: jnp.ndarray
@@ -173,3 +190,33 @@ def sample_sort_sim_kv(
     )(recv_k, recv_v)
 
     return SortKVResult(mk, mv, counts, overflowed, send_counts)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "investigator", "descending"))
+def sample_sort_sim_flat(
+    x: jnp.ndarray,
+    config: spl.SortConfig = spl.SortConfig(),
+    *,
+    investigator: bool = True,
+    descending: bool = False,
+) -> FlatSortResult:
+    """Sample sort with the device decode fused into the same program.
+
+    The serving flush engine's unit of work: ``x`` is the (p, per)
+    staged grid (real elements + sentinel pads), and the output ``flat``
+    already has the compaction gather — and, for ``descending=True``,
+    the order-flip encode *and* inverse decode — applied on device, so
+    the host never touches a padded (p, p*cap) grid again (an ~p-fold
+    smaller D2H copy than transferring the raw exchange capacity).
+    Descending inputs must arrive RAW, padded with the *flipped*
+    sentinel (dtype min / -inf), which the in-program flip turns back
+    into the ascending pad that sorts to the tail.
+    """
+    if descending:
+        x = keyenc.flip(x)
+    res = sample_sort_sim(x, config, investigator=investigator)
+    p, n = x.shape
+    flat = keyenc.compact_rows(res.values, res.counts, p * n)
+    if descending:
+        flat = keyenc.flip(flat)
+    return FlatSortResult(flat, res.counts, res.overflowed, res.send_counts)

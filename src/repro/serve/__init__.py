@@ -4,6 +4,12 @@
 ``sortd`` is the asynchronous, latency-targeted sort front end —
 ``SortServer.submit -> SortFuture`` with planner-driven dispatch, the
 slot/deadline flush model of ``batching.py`` applied to sort traffic.
+Keys-only requests (ascending or descending) coalesce into one vmapped
+program per (shape, order) bucket with the decode fused on device, and
+batch staging is sentinel-aware (real elements spread evenly across the
+grid rows): coalesced batches no longer pay an overflow-ladder retry
+when request sizes sit far from a power of two — ``stats()``'s
+``retries`` counter stays flat in steady state.
 
 The model-serving pieces pull in the full transformer stack, so they are
 exposed as lazy attributes: importing ``repro.serve`` for ``SortServer``

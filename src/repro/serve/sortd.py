@@ -12,14 +12,19 @@ continue without waiting" front end for sort traffic:
   applied to sorts.
 * Dispatch is planner-driven: every request is planned at admission time
   with ``repro.sort``'s machinery (``core.planner.serve_profile``).
-  Plain ascending single-key keys-only requests that the planner routes
-  to the sim backend coalesce into ONE vmapped program per shape bucket
-  (the ``stream.service.FlushEngine`` shared with the sync service);
-  everything else — kv payloads, argsort, descending, multi-key,
-  stream- or mesh-bound requests — dispatches through
+  Single-key keys-only requests that the planner routes to the sim
+  backend — ascending AND descending, since the order-flip decode is
+  fused into the vmapped program (``sim.sample_sort_sim_flat``) —
+  coalesce into ONE program per (shape, order) bucket (the
+  ``stream.service.FlushEngine`` shared with the sync service);
+  everything else — kv payloads, argsort, multi-key, stream- or
+  mesh-bound requests — dispatches through
   ``core.planner.execute_request`` individually on a small worker pool
   (so a seconds-long out-of-core sort cannot head-of-line block the
-  flush loop's deadlines), landing on any registered backend.
+  flush loop's deadlines), landing on any registered backend. Coalesced
+  flushes decode on device and stage pads sentinel-aware
+  (``planner.pad_grid`` spreading), so far-from-pow2 request sizes no
+  longer pay an overflow-ladder retry per flush.
 * Overload degrades predictably: the pending queue is bounded
   (``QueueFullError`` carries a ``retry_after_ms`` hint so clients can
   back off instead of hammering), and single requests above
@@ -46,6 +51,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import numpy as np
 
 from repro.core import planner
+from repro.core.overflow import bump_capacity
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
 from repro.stream.service import FlushEngine
@@ -124,13 +130,18 @@ class SortServer:
         self._stats = {
             "submitted": 0, "completed": 0, "failed": 0, "cancelled": 0,
             "rejected": 0, "flushes": 0, "flushed_requests": 0,
+            "direct_dispatches": 0,
         }
+        self._cond = threading.Condition()
         self._engine = FlushEngine(
             config=self.config, n_procs=self.limits.n_procs,
             investigator=self.investigator,
             max_doublings=self.limits.max_doublings,
             growth=self.limits.growth,
             max_batch=self.max_batch, stats=self._stats,
+            # the direct-dispatch workers add to stats["retries"] under
+            # this same lock; sharing it keeps the counter exact
+            stats_lock=self._cond,
         )
         self._direct_pool = ThreadPoolExecutor(
             max_workers=int(direct_workers), thread_name_prefix="sortd-direct"
@@ -138,7 +149,6 @@ class SortServer:
         # request latencies (submit -> resolve, seconds); appended and
         # snapshotted under the condition lock — stats() iterates it
         self._lat: deque[float] = deque(maxlen=int(latency_window))
-        self._cond = threading.Condition()
         self._buckets: dict[tuple, list[_Pending]] = {}
         self._depth = 0
         self._seq = 0
@@ -178,12 +188,15 @@ class SortServer:
         # compile against the engine's exact program (config / grid /
         # investigator) AND walk the engine's exact overflow ladder — a
         # caller asking for a different retry policy must not silently
-        # inherit the server's
+        # inherit the server's. Same for decode="host": the fused batch
+        # program decodes on device, so a legacy-decode request must
+        # dispatch individually to actually exercise the host path
         batchable = (
             batchable and cfg == self.config and inv == self.investigator
             and lim.n_procs == self.limits.n_procs
             and lim.max_doublings == self.limits.max_doublings
             and lim.growth == self.limits.growth
+            and lim.decode == "device"
         )
         data = np.asarray(req.keys).reshape(-1) if batchable else None
 
@@ -200,7 +213,10 @@ class SortServer:
                     retry_after_ms=self._retry_after_ms(now),
                 )
             if batchable:
-                key = ("batch",) + self._engine.bucket_key(data)
+                # descending requests bucket separately: same shapes,
+                # different fused program (in-program flip decode)
+                key = (("batch", bool(req.descending[0]))
+                       + self._engine.bucket_key(data))
             else:
                 self._seq += 1
                 key = ("direct", self._seq)
@@ -231,7 +247,10 @@ class SortServer:
 
     def stats(self) -> dict:
         """Telemetry snapshot: queue depth, latency percentiles (ms),
-        batch occupancy, program-cache and overflow-ladder counters."""
+        batch occupancy (``flushes``/``flushed_requests``/
+        ``occupancy_mean`` cover COALESCED flushes only; individually
+        dispatched requests are counted in ``direct_dispatches``),
+        program-cache and overflow-ladder counters."""
         with self._cond:
             s = dict(self._stats)
             depth = self._depth
@@ -323,11 +342,18 @@ class SortServer:
         if not live:
             return
         with self._cond:
-            self._stats["flushes"] += 1
-            self._stats["flushed_requests"] += len(live)
+            # occupancy telemetry counts COALESCED flushes only: a direct
+            # (kv/argsort/stream/mesh) dispatch is always a group of one
+            # and would drag occupancy_mean down under mixed traffic
+            if key[0] == "batch":
+                self._stats["flushes"] += 1
+                self._stats["flushed_requests"] += len(live)
+            else:
+                self._stats["direct_dispatches"] += len(live)
         if key[0] == "batch":
             try:
-                results = self._engine.run_group([p.data for p in live])
+                results = self._engine.run_group(
+                    [p.data for p in live], descending=key[1])
             except Exception as e:  # noqa: BLE001 — an unexpected error
                 # (XLA compile/runtime failure, MemoryError staging the
                 # batch, ...) must fail THESE futures, never kill the
@@ -362,9 +388,16 @@ class SortServer:
 
     def _wrap_batched(self, p: _Pending, arr: np.ndarray,
                       occupancy: int, retries: int) -> SortOutput:
+        # meta.config is documented as the config ACTUALLY used after
+        # capacity retries; the engine's ladder is deterministic (one
+        # capacity bump per step), so reconstruct it from the step count
+        cfg = self.config
+        for _ in range(retries):
+            cfg = bump_capacity(cfg, self._engine.policy)
         meta = SortMeta(
-            backend="sim", plan=p.plan, config=self.config,
-            n=p.req.n or 0, want="values", order="asc",
+            backend="sim", plan=p.plan, config=cfg,
+            n=p.req.n or 0, want="values",
+            order="desc" if p.req.descending[0] else "asc",
             dtype=p.req.dtype, coalesced=occupancy, retries=retries,
         )
         return SortOutput(meta, keys=arr)

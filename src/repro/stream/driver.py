@@ -5,6 +5,12 @@ on the key stream); ``sort_stream`` yields sorted chunks in bounded
 memory for datasets that should never be host-materialized at once. Both
 accept arrays or chunk iterators, so the input need not fit in one
 allocation either.
+
+``descending=True`` threads the unified front end's device-side decode
+through the pipeline: chunks are flip-encoded on device at staging
+(pass 1) and flip-decoded on device per output chunk (pass 3), so the
+descending stream never pays a host-side key pass — and, unlike the
+legacy reverse-at-materialization path, it streams.
 """
 from __future__ import annotations
 
@@ -19,14 +25,15 @@ from repro.stream.runs import StreamConfig, generate_runs
 
 def _pipeline(
     data, cfg: StreamConfig, values=None, *, investigator: bool = True,
-    stats: dict | None = None,
+    stats: dict | None = None, descending: bool = False,
 ) -> Partition | None:
     """None = empty dataset (np.sort of empty is empty, so no error).
 
     ``stats`` (optional, mutated) receives ``chunk_retries`` — the
     per-chunk capacity-ladder steps of pass 1, which the planner threads
     into ``SortOutput.meta`` ladder accounting."""
-    runs = generate_runs(data, cfg, values, investigator=investigator)
+    runs = generate_runs(data, cfg, values, investigator=investigator,
+                         descending=descending)
     if stats is not None:
         stats["chunk_retries"] = [r.retries for r in runs]
     if not runs:
@@ -35,9 +42,13 @@ def _pipeline(
 
 
 def _empty_like(data) -> np.ndarray:
-    # array input keeps its dtype; an exhausted iterator never exposed one,
-    # so the empty result defaults to float64 (documented limitation)
-    return np.empty(0, data.dtype if isinstance(data, np.ndarray) else None)
+    # array input keeps its dtype; an exhausted iterator never exposed
+    # one, so the empty result defaults to float32 — the library runs
+    # jax in 32-bit mode and rejects 64-bit keys at the door, so a
+    # float64 default would manufacture a dtype no sort can produce
+    return np.empty(
+        0, data.dtype if isinstance(data, np.ndarray) else np.float32
+    )
 
 
 def sort_stream(
@@ -46,16 +57,20 @@ def sort_stream(
     *,
     investigator: bool = True,
     stats: dict | None = None,
+    descending: bool = False,
 ) -> Iterator[np.ndarray]:
-    """Out-of-core sort, streamed: yields ascending sorted chunks whose
-    concatenation equals np.sort(data). Peak device memory is O(chunk).
-    ``stats`` (optional dict) collects pass-1 ladder accounting."""
-    part = _pipeline(data, cfg, investigator=investigator, stats=stats)
+    """Out-of-core sort, streamed: yields sorted chunks whose
+    concatenation equals np.sort(data) (reversed when ``descending``).
+    Peak device memory is O(chunk). ``stats`` (optional dict) collects
+    pass-1 ladder accounting."""
+    part = _pipeline(data, cfg, investigator=investigator, stats=stats,
+                     descending=descending)
     if part is None:
         return
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
     yield from external_merge(
-        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk
+        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk,
+        descending=descending,
     )
 
 
@@ -65,9 +80,11 @@ def sort_external(
     *,
     investigator: bool = True,
     stats: dict | None = None,
+    descending: bool = False,
 ) -> np.ndarray:
     """Out-of-core sort, materialized on host."""
-    chunks = list(sort_stream(data, cfg, investigator=investigator, stats=stats))
+    chunks = list(sort_stream(data, cfg, investigator=investigator,
+                              stats=stats, descending=descending))
     if not chunks:
         return _empty_like(data)
     return np.concatenate(chunks)
@@ -80,16 +97,19 @@ def sort_external_kv(
     *,
     investigator: bool = True,
     stats: dict | None = None,
+    descending: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Out-of-core key/value sort (the payload — e.g. provenance indices —
     rides every pass: run generation, partitioning and the final merge)."""
-    part = _pipeline(keys, cfg, values, investigator=investigator, stats=stats)
+    part = _pipeline(keys, cfg, values, investigator=investigator,
+                     stats=stats, descending=descending)
     if part is None:
         return _empty_like(keys), _empty_like(values)
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
     ks, vs = [], []
     for mk, mv in external_merge_kv(
-        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk
+        part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk,
+        descending=descending,
     ):
         ks.append(mk)
         vs.append(mv)

@@ -17,6 +17,7 @@ from typing import Iterator
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import keyenc
 from repro.core import merge as merge_lib
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
@@ -35,18 +36,29 @@ def _stack_padded(segments: list[np.ndarray], fill) -> np.ndarray:
 
 
 def merge_segments(
-    segments: list[np.ndarray], *, use_pallas: bool = True
+    segments: list[np.ndarray], *, use_pallas: bool = True,
+    descending: bool = False
 ) -> np.ndarray:
     """Merge k sorted host segments into one sorted host array (device
-    balanced merge tree; sentinels pad ragged tails and sort last)."""
+    balanced merge tree; sentinels pad ragged tails and sort last).
+
+    ``descending=True``: the segments are flip-ENCODED (run generation's
+    device encode); the inverse flip is applied on device right after
+    the merge, before the D2H copy, so the returned chunk is already in
+    the user's descending order — the stream side of the unified front
+    end's fused device decode."""
     if not segments:
         return np.empty(0)
     if len(segments) == 1:
-        return segments[0]
+        # single-segment shortcut: no device merge runs, so the decode
+        # falls back to the host flip for this (host-resident) slice
+        return keyenc.flip_np(segments[0]) if descending else segments[0]
     total = sum(s.shape[0] for s in segments)
     fill = np.asarray(kops.sentinel_for(jnp.dtype(segments[0].dtype)))
     stacked = jnp.asarray(_stack_padded(segments, fill))
     merged = merge_lib.merge_padded_runs(stacked, use_pallas=use_pallas)
+    if descending:
+        merged = keyenc.flip(merged)  # device decode before the D2H copy
     return np.asarray(merged)[:total]
 
 
@@ -55,17 +67,21 @@ def merge_segments_kv(
     value_segments: list[np.ndarray],
     *,
     use_pallas: bool = True,
+    descending: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     if not key_segments:
         return np.empty(0), np.empty(0)
     if len(key_segments) == 1:
-        return key_segments[0], value_segments[0]
+        ks = key_segments[0]
+        return (keyenc.flip_np(ks) if descending else ks), value_segments[0]
     total = sum(s.shape[0] for s in key_segments)
     kfill = np.asarray(kops.sentinel_for(jnp.dtype(key_segments[0].dtype)))
     vfill = np.asarray(kops.sentinel_for(jnp.dtype(value_segments[0].dtype)))
     ks = jnp.asarray(_stack_padded(key_segments, kfill))
     vs = jnp.asarray(_stack_padded(value_segments, vfill))
     mk, mv = merge_lib.merge_padded_runs_kv(ks, vs, use_pallas=use_pallas)
+    if descending:
+        mk = keyenc.flip(mk)  # device decode before the D2H copy
     return np.asarray(mk)[:total], np.asarray(mv)[:total]
 
 
@@ -78,20 +94,28 @@ def _chunk_slices(n: int, out_chunk: int | None):
 
 
 def external_merge(
-    part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None
+    part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None,
+    descending: bool = False
 ) -> Iterator[np.ndarray]:
-    """Yield the globally sorted dataset as a stream of sorted chunks."""
+    """Yield the globally sorted dataset as a stream of sorted chunks.
+
+    With ``descending=True`` (flip-encoded partition), encoded-ascending
+    bucket order IS decoded-descending order, so the stream yields the
+    user's descending output chunk by chunk in bounded memory."""
     for segs in part.segments:
-        merged = merge_segments(segs, use_pallas=use_pallas)
+        merged = merge_segments(segs, use_pallas=use_pallas,
+                                descending=descending)
         for lo, hi in _chunk_slices(merged.shape[0], out_chunk):
             yield merged[lo:hi]
 
 
 def external_merge_kv(
-    part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None
+    part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None,
+    descending: bool = False
 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
     assert part.value_segments is not None, "partition carries no values"
     for segs, vsegs in zip(part.segments, part.value_segments):
-        mk, mv = merge_segments_kv(segs, vsegs, use_pallas=use_pallas)
+        mk, mv = merge_segments_kv(segs, vsegs, use_pallas=use_pallas,
+                                   descending=descending)
         for lo, hi in _chunk_slices(mk.shape[0], out_chunk):
             yield mk[lo:hi], mv[lo:hi]

@@ -118,12 +118,24 @@ def generate_runs(
     values: np.ndarray | Iterable[np.ndarray] | None = None,
     *,
     investigator: bool = True,
+    descending: bool = False,
 ) -> list[Run]:
     """Pass 1: cut ``data`` into chunks, sort each in-core, return runs.
 
     ``values`` (optional payload, e.g. provenance indices) must chunk
     identically to ``data``.
+
+    ``descending=True`` fuses the order-flip ENCODE into this pass: raw
+    chunks are staged padded with the *flipped* sentinel (dtype min /
+    -inf) and flipped on device right after H2D, so the runs come back
+    in flip-encoded ascending order and no host pass ever touches the
+    keys. Passes 2-3 operate in the encoded space unchanged; the
+    matching device-side flip DECODE happens per output chunk in
+    ``external_merge`` (the unified front end's ``decode="device"``
+    stream path).
     """
+    from repro.core import keyenc
+
     p, per = cfg.n_procs, -(-cfg.chunk_elems // cfg.n_procs)
     key_chunks = iter_chunks(data, p * per)
     val_chunks = iter_chunks(values, p * per) if values is not None else None
@@ -133,6 +145,8 @@ def generate_runs(
     inflight = None
 
     def dispatch(dev_k, dev_v, sort_cfg):
+        if descending:
+            dev_k = keyenc.flip(dev_k)  # device encode, overlaps like H2D
         if dev_v is None:
             return sim.sample_sort_sim(dev_k, sort_cfg, investigator=investigator)
         return sim.sample_sort_sim_kv(dev_k, dev_v, sort_cfg, investigator=investigator)
@@ -162,6 +176,10 @@ def generate_runs(
         m = int(chunk.shape[0])
         planner_grid.check_key_dtype(chunk.dtype, what="stream chunk keys")
         kfill = np.asarray(kops.sentinel_for(jnp.dtype(chunk.dtype)))
+        if descending:
+            # pads must sort to the tail in the ENCODED space: stage the
+            # flipped sentinel, which the on-device flip maps back to it
+            kfill = keyenc.flip_np(kfill)
         # H2D of the NEXT chunk goes on the wire while the previous
         # chunk's sort is still executing (async dispatch) — the
         # double-buffer overlap.

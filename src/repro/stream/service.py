@@ -5,7 +5,15 @@ concurrent sort requests of arbitrary length are padded up to power-of-two
 *shape buckets*, same-bucket requests are stacked and executed as ONE
 vmapped sample-sort program, and compiled executables are cached per
 (batch, shape, dtype, config) so a steady-state request mix runs with
-zero recompiles. Per-request overflow is detected from the vmapped
+zero recompiles. The device decode is fused into the vmapped program
+(``sim.sample_sort_sim_flat``): compaction — and the order-flip for
+descending buckets — happens before the D2H copy, so a flush transfers
+the (batch, p*per) decoded output rather than the padded exchange grid
+and per-request materialization is a host slice. Request staging spreads
+real elements evenly across the grid rows (``planner.pad_grid``), so
+far-from-pow2 request sizes no longer pile their pad sentinels into the
+top key range and pay a per-request capacity-ladder retry on every
+flush — steady-state retries are zero for any request size. Per-request overflow is detected from the vmapped
 overflow flags and retried individually through the library's unified
 capacity ladder (``core.overflow.OverflowPolicy`` — the same policy
 ``repro.sort`` applies), paid only by the requests that actually
@@ -26,6 +34,7 @@ overflow-ladder behavior.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Sequence
@@ -34,18 +43,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sim
+from repro.core import keyenc, sim
 from repro.core.overflow import OverflowPolicy, SortOverflowError, retry_overflowed
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
-from repro.stream.runs import _pad_chunk, _unpad
+from repro.stream.runs import _pad_chunk
 
 
 class ProgramCache:
     """Compiled vmapped sample-sort programs, keyed by
-    (batch, p, per, dtype, config, investigator). Shared between the
-    SortService flush path and ``SortLibrary.sort_many``."""
+    (batch, p, per, dtype, config, investigator, flat, descending).
+    Shared between the SortService flush path and
+    ``SortLibrary.sort_many``. ``flat=True`` programs fuse the device
+    decode (``sim.sample_sort_sim_flat``): the compaction gather — and,
+    for descending buckets, the order-flip encode/decode — runs inside
+    the vmapped program, so the flush's D2H copy is the (batch, p*per)
+    decoded output instead of the ~p-times-larger padded exchange
+    grid."""
 
     def __init__(self, stats: dict | None = None):
         self.programs: dict = {}
@@ -54,13 +69,22 @@ class ProgramCache:
         self.stats.setdefault("hits", 0)
 
     def get(self, batch: int, p: int, per: int, dtype,
-            config: SortConfig, investigator: bool):
-        key = (batch, p, per, np.dtype(str(dtype)).str, config, investigator)
+            config: SortConfig, investigator: bool, *,
+            flat: bool = False, descending: bool = False):
+        key = (batch, p, per, np.dtype(str(dtype)).str, config, investigator,
+               flat, descending)
         fn = self.programs.get(key)
         if fn is None:
-            body = functools.partial(
-                sim.sample_sort_sim, config=config, investigator=investigator
-            )
+            if flat:
+                body = functools.partial(
+                    sim.sample_sort_sim_flat, config=config,
+                    investigator=investigator, descending=descending,
+                )
+            else:
+                body = functools.partial(
+                    sim.sample_sort_sim, config=config,
+                    investigator=investigator,
+                )
             fn = jax.jit(jax.vmap(body))
             self.programs[key] = fn
             self.stats["programs"] += 1
@@ -90,7 +114,7 @@ class FlushEngine:
     def __init__(self, *, config: SortConfig = SortConfig(), n_procs: int = 8,
                  investigator: bool = True, max_doublings: int = 3,
                  growth: float = 2.0, max_batch: int = 64,
-                 stats: dict | None = None):
+                 stats: dict | None = None, stats_lock=None):
         self.config = config
         self.n_procs = n_procs
         self.investigator = investigator
@@ -98,6 +122,12 @@ class FlushEngine:
         self.growth = growth
         self.max_batch = max_batch
         self.stats = stats if stats is not None else {}
+        # "retries" may have a second writer (the async server's direct-
+        # dispatch workers add stream/mesh ladder steps to the same dict
+        # under its own lock), so a shared lock must guard the
+        # read-modify-write; single-threaded callers pass nothing
+        self._stats_lock = (stats_lock if stats_lock is not None
+                            else contextlib.nullcontext())
         for k in ("programs", "hits", "batches", "retries"):
             self.stats.setdefault(k, 0)
         self.cache = ProgramCache(self.stats)
@@ -115,61 +145,83 @@ class FlushEngine:
         """Requests with equal bucket keys may share one vmapped program."""
         return (self.bucket_elems(data.shape[0]), data.dtype.str)
 
-    def run_group(self, datas: list[np.ndarray]) -> list[tuple]:
+    def _fill(self, dtype, descending: bool):
+        """Staging sentinel: pads must sort to the tail of the ENCODED
+        space, so descending buckets stage the flipped sentinel (dtype
+        min / -inf) that the in-program flip maps back onto it."""
+        fill = np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
+        return keyenc.flip_np(fill) if descending else fill
+
+    def run_group(self, datas: list[np.ndarray], *,
+                  descending: bool = False) -> list[tuple]:
         """Execute one shape bucket's flat arrays; per entry,
-        ``(sorted array | terminal exception, ladder_steps)``."""
+        ``(sorted array | terminal exception, ladder_steps)``.
+        ``descending`` buckets run the same fused program with the
+        order-flip encode/decode inside it — requests arrive raw."""
         elems = self.bucket_elems(datas[0].shape[0])
         out: list = []
         for i in range(0, len(datas), self.max_batch):
-            out.extend(self._run_batch(datas[i : i + self.max_batch], elems))
+            out.extend(
+                self._run_batch(datas[i : i + self.max_batch], elems,
+                                descending)
+            )
         return out
 
-    def _run_batch(self, datas: list[np.ndarray], elems: int) -> list[tuple]:
+    def _run_batch(self, datas: list[np.ndarray], elems: int,
+                   descending: bool) -> list[tuple]:
         p = self.n_procs
         per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
         dtype = datas[0].dtype
-        fill = np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
+        fill = self._fill(dtype, descending)
         b = _next_pow2(len(datas))
         batch = np.full((b, p, per), fill, dtype)
         for i, d in enumerate(datas):
             batch[i] = _pad_chunk(d, p, per, fill)
 
-        fn = self.cache.get(b, p, per, dtype, self.config, self.investigator)
+        fn = self.cache.get(b, p, per, dtype, self.config, self.investigator,
+                            flat=True, descending=descending)
         res = fn(jnp.asarray(batch))
         self.stats["batches"] += 1
 
         overflowed = np.asarray(res.overflowed)
-        values = np.asarray(res.values)  # one D2H transfer for the batch
-        counts = np.asarray(res.counts)
+        # ONE D2H transfer of the decoded (b, p*per) output — the decode
+        # (compaction + flip) already ran inside the vmapped program, so
+        # per-request materialization is a host slice, and the padded
+        # (b, p, p*cap) exchange grid never crosses to the host
+        flat = np.asarray(res.flat)
         out: list = []
         for i, d in enumerate(datas):
             if overflowed[i]:
                 try:
-                    out.append(self._retry_one(d, elems))
+                    out.append(self._retry_one(d, elems, descending))
                 except SortOverflowError as e:
                     out.append((e, self.max_doublings))
                 continue
-            out.append((_unpad(values[i], counts[i], d.shape[0]), 0))
+            out.append((flat[i, : d.shape[0]].copy(), 0))
         return out
 
-    def _retry_one(self, data: np.ndarray, elems: int) -> tuple:
+    def _retry_one(self, data: np.ndarray, elems: int,
+                   descending: bool) -> tuple:
         """Unified capacity ladder for a single overflowed request — the
         batched attempt at ``self.config`` counts as the failed initial
         attempt, so the ladder starts at the first capacity bump exactly
         like ``repro.sort``'s overflow policy would. Returns
         ``(sorted array, ladder_steps_taken)``."""
         p, per = self.n_procs, -(-elems // self.n_procs)
-        fill = np.asarray(kops.sentinel_for(jnp.dtype(data.dtype)))
-        x = jnp.asarray(_pad_chunk(data, p, per, fill))
+        x = jnp.asarray(_pad_chunk(data, p, per, self._fill(data.dtype,
+                                                            descending)))
 
         def on_retry(_cfg):
-            self.stats["retries"] += 1
+            with self._stats_lock:
+                self.stats["retries"] += 1
 
         r, _cfg, n = retry_overflowed(
-            lambda cfg: sim.sample_sort_sim(x, cfg, investigator=self.investigator),
+            lambda cfg: sim.sample_sort_sim_flat(
+                x, cfg, investigator=self.investigator, descending=descending
+            ),
             self.config, self.policy, on_retry=on_retry,
         )
-        return _unpad(r.values, r.counts, data.shape[0]), n
+        return np.asarray(r.flat)[: data.shape[0]].copy(), n
 
 
 class SortServiceError(RuntimeError):

@@ -192,15 +192,20 @@ def test_counts_exclude_padding_on_nondivisible_input():
     np.testing.assert_array_equal(out.keys, np.sort(x))
 
 
-def test_sentinel_keys_only_rejected_when_padded():
+def test_sentinel_keys_rejected_for_payload_sorts():
     import jax.numpy as jnp
 
-    # unpadded (p, n_local) grid: dtype-max keys sort fine (seed contract)
+    # keys-only: dtype-max keys are value-identical to pads, so the
+    # sorted keys stay bit-exact — no restriction
     k = np.random.default_rng(21).integers(0, 5, (4, 64)).astype(np.int32)
     k[0, 0] = np.iinfo(np.int32).max
-    out = repro.sort(jnp.asarray(k), want="order", config=CFG)
+    out = repro.sort(jnp.asarray(k), config=CFG)
     np.testing.assert_array_equal(out.keys, np.sort(k.reshape(-1)))
-    # padded flat payload sort: the same key must be rejected loudly
+    # payload sorts must reject the sentinel-colliding key ALWAYS —
+    # the exchange's in-program capacity pads leak sentinel payload
+    # even on shard-divisible inputs the front end never pads
+    with pytest.raises(ValueError, match="padding sentinel"):
+        repro.sort(jnp.asarray(k), want="order", config=CFG)
     with pytest.raises(ValueError, match="padding sentinel"):
         repro.sort(np.array([2**31 - 1] * 10 + [3], np.int32),
                    want="order", config=CFG)

@@ -1,0 +1,308 @@
+"""Device-side decode & gather (the unified front end's fused
+materialization): bit-exactness of ``decode="device"`` against the
+legacy ``decode="host"`` path and the numpy oracles on duplicate-heavy
+inputs across all three backends, the device segment-stable tie fix,
+streaming descending chunks, the sharpened descending-payload sentinel
+error, the empty-iterator dtype regression, and the serve engine's
+in-program decode (descending coalescing + sentinel-aware staging)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core import keyenc
+from repro.core.local_sort import segment_stable_kv
+from repro.core.planner import _stable_order_fix
+from repro.stream import SortService
+from repro.serve import SortServer
+
+CFG = repro.SortConfig(use_pallas=False, capacity_factor=2.0)
+DEV = repro.SortLimits(chunk_elems=1 << 12, n_procs=4)
+HOST = dataclasses.replace(DEV, decode="host")
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _where(backend, mesh1):
+    return (mesh1, "data") if backend == "mesh" else backend
+
+
+def _dup_heavy(dtype, n, rng):
+    """>= 50% duplicated keys — the paper's duplicate-handling regime
+    (every value of a 5-symbol alphabet repeats ~n/5 times)."""
+    return rng.integers(1, 6, n).astype(dtype)
+
+
+# --------------------------------------------- device == host == numpy
+
+
+@pytest.mark.parametrize("backend", ["sim", "stream", "mesh"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("order", ["asc", "desc"])
+def test_keys_only_device_equals_host_and_np(backend, dtype, order, mesh1):
+    rng = np.random.default_rng(0)
+    x = _dup_heavy(dtype, 6001, rng)  # non-divisible: padding in play
+    dev = repro.sort(x, order=order, where=_where(backend, mesh1),
+                     limits=DEV, config=CFG)
+    host = repro.sort(x, order=order, where=_where(backend, mesh1),
+                      limits=HOST, config=CFG)
+    expect = np.sort(x)[::-1] if order == "desc" else np.sort(x)
+    np.testing.assert_array_equal(dev.keys, expect)
+    np.testing.assert_array_equal(dev.keys, host.keys)
+    assert dev.keys.dtype == np.dtype(dtype)
+    assert dev.meta.plan.decode == "device"
+    assert host.meta.plan.decode == "host"
+
+
+@pytest.mark.parametrize("backend", ["sim", "stream", "mesh"])
+@pytest.mark.parametrize("order", ["asc", "desc"])
+def test_argsort_device_equals_host_and_np_stable(backend, order, mesh1):
+    rng = np.random.default_rng(1)
+    x = _dup_heavy(np.int32, 5000, rng)
+    dev = repro.sort(x, want="order", order=order,
+                     where=_where(backend, mesh1), limits=DEV, config=CFG)
+    host = repro.sort(x, want="order", order=order,
+                      where=_where(backend, mesh1), limits=HOST, config=CFG)
+    enc = keyenc.flip_np(x) if order == "desc" else x
+    np.testing.assert_array_equal(dev.order(), np.argsort(enc, kind="stable"))
+    np.testing.assert_array_equal(dev.order(), host.order())
+    np.testing.assert_array_equal(dev.keys, host.keys)
+
+
+@pytest.mark.parametrize("backend", ["sim", "stream", "mesh"])
+@pytest.mark.parametrize("order", ["asc", "desc"])
+def test_kv_device_equals_host_bit_identical(backend, order, mesh1):
+    rng = np.random.default_rng(2)
+    k = _dup_heavy(np.int32, 6001, rng)
+    v = np.arange(k.size, dtype=np.int32)
+    dev = repro.sort(k, v, order=order, where=_where(backend, mesh1),
+                     limits=DEV, config=CFG)
+    host = repro.sort(k, v, order=order, where=_where(backend, mesh1),
+                      limits=HOST, config=CFG)
+    expect = np.sort(k)[::-1] if order == "desc" else np.sort(k)
+    np.testing.assert_array_equal(dev.keys, expect)
+    np.testing.assert_array_equal(k[dev.values], dev.keys)  # payload rides
+    np.testing.assert_array_equal(np.sort(dev.values), v)  # a permutation
+    # the acceptance bar: decode paths agree bit for bit
+    np.testing.assert_array_equal(dev.keys, host.keys)
+    np.testing.assert_array_equal(dev.values, host.values)
+
+
+def test_multikey_device_equals_host_and_lexsort():
+    rng = np.random.default_rng(3)
+    k1 = rng.integers(0, 3, 4000).astype(np.int32)
+    k2 = rng.integers(0, 4, 4000).astype(np.int32)
+    expect = np.lexsort((keyenc.flip_np(k2), k1))
+    dev = repro.sort((k1, k2), want="order", order=("asc", "desc"),
+                     limits=DEV, config=CFG)
+    host = repro.sort((k1, k2), want="order", order=("asc", "desc"),
+                      limits=HOST, config=CFG)
+    np.testing.assert_array_equal(dev.order(), expect)
+    np.testing.assert_array_equal(dev.order(), host.order())
+
+
+def test_segment_stable_device_pass_matches_host_fix():
+    rng = np.random.default_rng(4)
+    ks = np.sort(_dup_heavy(np.int32, 3000, rng))
+    idx = rng.permutation(3000).astype(np.int32)
+    got = np.asarray(segment_stable_kv(ks, idx))
+    np.testing.assert_array_equal(got, _stable_order_fix(ks, idx))
+    # single-element and empty-tie shapes
+    np.testing.assert_array_equal(
+        np.asarray(segment_stable_kv(ks[:1], idx[:1])), idx[:1])
+
+
+# --------------------------------------------------- streaming descending
+
+
+def test_descending_stream_chunks_bounded_and_ordered():
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, 20000).astype(np.float32)
+    out = repro.sort(x, order="desc", where="stream", limits=DEV, config=CFG)
+    chunks = list(out.chunks())
+    assert len(chunks) > 1  # actually streamed, not one materialized blob
+    np.testing.assert_array_equal(np.concatenate(chunks), np.sort(x)[::-1])
+    assert out.counts is not None  # chunk sizes recorded on consumption
+
+
+def test_descending_iterator_input_streams():
+    rng = np.random.default_rng(6)
+    pieces = [rng.integers(0, 50, 3000).astype(np.int32) for _ in range(3)]
+    out = repro.sort(iter(pieces), order="desc", limits=DEV, config=CFG)
+    got = np.concatenate(list(out.chunks()))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate(pieces))[::-1])
+
+
+def test_descending_keys_only_dtype_min_is_exact():
+    """Keys-only descending has NO sentinel restriction: a dtype-min key
+    flips onto the pad sentinel but is value-identical to it, so the
+    decoded keys stay bit-exact on every backend."""
+    base = np.array([np.iinfo(np.int32).min, 5, -3,
+                     np.iinfo(np.int32).min, 7], np.int32)
+    x = np.tile(base, 1001)  # non-divisible
+    for backend in ("sim", "stream"):
+        out = repro.sort(x, order="desc", where=backend, limits=DEV,
+                         config=CFG)
+        np.testing.assert_array_equal(out.keys, np.sort(x)[::-1])
+
+
+def test_host_decode_descending_stream_still_materializes():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, 9000).astype(np.float32)
+    out = repro.sort(x, order="desc", where="stream", limits=HOST, config=CFG)
+    with pytest.raises(ValueError, match="does not stream"):
+        next(iter(out.chunks()))
+    np.testing.assert_array_equal(out.keys, np.sort(x)[::-1])
+
+
+# -------------------------------------------- sharpened sentinel error
+
+
+@pytest.mark.parametrize("order,bad,dtype", [
+    ("desc", np.iinfo(np.int32).min, np.int32),
+    ("desc", -np.inf, np.float32),
+    ("asc", np.iinfo(np.int32).max, np.int32),
+    ("asc", np.inf, np.float32),
+])
+@pytest.mark.parametrize("payload", ["order", "values"])
+def test_payload_sentinel_key_raises(order, bad, dtype, payload):
+    # 4-divisible length: the pre-fix planner only checked when the
+    # front end padded, but the exchange's in-program capacity pads
+    # corrupt the payload even unpadded — this exact shape used to
+    # return silently corrupt values (both directions, empirically)
+    x = np.array([bad, 1, 2, 3], dtype)
+    kw = ({"want": "order"} if payload == "order"
+          else {"values": np.arange(4, dtype=np.int32)})
+    for backend in ("sim", "stream"):
+        with pytest.raises(ValueError, match="padding sentinel") as ei:
+            repro.sort(x, order=order, where=backend, limits=DEV,
+                       config=CFG, **kw)
+        assert repr(np.dtype(dtype).type(bad)) in str(ei.value)
+
+
+def test_nan_payload_keys_raise():
+    """NaN orders past the +-inf sentinel, so payload sorts with NaN
+    keys used to leak pad payloads silently — now rejected loudly in
+    both directions."""
+    x = np.array([np.nan, 1.0, 2.0, 3.0] * 4, np.float32)  # divisible
+    with pytest.raises(ValueError, match="NaN"):
+        repro.sort(x, np.arange(16, dtype=np.int32), config=CFG)
+    with pytest.raises(ValueError, match="NaN"):
+        repro.sort(x, want="order", order="desc", config=CFG)
+
+
+def test_bf16_payload_inf_keys_raise():
+    """bf16 keys sort as f32, whose sentinel is +-inf: a bf16 inf key
+    collides with it and must be rejected like every other dtype (this
+    hole used to corrupt the payload silently)."""
+    import jax.numpy as jnp
+
+    k = jnp.asarray([np.inf, 1, 2, 3] * 16, jnp.bfloat16)
+    with pytest.raises(ValueError, match="padding sentinel"):
+        repro.sort(k, np.arange(64, dtype=np.int32), config=CFG)
+    with pytest.raises(ValueError, match="padding sentinel"):
+        repro.sort(-k, order="desc", want="order", config=CFG)
+
+
+def test_keys_only_descending_not_restricted_by_guard():
+    x = np.array([np.iinfo(np.int32).min, 1, 2, 3], np.int32)
+    out = repro.sort(x, order="desc", config=CFG)  # no payload: fine
+    np.testing.assert_array_equal(out.keys, np.sort(x)[::-1])
+
+
+# ------------------------------------------------- empty-result dtype
+
+
+def test_empty_iterator_defaults_to_float32():
+    """Regression: empty stream results used to default to float64 even
+    though the library runs jax in 32-bit mode and rejects 64-bit keys
+    at the door."""
+    out = repro.sort(iter([]))
+    assert out.keys.shape == (0,)
+    assert out.keys.dtype == np.float32
+    out2 = repro.sort(iter([]), where="stream", limits=DEV, config=CFG)
+    assert list(out2.chunks()) == []
+    out3 = repro.sort(iter([]), where="stream", limits=DEV, config=CFG)
+    assert out3.keys.shape == (0,) and out3.keys.dtype == np.float32
+
+
+def test_empty_array_keeps_planned_dtype():
+    out = repro.sort(np.empty(0, np.uint32))
+    assert out.keys.dtype == np.uint32
+
+
+# ------------------------------------------------------- serving paths
+
+
+def test_serve_descending_requests_coalesce():
+    """Descending keys-only requests now share a vmapped bucket (the
+    flip decode is fused in-program) instead of dispatching one by
+    one — and bucket separately from ascending requests."""
+    rng = np.random.default_rng(8)
+    with SortServer(max_batch=10_000, max_delay_ms=600_000, config=CFG,
+                    limits=repro.SortLimits(n_procs=4)) as srv:
+        xs = [rng.normal(0, 1, 300).astype(np.float32) for _ in range(4)]
+        fa = [srv.submit(a) for a in xs]
+        fd = [srv.submit(a, order="desc") for a in xs]
+        srv.flush(300)
+        for a, f in zip(xs, fa):
+            out = f.result(1)
+            np.testing.assert_array_equal(out.keys, np.sort(a))
+            assert out.meta.coalesced == 4 and out.meta.order == "asc"
+        for a, f in zip(xs, fd):
+            out = f.result(1)
+            np.testing.assert_array_equal(out.keys, np.sort(a)[::-1])
+            assert out.meta.coalesced == 4 and out.meta.order == "desc"
+
+
+def test_serve_host_decode_requests_do_not_coalesce():
+    """A per-request decode="host" override must dispatch individually:
+    the fused batch program decodes on device, so coalescing it would
+    silently ignore the override and misreport meta.plan.decode."""
+    rng = np.random.default_rng(10)
+    x = rng.normal(0, 1, 256).astype(np.float32)
+    with SortServer(max_batch=10_000, max_delay_ms=600_000, config=CFG,
+                    limits=repro.SortLimits(n_procs=4)) as srv:
+        f_host = srv.submit(x, limits=repro.SortLimits(n_procs=4,
+                                                       decode="host"))
+        f_dev = srv.submit(x)
+        srv.flush(300)
+        out_host, out_dev = f_host.result(1), f_dev.result(1)
+        assert out_host.meta.coalesced is None
+        assert out_host.meta.plan.decode == "host"
+        assert out_dev.meta.coalesced == 1
+        np.testing.assert_array_equal(out_host.keys, np.sort(x))
+        np.testing.assert_array_equal(out_dev.keys, np.sort(x))
+
+
+def test_engine_non_pow2_sizes_zero_ladder_retries():
+    """The serve sentinel-capacity regression: far-from-pow2 request
+    sizes used to pile their pad sentinels into the top key range and
+    walk the capacity ladder on every flush (8 ladder steps for this
+    exact workload under head-first staging); sentinel-aware spreading
+    must keep the counter at zero with the stock capacity_factor."""
+    rng = np.random.default_rng(9)
+    svc = SortService(config=repro.SortConfig(use_pallas=False), n_procs=8)
+    arrs = [rng.normal(0, 1, n).astype(np.float32)
+            for n in (2100, 1800, 2400, 2100)]
+    for a, got in zip(arrs, svc.sort_many(arrs)):
+        np.testing.assert_array_equal(got, np.sort(a))
+    assert svc.stats["retries"] == 0
+    # steady state stays flat too
+    for a, got in zip(arrs, svc.sort_many(arrs)):
+        np.testing.assert_array_equal(got, np.sort(a))
+    assert svc.stats["retries"] == 0
+
+
+def test_plan_records_decode_field():
+    x = np.arange(16, dtype=np.int32)
+    assert repro.plan(x).decode == "device"
+    assert repro.plan(x, limits=HOST).decode == "host"
+    assert "decode=host" in repro.explain(x, limits=HOST)
+    with pytest.raises(ValueError, match="decode"):
+        repro.plan(x, limits=dataclasses.replace(DEV, decode="gpu"))

@@ -209,21 +209,27 @@ def test_requests_route_through_planner_to_different_backends():
 
 
 def test_non_coalescable_requests_dispatch_individually():
-    """kv / argsort / descending requests ride the planner's direct path
-    and keep repro.sort's full result surface."""
+    """kv / argsort requests ride the planner's direct path and keep
+    repro.sort's full result surface. Descending keys-only requests now
+    COALESCE (the flip decode is fused into the vmapped program) and
+    carry their order on the batched meta."""
     with _server(max_batch=8, max_delay_ms=10) as srv:
         k = RNG.integers(0, 9, 500).astype(np.int32)
         v = np.arange(500, dtype=np.int32)
         kv = srv.submit(k, v).result(120)
         np.testing.assert_array_equal(kv.keys, np.sort(k))
         np.testing.assert_array_equal(k[kv.values], kv.keys)
+        assert kv.meta.coalesced is None
 
         order = srv.submit(k, want="order").result(120)
         np.testing.assert_array_equal(
             order.order(), np.argsort(k, kind="stable"))
+        assert order.meta.coalesced is None
 
         desc = srv.submit(k, order="desc").result(120)
         np.testing.assert_array_equal(desc.keys, np.sort(k)[::-1])
+        assert desc.meta.coalesced is not None
+        assert desc.meta.order == "desc"
 
 
 def test_coalescing_respects_per_request_ladder_policy():
