@@ -1,5 +1,6 @@
 """Unified-API benchmarks: planner dispatch overhead, the device-decode
-materialization gate, and the backend matrix.
+materialization gate, the multi-key packing gate, and the backend
+matrix.
 
 ``planner_overhead`` is the acceptance gate of the front-end redesign:
 ``repro.sort`` (plan -> dispatch -> SortOutput) must cost <5% over
@@ -7,9 +8,12 @@ calling the backend directly. ``decode_materialization`` is the
 device-decode gate: materializing a 2^22-element descending kv sort
 must be >=1.5x faster with the fused device decode than with the legacy
 host decode (``REPRO_API_SMOKE=1`` = CI correctness-only mode, tiny
-input, no wall-clock assert). ``api_matrix`` records wall time and
-achieved balance of planner-dispatched sorts per backend/size/dtype for
-the cross-PR JSON trajectory.
+input, no wall-clock assert). ``multikey_pack`` is the packing gate: a
+2^20-element three-narrow-key sort must run >=2x faster fused into one
+packed int32 pass than as LSD stable passes (same smoke convention).
+``api_matrix`` records wall time and achieved balance of
+planner-dispatched sorts per backend/size/dtype for the cross-PR JSON
+trajectory.
 """
 from __future__ import annotations
 
@@ -137,6 +141,60 @@ def decode_materialization():
     if not SMOKE:
         assert speedup >= 1.5, (
             f"device decode materialization speedup {speedup:.2f}x < 1.5x"
+        )
+
+
+def multikey_pack():
+    """Multi-key packing gate: one fused packed int32 pass must beat the
+    LSD stable passes by >=2x on a 2^20 three-narrow-key sort.
+
+    The LSD construction runs one stable argsort per key (device kv
+    sort + host gathers + permutation composition); the packed path is
+    one host pack, ONE keys-only device sort, and the fused device
+    unpack — the traffic the paper's duplicate-heavy regime is made of
+    (enum/bucket/timestamp-delta tuples). Both sides materialize their
+    key columns, so the gate times what a caller actually waits for.
+    ``gate_ratio`` interleaves the sides (median-of-N) so a CI-neighbor
+    load spike degrades both estimates instead of biasing the ratio;
+    REPRO_API_SMOKE=1 shrinks the input and gates correctness only —
+    both strategies must still match the np.lexsort oracle bit for bit.
+    """
+    n = (1 << 12) if SMOKE else (1 << 20)
+    rng = np.random.default_rng(21)
+    keys = (
+        rng.integers(0, 16, n).astype(np.int8),      # 4 bits
+        rng.integers(0, 256, n).astype(np.int16),    # 8 bits
+        rng.integers(0, 1024, n).astype(np.uint32),  # 10 bits
+    )
+    lim_packed = repro.SortLimits(multikey="packed", stream_threshold=None)
+    lim_lsd = repro.SortLimits(multikey="lsd", stream_threshold=None)
+
+    # correctness first: both strategies == np.lexsort, bit for bit
+    expect = np.lexsort((keys[2], keys[1], keys[0]))
+    out_p = repro.sort(keys, config=CFG, limits=lim_packed)
+    out_l = repro.sort(keys, config=CFG, limits=lim_lsd)
+    assert out_p.meta.multikey == "packed" and out_l.meta.multikey == "lsd"
+    for a, b, k in zip(out_p.keys, out_l.keys, keys):
+        np.testing.assert_array_equal(a, k[expect])
+        np.testing.assert_array_equal(a, b)
+
+    def run(limits):
+        o = repro.sort(keys, config=CFG, limits=limits)
+        return jax.block_until_ready([np.asarray(c) for c in o.keys])
+
+    iters = 3 if SMOKE else 7
+    us_packed, us_lsd = gate_ratio(lambda: run(lim_packed),
+                                   lambda: run(lim_lsd),
+                                   warmup=2, iters=iters)
+    speedup = us_lsd / us_packed
+    emit("api_multikey_lsd", us_lsd, backend="sim", size=n,
+         dtype="int8+int16+uint32", smoke=SMOKE)
+    emit("api_multikey_packed", us_packed,
+         f"speedup={speedup:.2f}x_vs_lsd", backend="sim", size=n,
+         dtype="int8+int16+uint32", speedup=round(speedup, 2), smoke=SMOKE)
+    if not SMOKE:
+        assert speedup >= 2.0, (
+            f"packed multi-key speedup {speedup:.2f}x < 2x over LSD"
         )
 
 

@@ -12,7 +12,9 @@ REPRO_API_SMOKE=1 (tiny sizes, correctness-only gates — the CI profile;
 see benchmarks/serve_bench.py / api_bench.py). The api decode gate
 (``decode_gate``) asserts the fused device-decode materialization is
 >=1.5x faster than the host-decode baseline for a 2^22 descending kv
-sort; ``serve_pad_retries`` asserts zero overflow-ladder retries for
+sort; the ``multikey`` gate asserts the packed multi-key path is >=2x
+faster than the LSD stable passes for a 2^20 three-narrow-key sort;
+``serve_pad_retries`` asserts zero overflow-ladder retries for
 coalesced non-pow2 request sizes.
 """
 import argparse
@@ -57,6 +59,7 @@ def main() -> None:
         "api": {
             "planner_overhead": api_bench.planner_overhead,
             "decode_gate": api_bench.decode_materialization,
+            "multikey": api_bench.multikey_pack,
             "api_matrix": api_bench.api_matrix,
         },
         "serve": {

@@ -21,8 +21,35 @@ where=None, limits=None, config=None, investigator=True)``
             ``jax.sharding.Mesh``, or (mesh, axis_name). Default: the
             planner decides (see ``repro.plan``).
     limits: ``SortLimits`` resource hints (n_procs, chunk_elems,
-            stream_threshold, overflow ladder, serving size caps).
+            stream_threshold, overflow ladder, serving size caps,
+            multi-key strategy + declared key bit widths).
     config: ``SortConfig`` tuning knobs (paper defaults).
+
+Multi-key strategy (``plan.multikey``)
+--------------------------------------
+A key tuple runs as ONE fused sort whenever it can: the planner
+measures each key's effective bit width (the bits of its monotone
+unsigned rank range — sign-xor for ints, the IEEE total-order bit trick
+for float32) plus the per-key order flips, and when the widths sum to
+<= 31 it packs the tuple into a single non-negative int32 key
+(``keyenc.pack_keys``) sorted ascending in one pass — the decision rule
+is ``plan.multikey == "packed"``, surfaced with its widths by
+``repro.explain``. Anything unpackable — total width over 31 bits
+(e.g. any full-range uint32/int32 column, a float column whose values
+cross zero), an unpackable dtype (bfloat16), NaN floats — falls back to
+``"lsd"``: one stable argsort pass per key, with the fallback cause in
+the plan reasons. ``SortLimits.multikey`` forces either strategy
+("packed" raises when the tuple cannot pack); ``SortLimits.key_bits``
+declares per-key widths (values promised in ``[0, 2**bits)``, validated
+at pack time) so the pack recipe — and therefore the async server's
+coalescing bucket — stays identical across requests instead of being
+re-measured per dataset. The 31-bit budget is a hard consequence of the
+32-bit mode below: the packed key must stay a non-negative int32, and
+64-bit keys remain rejected everywhere. Packed PAYLOAD sorts have one
+representability edge: a tuple saturating a full 31-bit pack lands on
+the int32 padding sentinel and raises a ``ValueError`` naming the
+packed value and its source columns (narrower packs cannot collide;
+packed keys-only sorts are unrestricted).
 
 Documented limitations
 ----------------------

@@ -14,10 +14,24 @@ re-implementing it:
                    provenance encoding); the kv sort is exactly stable
                    for unique increasing payloads, so the returned
                    permutation matches ``np.argsort(kind="stable")``.
-  * multi-key   -> LSD passes: stable argsort by the last key, then by
-                   each earlier key over the gathered order — the classic
-                   radix-over-columns construction on top of the stable
-                   single-key sort (see ``api._lexsort_passes``).
+  * multi-key   -> two strategies, chosen by the planner per request
+                   (``plan.multikey``):
+                   ``"packed"`` — when the tuple's effective bit widths
+                   (measured from the data, or declared via
+                   ``SortLimits.key_bits``) sum to <= 31, the columns are
+                   fused into ONE non-negative int32 key (``pack_keys``):
+                   each column becomes a bit field holding its monotone
+                   unsigned rank (sign-xor for ints, the IEEE total-order
+                   bit trick for float32, minus the measured range
+                   offset), per-key descending flags reverse the field in
+                   place, and the single ascending int32 sort IS the
+                   lexicographic sort — one exchange pass instead of one
+                   stable pass per key, and (keys-only) coalescable by
+                   the serve flush engine.
+                   ``"lsd"`` — the fallback: stable argsort by the last
+                   key, then by each earlier key over the gathered order
+                   — the classic radix-over-columns construction on top
+                   of the stable single-key sort.
 
 Device-side decode (``decode_grid`` / ``compact_rows``): the inverse of
 the encodings above runs *on device*, fused into one jitted program per
@@ -40,9 +54,15 @@ the sentinel). Keys-only sorts of NaN-free keys have no restriction in
 either direction: a sentinel-valued key is value-identical to a pad, so
 the decoded keys are still bit-exact. NaN keys are unsupported
 throughout (seed-era limitation: they sort past the padding sentinel).
+For PACKED multi-key payload sorts the restriction lives in the packed
+space: a tuple saturating a full 31-bit pack lands on the int32
+sentinel, and ``check_payload_keys`` names both the packed value and
+the source column values (packs under 31 total bits cannot collide at
+all, and packed keys-only sorts are unrestricted).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -72,7 +92,251 @@ def decode_np(keys: np.ndarray, descending: bool) -> np.ndarray:
     return flip_np(keys) if descending else keys
 
 
-def check_payload_keys(keys, descending: bool) -> None:
+# ------------------------------------------------- multi-key bit packing
+
+PACK_BUDGET_BITS = 31
+"""Packed keys are NON-NEGATIVE int32 fields: 31 usable bits. jax runs
+in 32-bit mode here (64-bit keys are rejected at the door), so a wider
+pack has nowhere to go; tuples whose widths exceed the budget fall back
+to the LSD stable passes. Staying non-negative also keeps the whole
+packed space below the int32 padding sentinel except for the single
+saturated value of an exactly-31-bit pack (see ``check_payload_keys``)."""
+
+_PACK_KINDS = {
+    "uint8": "uint", "uint16": "uint", "uint32": "uint",
+    "int8": "int", "int16": "int", "int32": "int",
+    "float32": "float",
+}
+
+_SIGN32 = 1 << 31
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyFieldSpec:
+    """How one key column maps to/from its bit field in the packed key.
+
+    dtype: numpy dtype name of the source column (``"int16"``, ...).
+    kind: ``"uint" | "int" | "float"`` — which monotone rank transform
+      applies (identity / sign-bit xor / IEEE total-order bit trick).
+    lo: rank-space offset subtracted before packing (the measured
+      minimum rank, or the declared-range origin for ``key_bits``).
+    width: field bits; 0 for constant columns.
+    descending: the field is stored order-reversed (``mask - field``) so
+      the ascending packed sort realizes this key's descending order.
+    declared: width came from ``SortLimits.key_bits`` (a caller promise,
+      validated at pack time) rather than measurement.
+    """
+
+    dtype: str
+    kind: str
+    lo: int
+    width: int
+    descending: bool
+    declared: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Complete recipe for fusing a key tuple into one int32 — hashable,
+    so it keys jit static arguments, compiled-program caches and the
+    serve flush buckets. MSB-first: field 0 (the primary key) occupies
+    the most significant bits."""
+
+    fields: tuple
+
+    @property
+    def total_bits(self) -> int:
+        return sum(f.width for f in self.fields)
+
+    def describe(self) -> str:
+        widths = "+".join(str(f.width) for f in self.fields)
+        return f"widths {widths}={self.total_bits}/{PACK_BUDGET_BITS} bits"
+
+
+def _rank_np(col: np.ndarray, kind: str) -> np.ndarray:
+    """Monotone map of a column into uint32 rank space (host side)."""
+    if kind == "float":
+        b = np.ascontiguousarray(col, np.float32).view(np.uint32)
+        # IEEE-754 total-order trick: flip all bits of negatives, only
+        # the sign bit of non-negatives -> unsigned compare == float <
+        mask = np.where(b >> np.uint32(31), np.uint32(0xFFFFFFFF),
+                        np.uint32(0x80000000))
+        return b ^ mask
+    if kind == "int":
+        return (col.astype(np.int64) + _SIGN32).astype(np.uint32)
+    return col.astype(np.uint32)
+
+
+def _unrank_np(rank: np.ndarray, f: KeyFieldSpec) -> np.ndarray:
+    if f.kind == "float":
+        mask = np.where(rank >> np.uint32(31), np.uint32(0x80000000),
+                        np.uint32(0xFFFFFFFF))
+        return (rank ^ mask).view(np.float32)
+    if f.kind == "int":
+        return (rank ^ np.uint32(_SIGN32)).view(np.int32).astype(f.dtype)
+    return rank.astype(f.dtype)
+
+
+def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None):
+    """Decide whether a key tuple can fuse into one packed int32 sort.
+
+    Measures each column's effective width (rank-range bits) unless
+    ``key_bits`` declares it — a declared width ``w`` promises the
+    column's values lie in ``[0, 2**w)`` (ints only; float widths are
+    always measured, since a bit budget over the IEEE rank space is not
+    a meaningful caller contract) and is validated at pack time. Returns
+    ``(PackSpec, reason)`` when the widths fit ``PACK_BUDGET_BITS``,
+    else ``(None, reason)`` — the planner records either way.
+
+    ``ranks``: optional dict the caller passes to capture the measured
+    uint32 rank array per column index, so ``pack_keys(..., ranks=...)``
+    does not recompute the O(n) monotone transform the measurement
+    already paid for (PackSpec itself must stay a small hashable recipe
+    — it keys jit static args and serve buckets — so the arrays ride
+    this side channel instead).
+    """
+    if key_bits is not None:
+        if not isinstance(key_bits, tuple):
+            raise ValueError(
+                f"SortLimits.key_bits must be a tuple (hashable limits), "
+                f"got {type(key_bits).__name__}"
+            )
+        if len(key_bits) != len(klist):
+            raise ValueError(
+                f"SortLimits.key_bits has {len(key_bits)} entries for "
+                f"{len(klist)} keys (use None entries to measure a key)"
+            )
+    fields = []
+    for i, (col, desc) in enumerate(zip(klist, descending)):
+        name = str(col.dtype)
+        kind = _PACK_KINDS.get(name)
+        if kind is None:
+            return None, f"key {i} dtype {name} is not packable"
+        declared = key_bits[i] if key_bits is not None else None
+        if declared is not None:
+            if kind == "float":
+                raise ValueError(
+                    f"SortLimits.key_bits[{i}]: declared widths are "
+                    f"unsupported for float32 keys — float field widths "
+                    f"are measured from the monotone rank range (pass "
+                    f"None for this key)"
+                )
+            declared = int(declared)
+            if not 0 <= declared <= 32:
+                raise ValueError(
+                    f"SortLimits.key_bits[{i}]={declared} out of range "
+                    f"[0, 32]"
+                )
+            lo = _SIGN32 if kind == "int" else 0
+            fields.append(KeyFieldSpec(name, kind, lo, declared,
+                                       bool(desc), declared=True))
+            continue
+        col = np.asarray(col).reshape(-1)
+        if kind == "float" and col.size and bool(np.isnan(col).any()):
+            # NaN has no place in the rank order (the library rejects it
+            # everywhere); fall back so the LSD pass raises the standard
+            # loud NaN error instead of packing silently diverging
+            return None, f"key {i} contains NaN (unsupported keys)"
+        if col.size == 0:
+            lo, width = 0, 0
+        else:
+            r = _rank_np(col, kind)
+            if ranks is not None:
+                ranks[i] = r
+            lo = int(r.min())
+            width = int(int(r.max()) - lo).bit_length()
+        fields.append(KeyFieldSpec(name, kind, lo, width, bool(desc)))
+    spec = PackSpec(tuple(fields))
+    if spec.total_bits > PACK_BUDGET_BITS:
+        return None, (
+            f"total width {spec.describe().split(' ', 1)[1]} exceeds the "
+            f"{PACK_BUDGET_BITS}-bit pack budget"
+        )
+    return spec, spec.describe()
+
+
+def pack_keys(klist, spec: PackSpec, ranks: dict | None = None) -> np.ndarray:
+    """Fuse the key tuple into the packed non-negative int32 array.
+
+    Host-side numpy (multi-key inputs are host arrays after request
+    normalization): per column, monotone uint32 rank minus the spec
+    offset, order-reversed within the field for descending keys, then
+    accumulated MSB-first. Declared (``key_bits``) widths are validated
+    here — a value outside the promised range raises instead of packing
+    a corrupt key. ``ranks``: per-column rank arrays already computed by
+    ``plan_pack`` measurement (skips recomputing the monotone
+    transform)."""
+    acc = np.zeros(np.asarray(klist[0]).reshape(-1).shape[0], np.int64)
+    for i, (col, f) in enumerate(zip(klist, spec.fields)):
+        col = np.asarray(col).reshape(-1)
+        r = ranks.get(i) if ranks is not None else None
+        if r is None:
+            r = _rank_np(col, f.kind)
+        field = (r - np.uint32(f.lo)).astype(np.uint32)
+        if f.declared and f.width < 32:
+            over = field >> np.uint32(f.width)
+            if bool(over.any()):
+                j = int(np.argmax(over != 0))
+                raise ValueError(
+                    f"key {i} value {col[j]!r} does not fit the declared "
+                    f"SortLimits.key_bits[{i}]={f.width} bits (declared "
+                    f"keys must lie in [0, {2 ** f.width})); widen the "
+                    f"declaration or pass None to measure this key"
+                )
+        if f.descending:
+            field = np.uint32((1 << f.width) - 1) - field
+        acc = (acc << np.int64(f.width)) | field.astype(np.int64)
+    return acc.astype(np.int32)
+
+
+def unpack_np(packed: np.ndarray, spec: PackSpec) -> tuple:
+    """Host-side inverse of ``pack_keys`` — the ``decode="host"`` /
+    stream-backend twin of the device ``unpack_fields``."""
+    u = np.asarray(packed).astype(np.int64)
+    cols = []
+    shift = spec.total_bits
+    for f in spec.fields:
+        shift -= f.width
+        mask = (1 << f.width) - 1
+        field = ((u >> shift) & mask).astype(np.uint32)
+        if f.descending:
+            field = np.uint32(mask) - field
+        cols.append(_unrank_np(field + np.uint32(f.lo), f))
+    return tuple(cols)
+
+
+def unpack_fields(packed: jnp.ndarray, spec: PackSpec) -> tuple:
+    """Device-side unpack: packed int32 -> the original tuple columns.
+
+    Pure elementwise bit surgery (shift/mask, the field reversal for
+    descending keys, and the inverse rank transforms), so it fuses into
+    whatever jitted program holds the packed result — ``decode_grid``
+    for ``repro.sort`` materialization, ``sim.sample_sort_sim_flat``
+    for coalesced serve flushes. ``spec`` is a static (hashable) arg."""
+    u = packed.astype(jnp.uint32)
+    cols = []
+    shift = spec.total_bits
+    for f in spec.fields:
+        shift -= f.width
+        mask = jnp.uint32((1 << f.width) - 1)
+        field = (u >> shift) & mask if f.width else jnp.zeros_like(u)
+        if f.descending:
+            field = mask - field
+        rank = field + jnp.uint32(f.lo)
+        if f.kind == "float":
+            m = jnp.where(rank >> 31 != 0, jnp.uint32(0x80000000),
+                          jnp.uint32(0xFFFFFFFF))
+            cols.append(jax.lax.bitcast_convert_type(rank ^ m, jnp.float32))
+        elif f.kind == "int":
+            v32 = jax.lax.bitcast_convert_type(
+                rank ^ jnp.uint32(_SIGN32), jnp.int32)
+            cols.append(v32.astype(f.dtype))
+        else:
+            cols.append(rank.astype(f.dtype))
+    return tuple(cols)
+
+
+def check_payload_keys(keys, descending: bool, *, packspec=None) -> None:
     """Reject payload sorts whose keys collide with the padding sentinel.
 
     Ascending payload sorts cannot contain the key dtype's MAXIMUM (it
@@ -89,7 +353,35 @@ def check_payload_keys(keys, descending: bool) -> None:
     Keys-only sorts are exempt in both directions — a sentinel-valued
     key and a pad are value-identical, so the decoded keys stay
     bit-exact.
+
+    ``packspec``: set when ``keys`` is a PACKED multi-key array — only
+    an exactly-31-bit pack can reach the int32 sentinel (every narrower
+    pack tops out below it), and the error then names the packed value
+    AND the source column values it decodes to, so the caller can see
+    which tuple saturated the budget.
     """
+    if packspec is not None:
+        if packspec.total_bits < PACK_BUDGET_BITS:
+            return  # packed space tops out below the int32 sentinel
+        bad = np.int32(np.iinfo(np.int32).max)
+        hits = np.asarray(keys) == bad
+        if not bool(hits.any()):
+            return
+        row = int(np.argmax(hits))
+        src = unpack_np(np.asarray([bad], np.int32), packspec)
+        cols = ", ".join(
+            f"key {i} ({f.dtype})={c[0]!r}"
+            for i, (c, f) in enumerate(zip(src, packspec.fields))
+        )
+        raise ValueError(
+            f"multi-key sort with a payload cannot represent the packed "
+            f"key {int(bad)} (it is the int32 padding sentinel: this "
+            f"tuple saturates the full {packspec.total_bits}-bit pack, "
+            f"first at row {row}) — source columns: {cols}. Shift or "
+            f"drop those rows, force the LSD fallback with "
+            f"SortLimits(multikey='lsd'), or sort keys-only (packed "
+            f"keys-only sorts have no restriction)."
+        )
     dt_s = str(keys.dtype)
     floating = dt_s == "bfloat16" or np.issubdtype(np.dtype(dt_s), np.floating)
     if floating and bool(np.asarray((keys != keys).any())):
@@ -175,10 +467,11 @@ def compact_rows(grid: jnp.ndarray, counts, m: int) -> jnp.ndarray:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("m", "descending", "want_order")
+    jax.jit, static_argnames=("m", "descending", "want_order", "packspec")
 )
 def decode_grid(keys_grid, counts, values_grid=None, *, m: int,
-                descending: bool = False, want_order: bool = False):
+                descending: bool = False, want_order: bool = False,
+                packspec: PackSpec | None = None):
     """Fused device-side materialization: one program, one D2H copy.
 
     Collapses everything the host decode used to do after the sort —
@@ -204,6 +497,11 @@ def decode_grid(keys_grid, counts, values_grid=None, *, m: int,
                   the shape bucket exceeds it) are masked to the
                   sentinel first, so tail garbage can never join a real
                   tie segment.
+      packspec:   the keys grid holds PACKED multi-key values; unpack
+                  them back into the original tuple columns as the last
+                  fused step (after the tie fix, which must see the
+                  packed keys — a packed tie IS an all-columns tie).
+                  ``keys`` is then a TUPLE of (m,) column arrays.
 
     Returns ``(keys, values-or-None)`` device arrays of shape (m,);
     only the first min(n, m) positions are meaningful.
@@ -224,4 +522,6 @@ def decode_grid(keys_grid, counts, values_grid=None, *, m: int,
             )
     if descending:
         ks = flip(ks)
+    if packspec is not None:
+        ks = unpack_fields(ks, packspec)
     return ks, vs

@@ -88,6 +88,22 @@ class SortLimits:
       (``keyenc.decode_grid``). ``"host"`` keeps the legacy numpy
       decode — per-row unpad+concat, host flip, host tie fix — for
       differential testing and the decode benchmark baseline.
+    multikey: multi-key strategy. ``"auto"`` (default) fuses the tuple
+      into ONE packed int32 sort when the per-key effective bit widths
+      fit ``keyenc.PACK_BUDGET_BITS`` (31 — jax runs in 32-bit mode),
+      else falls back to the LSD stable passes; ``"packed"`` requires
+      packing (raises with the fallback reason when the tuple cannot
+      pack); ``"lsd"`` always runs the stable passes (the differential-
+      testing baseline). The decision and its reason are recorded on
+      ``plan.multikey`` / ``plan.reasons``.
+    key_bits: optional per-key declared bit widths for the packer, e.g.
+      ``(4, None, 10)`` — entry i promises key i's values lie in
+      ``[0, 2**bits)`` (validated at pack time; ints only, None =
+      measure from the data). Declaring widths keeps the PackSpec
+      identical across requests, which is what lets the async sort
+      server coalesce packed multi-key traffic into shared buckets —
+      measured specs vary with each request's data. Ignored for
+      single-key sorts.
     """
 
     n_procs: int = 8
@@ -98,6 +114,8 @@ class SortLimits:
     raise_on_overflow: bool = True
     max_request_elems: int | None = None
     decode: str = "device"
+    multikey: str = "auto"
+    key_bits: tuple | None = None
 
     def policy(self) -> OverflowPolicy:
         return OverflowPolicy(
@@ -119,11 +137,17 @@ class SortPlan:
     mesh: Any = None
     axis_name: Any = "data"
     decode: str = "device"
+    multikey: str | None = None  # "packed" | "lsd"; None for single-key
+    packspec: Any = None         # keyenc.PackSpec when multikey == "packed"
 
     def explain(self) -> str:
         lines = [f"repro.sort plan: backend={self.backend!r}"]
         for r in self.reasons:
             lines.append(f"  - {r}")
+        if self.multikey is not None:
+            detail = (f" ({self.packspec.describe()})"
+                      if self.packspec is not None else "")
+            lines.append(f"  multikey={self.multikey}{detail}")
         lines.append(
             f"  n_procs={self.n_procs} chunk_elems={self.chunk_elems} "
             f"decode={self.decode} "
@@ -165,6 +189,12 @@ class _Req:
     dtype: Any
     is_iterator: bool
     multikey: bool
+    packspec: Any = None  # set on the packed-multikey SUB-request: the
+    #                       single-key backends thread it into the fused
+    #                       decode so the keys unpack on device
+    pack_ranks: Any = None  # per-column uint32 rank arrays measured at
+    #                         plan time; pack_keys reuses them instead of
+    #                         recomputing the monotone transforms
 
     @property
     def needs_payload(self) -> bool:
@@ -184,6 +214,11 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
     multikey = isinstance(keys, tuple)
     klist = list(keys) if multikey else [keys]
     n_keys = len(klist)
+    if multikey and n_keys == 0:
+        raise ValueError(
+            "multi-key sort needs a non-empty tuple of key arrays "
+            "(got an empty tuple)"
+        )
     if multikey and n_keys == 1:
         multikey, keys = False, klist[0]
 
@@ -289,10 +324,10 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
         )
     if any(req.descending):
         reasons.append("descending: order-flip key encoding (keyenc.flip)")
+    multikey_decision = None
+    packspec = None
     if req.multikey:
-        reasons.append(
-            f"{len(req.keys)}-key lexicographic: LSD stable-argsort passes"
-        )
+        multikey_decision, packspec = _decide_multikey(req, limits, reasons)
     if req.want == "order":
         reasons.append("argsort: provenance-index payload over the kv sort")
 
@@ -314,8 +349,48 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     return SortPlan(
         backend=choice, n_procs=n_procs, chunk_elems=limits.chunk_elems,
         limits=limits, reasons=tuple(reasons), mesh=mesh, axis_name=axis_name,
-        decode=limits.decode,
+        decode=limits.decode, multikey=multikey_decision, packspec=packspec,
     )
+
+
+def _decide_multikey(req: _Req, limits: SortLimits, reasons: list):
+    """Pack-vs-LSD decision for a multi-key request, with its reason.
+
+    ``"auto"`` packs whenever the tuple's (measured or declared) bit
+    widths fit the 31-bit budget — one ascending int32 exchange pass
+    instead of one stable pass per key; anything unpackable (wide
+    tuples, unpackable dtypes, NaN floats) records why and falls back
+    to the LSD construction."""
+    k = len(req.keys)
+    if limits.multikey not in ("auto", "packed", "lsd"):
+        raise ValueError(
+            f'SortLimits.multikey must be "auto", "packed" or "lsd", '
+            f"got {limits.multikey!r}"
+        )
+    if limits.multikey == "lsd":
+        reasons.append(
+            f"{k}-key lexicographic: LSD stable-argsort passes "
+            f"(SortLimits.multikey='lsd')"
+        )
+        return "lsd", None
+    ranks: dict = {}
+    spec, why = keyenc.plan_pack(req.keys, req.descending, limits.key_bits,
+                                 ranks=ranks)
+    if spec is not None:
+        # hand the measured rank arrays to the execution path: packing
+        # reuses them instead of redoing the O(n * n_keys) transforms
+        req.pack_ranks = ranks
+        reasons.append(
+            f"{k}-key lexicographic: packed into ONE int32 sort ({why})"
+        )
+        return "packed", spec
+    if limits.multikey == "packed":
+        raise ValueError(
+            f"SortLimits(multikey='packed') but this key tuple cannot "
+            f"pack: {why}"
+        )
+    reasons.append(f"{k}-key lexicographic: LSD stable-argsort passes ({why})")
+    return "lsd", None
 
 
 # ------------------------------------------------------------- execution
@@ -422,8 +497,9 @@ def _prep_single(req: _Req, *, raw: bool = False):
         # a key colliding with the (encoded-space) padding sentinel —
         # dtype max ascending, dtype min descending — leaks sentinel
         # payload into the output via the exchange's in-program pads,
-        # front-end padding or not: reject loudly, always
-        keyenc.check_payload_keys(keys, descending)
+        # front-end padding or not: reject loudly, always (for packed
+        # multi-key keys the packspec names the saturated source tuple)
+        keyenc.check_payload_keys(keys, descending, packspec=req.packspec)
         enc = keys if (raw or not descending) else keyenc.encode(keys, True)
         if req.want == "order":
             payload = np.arange(req.n, dtype=np.int32)
@@ -463,15 +539,20 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
         dk, dv = keyenc.decode_grid(
             keys_grid, counts, values_grid, m=_next_pow2(m),
             descending=descending and not reverse, want_order=want_order,
+            packspec=req.packspec,
         )
 
         def materialize():
-            ks = np.asarray(dk)[:m]
-            if reverse:
-                # keys-only descending ran ascending on the raw keys:
-                # the descending view is the first m positions read
-                # backwards (a stride trick, not a host pass)
-                ks = ks[::-1]
+            if isinstance(dk, tuple):
+                # packed multi-key: the program unpacked the columns
+                ks = tuple(np.asarray(c)[:m] for c in dk)
+            else:
+                ks = np.asarray(dk)[:m]
+                if reverse:
+                    # keys-only descending ran ascending on the raw keys:
+                    # the descending view is the first m positions read
+                    # backwards (a stride trick, not a host pass)
+                    ks = ks[::-1]
             return ks, (np.asarray(dv)[:m] if dv is not None else None)
 
         return materialize
@@ -483,11 +564,15 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
             ks = _unpad_grid(keys_grid, counts, m)
             vs = _unpad_grid(values_grid, counts, m)
             if want_order:
+                # the tie fix must see the PACKED keys when unpacking
+                # follows: a packed tie is exactly an all-columns tie
                 vs = _stable_order_fix(ks, vs)
         if reverse:
             ks = ks[::-1].copy()
         elif descending:
             ks = keyenc.decode_np(ks, True)
+        if req.packspec is not None:
+            ks = keyenc.unpack_np(ks, req.packspec)
         return ks, vs
 
     return materialize
@@ -698,19 +783,78 @@ def _meta(req: _Req, plan: SortPlan, backend: str, cfg, retries: int) -> SortMet
         n_keys=len(req.keys) if req.multikey else 1,
         n_local=req.n_local,
         dtype=req.dtype,
+        multikey=plan.multikey if req.multikey else None,
     )
 
 
 # ------------------------------------------------------------ multi-key
 
 
-def _exec_multikey(req: _Req, plan: SortPlan) -> SortOutput:
-    """Lexicographic sort: LSD stable-argsort passes over the backend.
+def _exec_packed_multikey(req: _Req, plan: SortPlan) -> SortOutput:
+    """Lexicographic sort as ONE packed single-key pass.
 
-    perm = argsort(k_last); then for each earlier key:
+    The tuple is fused into a non-negative int32 key (``keyenc.pack_keys``
+    — per-key order flips and monotone transforms live inside the bit
+    fields), so the plain ascending single-key machinery of whichever
+    backend the planner chose does the whole job in one exchange pass;
+    the fused decode unpacks the columns back out (on device for
+    sim/mesh under ``decode="device"``, on host for the stream backend
+    and the legacy decode path). Payload-bearing requests run as
+    ``want="order"`` over the packed key — the device tie fix restores
+    exact stability on packed ties (= all-columns ties), which makes the
+    resulting permutation, and any gathered values, bit-identical to the
+    LSD construction and to ``np.lexsort``.
+    """
+    spec = plan.packspec
+    packed = keyenc.pack_keys(req.keys, spec, ranks=req.pack_ranks)
+    sub_want = "order" if req.needs_payload else "values"
+    sub = _Req(
+        keys=packed, values=None, want=sub_want, descending=(False,),
+        config=req.config, investigator=req.investigator, n=req.n,
+        n_local=None, dtype=np.dtype(np.int32), is_iterator=False,
+        multikey=False, packspec=spec,
+    )
+    out = BACKENDS[plan.backend].execute(sub, plan)
+    meta = _meta(req, plan, plan.backend, out.meta.config, out.meta.retries)
+    wrapper = SortOutput(
+        meta, counts=out.counts, overflowed=out.overflowed,
+        send_counts=out.send_counts, raw=out.raw, materialize=None,
+    )
+
+    def materialize():
+        ks, perm = out.keys, out.values
+        if not isinstance(ks, tuple):
+            # stream / host paths return the packed flat array
+            ks = keyenc.unpack_np(np.asarray(ks), spec)
+        # the stream backend fills counts/retries lazily — sync them
+        wrapper.counts = out.counts
+        wrapper.overflowed = out.overflowed
+        meta.retries = out.meta.retries
+        meta.config = out.meta.config
+        meta.chunk_retries = out.meta.chunk_retries
+        if req.want == "order":
+            return ks, perm
+        if req.values is not None:
+            # gather user values through the exactly-stable permutation:
+            # bit-identical to the LSD passes' composition
+            return ks, np.asarray(req.values)[np.asarray(perm)]
+        return ks, None
+
+    wrapper._materialize = materialize
+    return wrapper
+
+
+def _exec_multikey(req: _Req, plan: SortPlan) -> SortOutput:
+    """Lexicographic sort: one packed pass when the planner fused the
+    tuple (``plan.multikey == "packed"``), else LSD stable-argsort
+    passes over the backend.
+
+    LSD: perm = argsort(k_last); then for each earlier key:
     perm = perm[argsort(k[perm])] — every pass is the backend's exactly
     stable kv sort, so the composition matches np.lexsort.
     """
+    if plan.multikey == "packed":
+        return _exec_packed_multikey(req, plan)
     backend = BACKENDS[plan.backend]
 
     def sub_sort(karr: np.ndarray, descending: bool) -> SortOutput:
@@ -787,10 +931,15 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
 
     Returns ``(req, plan, batchable)``. ``batchable`` is True when the
     request may be stacked into ONE vmapped same-shape-bucket program by
-    the async sort server's flush engine: a single-key keys-only sort
+    the async sort server's flush engine: a keys-only sort that the
+    planner routed to the sim backend and that is either single-key
     (ascending OR descending — the order-flip encode/decode is fused
-    into the vmapped program, see ``sim.sample_sort_sim_flat``) that the
-    planner routed to the sim backend. Anything else (payloads, argsort,
+    into the vmapped program, see ``sim.sample_sort_sim_flat``) or a
+    PACKED multi-key tuple (``plan.multikey == "packed"`` — the staged
+    data is the packed ascending int32 array and the in-program decode
+    unpacks the columns; such requests bucket per PackSpec, so declare
+    ``SortLimits.key_bits`` to keep the spec — and therefore the bucket
+    — stable across requests). Anything else (payloads, argsort, LSD
     multi-key, (p, n_local) global views, stream-/mesh-bound requests)
     must dispatch through ``execute_request`` individually — still
     planner-routed, just not vmap-coalesced."""
@@ -799,7 +948,7 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
     plan = _make_plan(req, where, limits)
     batchable = (
         plan.backend == "sim"
-        and not req.multikey
+        and (not req.multikey or plan.multikey == "packed")
         and not req.needs_payload
         and req.n_local is None
         and not req.is_iterator

@@ -37,6 +37,11 @@ class SortMeta:
       results that were executed as part of a vmapped same-shape-bucket
       batch: the number of requests that shared the flush. None for
       ordinary ``repro.sort`` calls.
+    multikey: how a multi-key request was executed — ``"packed"`` (the
+      tuple fused into one int32 sort via ``keyenc.pack_keys``) or
+      ``"lsd"`` (stable argsort passes); None for single-key sorts.
+      Mirrors ``plan.multikey``; ``plan.packspec`` holds the bit-field
+      recipe of a packed run.
     n_local: per-processor row length when the input arrived in the
       (p, n_local) global-view layout (enables provenance decoding).
     dtype: the planned key dtype, threaded at plan time; None only for
@@ -56,6 +61,7 @@ class SortMeta:
     dtype: Any = None
     chunk_retries: tuple | None = None
     coalesced: int | None = None
+    multikey: str | None = None
 
 
 class SortOutput:
@@ -148,8 +154,10 @@ class SortOutput:
                 raise ValueError(
                     "this stream result does not stream: kv/argsort "
                     "results materialize on host (the value gather is "
-                    "not bounded-memory), as do descending results under "
-                    'the legacy decode="host" plan — use .keys/.values'
+                    "not bounded-memory), as do packed multi-key tuples "
+                    "(the columns unpack at materialization) and "
+                    'descending results under the legacy decode="host" '
+                    "plan — use .keys/.values"
                 )
             raise ValueError(
                 f"chunks() is only available on the stream backend "

@@ -144,6 +144,69 @@ def sample_sort_shard_kv(
 # ------------------------------------------------------------ global entry
 
 
+@functools.lru_cache(maxsize=None)
+def _mesh_program(mesh, axis_name, config, investigator: bool, kv: bool):
+    """One JITTED shard_map program per (mesh, axis, config, policy).
+
+    The entry points used to rebuild the shard_map closure on every
+    call, so every mesh sort re-traced eagerly — seconds per call on
+    CPU, paid even by repeat same-shape traffic (the LSD multi-key
+    passes and the differential fuzzer each issue dozens). All the
+    arguments are hashable (Mesh, axis tuples/strings, the frozen
+    SortConfig), so the closure and its ``jax.jit`` wrapper are built
+    once and repeat calls land in jax's compiled-program cache keyed by
+    input shape/dtype."""
+    axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    if kv:
+        body = functools.partial(
+            sample_sort_shard_kv, axis_name=axis_name, config=config,
+            investigator=investigator,
+        )
+
+        def wrapped(kl, vl):
+            r = body(kl[0], vl[0])
+            return ShardSortKVResult(
+                r.keys[None], r.values[None], r.count[None], r.overflowed[None],
+                r.send_counts[None],
+            )
+
+        f = shard_map_compat(
+            wrapped,
+            mesh=mesh,
+            in_specs=(P(axes), P(axes)),
+            out_specs=ShardSortKVResult(P(axes), P(axes), P(axes), P(axes),
+                                        P(axes)),
+        )
+    else:
+        body = functools.partial(
+            sample_sort_shard, axis_name=axis_name, config=config,
+            investigator=investigator,
+        )
+
+        def wrapped(xl):
+            r = body(xl[0])  # strip the leading local-processor axis of size 1
+            return ShardSortResult(
+                r.values[None], r.count[None], r.overflowed[None],
+                r.send_counts[None],
+            )
+
+        f = shard_map_compat(
+            wrapped,
+            mesh=mesh,
+            in_specs=P(axes),
+            out_specs=ShardSortResult(P(axes), P(axes), P(axes), P(axes)),
+        )
+    return jax.jit(f)
+
+
+def _axis_product(mesh, axis_name) -> int:
+    axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    return p
+
+
 def distributed_sort(
     x: jnp.ndarray,
     mesh: jax.sharding.Mesh,
@@ -154,28 +217,8 @@ def distributed_sort(
 ):
     """Sort a globally (axis 0)-sharded flat array. Returns global-view
     (p, cap_total) values + (p,) counts + overflow flag, like ``sim``."""
-    axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
-
-    body = functools.partial(
-        sample_sort_shard, axis_name=axis_name, config=config, investigator=investigator
-    )
-
-    def wrapped(xl):
-        r = body(xl[0])  # strip the leading local-processor axis of size 1
-        return ShardSortResult(
-            r.values[None], r.count[None], r.overflowed[None], r.send_counts[None]
-        )
-
-    f = shard_map_compat(
-        wrapped,
-        mesh=mesh,
-        in_specs=P(axes),
-        out_specs=ShardSortResult(P(axes), P(axes), P(axes), P(axes)),
-    )
-    p = 1
-    for a in axes:
-        p *= mesh.shape[a]
-    return f(x.reshape(p, -1))
+    f = _mesh_program(mesh, axis_name, config, investigator, False)
+    return f(x.reshape(_axis_product(mesh, axis_name), -1))
 
 
 def distributed_sort_kv(
@@ -187,26 +230,6 @@ def distributed_sort_kv(
     *,
     investigator: bool = True,
 ):
-    axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
-
-    body = functools.partial(
-        sample_sort_shard_kv, axis_name=axis_name, config=config, investigator=investigator
-    )
-
-    def wrapped(kl, vl):
-        r = body(kl[0], vl[0])
-        return ShardSortKVResult(
-            r.keys[None], r.values[None], r.count[None], r.overflowed[None],
-            r.send_counts[None],
-        )
-
-    f = shard_map_compat(
-        wrapped,
-        mesh=mesh,
-        in_specs=(P(axes), P(axes)),
-        out_specs=ShardSortKVResult(P(axes), P(axes), P(axes), P(axes), P(axes)),
-    )
-    p = 1
-    for a in axes:
-        p *= mesh.shape[a]
+    p = _axis_product(mesh, axis_name)
+    f = _mesh_program(mesh, axis_name, config, investigator, True)
     return f(keys.reshape(p, -1), values.reshape(p, -1))

@@ -57,7 +57,9 @@ class FlatSortResult(NamedTuple):
     flat: (p*n_local,) globally sorted, front-compacted elements — every
       staged element (sentinel pads included) in its final position, so
       materialization is one D2H copy plus a host slice. For
-      ``descending=True`` programs the flip decode has been applied.
+      ``descending=True`` programs the flip decode has been applied; for
+      ``packspec`` programs (packed multi-key serving) ``flat`` is the
+      TUPLE of unpacked column arrays instead of one array.
     counts / overflowed / send_counts: as in ``SortResult``.
     """
 
@@ -192,13 +194,17 @@ def sample_sort_sim_kv(
     return SortKVResult(mk, mv, counts, overflowed, send_counts)
 
 
-@functools.partial(jax.jit, static_argnames=("config", "investigator", "descending"))
+@functools.partial(
+    jax.jit, static_argnames=("config", "investigator", "descending",
+                              "packspec")
+)
 def sample_sort_sim_flat(
     x: jnp.ndarray,
     config: spl.SortConfig = spl.SortConfig(),
     *,
     investigator: bool = True,
     descending: bool = False,
+    packspec=None,
 ) -> FlatSortResult:
     """Sample sort with the device decode fused into the same program.
 
@@ -211,6 +217,13 @@ def sample_sort_sim_flat(
     Descending inputs must arrive RAW, padded with the *flipped*
     sentinel (dtype min / -inf), which the in-program flip turns back
     into the ascending pad that sorts to the tail.
+
+    ``packspec`` (a ``keyenc.PackSpec``, static): ``x`` holds PACKED
+    multi-key values — the unpack back into the original tuple columns
+    is fused after compaction, so a coalesced multi-key flush's D2H is
+    the decoded columns and ``flat`` is a tuple of (p*n_local,) arrays.
+    Packed grids always stage ascending (the per-key order flips live
+    inside the bit fields), padded with the plain int32 sentinel.
     """
     if descending:
         x = keyenc.flip(x)
@@ -219,4 +232,6 @@ def sample_sort_sim_flat(
     flat = keyenc.compact_rows(res.values, res.counts, p * n)
     if descending:
         flat = keyenc.flip(flat)
+    if packspec is not None:
+        flat = keyenc.unpack_fields(flat, packspec)
     return FlatSortResult(flat, res.counts, res.overflowed, res.send_counts)

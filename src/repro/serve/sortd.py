@@ -12,13 +12,18 @@ continue without waiting" front end for sort traffic:
   applied to sorts.
 * Dispatch is planner-driven: every request is planned at admission time
   with ``repro.sort``'s machinery (``core.planner.serve_profile``).
-  Single-key keys-only requests that the planner routes to the sim
-  backend — ascending AND descending, since the order-flip decode is
-  fused into the vmapped program (``sim.sample_sort_sim_flat``) —
-  coalesce into ONE program per (shape, order) bucket (the
-  ``stream.service.FlushEngine`` shared with the sync service);
-  everything else — kv payloads, argsort, multi-key, stream- or
-  mesh-bound requests — dispatches through
+  Keys-only requests that the planner routes to the sim backend —
+  single-key ascending AND descending (the order-flip decode is fused
+  into the vmapped program, ``sim.sample_sort_sim_flat``), and PACKED
+  multi-key tuples (``plan.multikey == "packed"``: the admission path
+  packs the tuple into one ascending int32 array and the in-program
+  decode unpacks the columns) — coalesce into ONE program per
+  (shape, order, packspec) bucket (the ``stream.service.FlushEngine``
+  shared with the sync service). Declare ``SortLimits.key_bits`` for
+  served multi-key traffic: measured pack specs vary with each
+  request's data and would split the buckets. Everything else — kv
+  payloads, argsort, LSD multi-key, stream- or mesh-bound requests —
+  dispatches through
   ``core.planner.execute_request`` individually on a small worker pool
   (so a seconds-long out-of-core sort cannot head-of-line block the
   flush loop's deadlines), landing on any registered backend. Coalesced
@@ -50,7 +55,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 
-from repro.core import planner
+from repro.core import keyenc, planner
 from repro.core.overflow import bump_capacity
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
@@ -170,6 +175,22 @@ class SortServer:
         ``ValueError`` for invalid requests, ``RequestTooLargeError`` and
         ``QueueFullError`` for admission failures — all synchronously at
         submit, never on the future."""
+        # cheap admission pre-check BEFORE planning: serve_profile
+        # measures multi-key pack widths (O(n * n_keys) host rank work)
+        # and packing costs the same again, so a saturated queue must
+        # reject without paying either — retry-hammering clients under
+        # backpressure would otherwise burn that host CPU on every
+        # doomed submit. The check at enqueue below remains the atomic,
+        # authoritative one (the queue can fill during planning).
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("SortServer is closed")
+            if self._depth >= self.max_queue:
+                self._stats["rejected"] += 1
+                raise QueueFullError(
+                    f"sort queue full ({self.max_queue} pending requests)",
+                    retry_after_ms=self._retry_after_ms(time.monotonic()),
+                )
         cfg = config if config is not None else self.config
         inv = self.investigator if investigator is None else investigator
         lim = limits if limits is not None else self.limits
@@ -198,7 +219,16 @@ class SortServer:
             and lim.growth == self.limits.growth
             and lim.decode == "device"
         )
-        data = np.asarray(req.keys).reshape(-1) if batchable else None
+        data = None
+        if batchable:
+            if req.multikey:
+                # packed multi-key: stage the fused ascending int32 key
+                # (per-key order flips live inside the bit fields; the
+                # rank arrays measured at plan time are reused)
+                data = keyenc.pack_keys(req.keys, plan.packspec,
+                                        ranks=req.pack_ranks)
+            else:
+                data = np.asarray(req.keys).reshape(-1)
 
         fut = SortFuture()
         now = time.monotonic()
@@ -213,9 +243,13 @@ class SortServer:
                     retry_after_ms=self._retry_after_ms(now),
                 )
             if batchable:
-                # descending requests bucket separately: same shapes,
-                # different fused program (in-program flip decode)
-                key = (("batch", bool(req.descending[0]))
+                # descending requests bucket separately (same shapes,
+                # different fused program: in-program flip decode), and
+                # packed multi-key requests bucket per PackSpec (the
+                # fused unpack is compiled per spec)
+                desc = bool(req.descending[0]) and not req.multikey
+                pspec = plan.packspec if req.multikey else None
+                key = (("batch", desc, pspec)
                        + self._engine.bucket_key(data))
             else:
                 self._seq += 1
@@ -353,7 +387,8 @@ class SortServer:
         if key[0] == "batch":
             try:
                 results = self._engine.run_group(
-                    [p.data for p in live], descending=key[1])
+                    [p.data for p in live], descending=key[1],
+                    packspec=key[2])
             except Exception as e:  # noqa: BLE001 — an unexpected error
                 # (XLA compile/runtime failure, MemoryError staging the
                 # batch, ...) must fail THESE futures, never kill the
@@ -386,7 +421,7 @@ class SortServer:
         except Exception as e:  # noqa: BLE001 — future owns it
             self._fail(p, e)
 
-    def _wrap_batched(self, p: _Pending, arr: np.ndarray,
+    def _wrap_batched(self, p: _Pending, arr,
                       occupancy: int, retries: int) -> SortOutput:
         # meta.config is documented as the config ACTUALLY used after
         # capacity retries; the engine's ladder is deterministic (one
@@ -394,12 +429,16 @@ class SortServer:
         cfg = self.config
         for _ in range(retries):
             cfg = bump_capacity(cfg, self._engine.policy)
+        orders = tuple("desc" if d else "asc" for d in p.req.descending)
         meta = SortMeta(
             backend="sim", plan=p.plan, config=cfg,
             n=p.req.n or 0, want="values",
-            order="desc" if p.req.descending[0] else "asc",
-            dtype=p.req.dtype, coalesced=occupancy, retries=retries,
+            order=orders[0] if len(orders) == 1 else orders,
+            n_keys=len(orders), dtype=p.req.dtype, coalesced=occupancy,
+            retries=retries,
+            multikey="packed" if isinstance(arr, tuple) else None,
         )
+        # packed multi-key flushes resolve to the unpacked column tuple
         return SortOutput(meta, keys=arr)
 
     def _resolve(self, p: _Pending, out: SortOutput) -> None:

@@ -53,14 +53,16 @@ from repro.stream.runs import _pad_chunk
 
 class ProgramCache:
     """Compiled vmapped sample-sort programs, keyed by
-    (batch, p, per, dtype, config, investigator, flat, descending).
-    Shared between the SortService flush path and
+    (batch, p, per, dtype, config, investigator, flat, descending,
+    packspec). Shared between the SortService flush path and
     ``SortLibrary.sort_many``. ``flat=True`` programs fuse the device
     decode (``sim.sample_sort_sim_flat``): the compaction gather — and,
     for descending buckets, the order-flip encode/decode — runs inside
     the vmapped program, so the flush's D2H copy is the (batch, p*per)
     decoded output instead of the ~p-times-larger padded exchange
-    grid."""
+    grid. ``packspec`` programs (packed multi-key serving buckets)
+    additionally fuse the bit-field unpack, so the D2H output is the
+    tuple of decoded key columns."""
 
     def __init__(self, stats: dict | None = None):
         self.programs: dict = {}
@@ -70,15 +72,16 @@ class ProgramCache:
 
     def get(self, batch: int, p: int, per: int, dtype,
             config: SortConfig, investigator: bool, *,
-            flat: bool = False, descending: bool = False):
+            flat: bool = False, descending: bool = False, packspec=None):
         key = (batch, p, per, np.dtype(str(dtype)).str, config, investigator,
-               flat, descending)
+               flat, descending, packspec)
         fn = self.programs.get(key)
         if fn is None:
             if flat:
                 body = functools.partial(
                     sim.sample_sort_sim_flat, config=config,
                     investigator=investigator, descending=descending,
+                    packspec=packspec,
                 )
             else:
                 body = functools.partial(
@@ -153,22 +156,25 @@ class FlushEngine:
         return keyenc.flip_np(fill) if descending else fill
 
     def run_group(self, datas: list[np.ndarray], *,
-                  descending: bool = False) -> list[tuple]:
+                  descending: bool = False, packspec=None) -> list[tuple]:
         """Execute one shape bucket's flat arrays; per entry,
         ``(sorted array | terminal exception, ladder_steps)``.
         ``descending`` buckets run the same fused program with the
-        order-flip encode/decode inside it — requests arrive raw."""
+        order-flip encode/decode inside it — requests arrive raw.
+        ``packspec`` buckets (packed multi-key serving) arrive as the
+        packed ascending int32 arrays; the fused program unpacks the
+        columns, and each result entry is the TUPLE of column arrays."""
         elems = self.bucket_elems(datas[0].shape[0])
         out: list = []
         for i in range(0, len(datas), self.max_batch):
             out.extend(
                 self._run_batch(datas[i : i + self.max_batch], elems,
-                                descending)
+                                descending, packspec)
             )
         return out
 
     def _run_batch(self, datas: list[np.ndarray], elems: int,
-                   descending: bool) -> list[tuple]:
+                   descending: bool, packspec=None) -> list[tuple]:
         p = self.n_procs
         per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
         dtype = datas[0].dtype
@@ -179,34 +185,43 @@ class FlushEngine:
             batch[i] = _pad_chunk(d, p, per, fill)
 
         fn = self.cache.get(b, p, per, dtype, self.config, self.investigator,
-                            flat=True, descending=descending)
+                            flat=True, descending=descending,
+                            packspec=packspec)
         res = fn(jnp.asarray(batch))
         self.stats["batches"] += 1
 
         overflowed = np.asarray(res.overflowed)
         # ONE D2H transfer of the decoded (b, p*per) output — the decode
-        # (compaction + flip) already ran inside the vmapped program, so
-        # per-request materialization is a host slice, and the padded
-        # (b, p, p*cap) exchange grid never crosses to the host
-        flat = np.asarray(res.flat)
+        # (compaction + flip + the packed-multi-key unpack) already ran
+        # inside the vmapped program, so per-request materialization is
+        # a host slice, and the padded (b, p, p*cap) exchange grid never
+        # crosses to the host
+        flat = (tuple(np.asarray(c) for c in res.flat)
+                if packspec is not None else np.asarray(res.flat))
         out: list = []
         for i, d in enumerate(datas):
             if overflowed[i]:
                 try:
-                    out.append(self._retry_one(d, elems, descending))
+                    out.append(self._retry_one(d, elems, descending, packspec))
                 except SortOverflowError as e:
                     out.append((e, self.max_doublings))
                 continue
-            out.append((flat[i, : d.shape[0]].copy(), 0))
+            out.append((self._slice_result(flat, i, d.shape[0]), 0))
         return out
 
+    @staticmethod
+    def _slice_result(flat, i: int, n: int):
+        if isinstance(flat, tuple):
+            return tuple(c[i, :n].copy() for c in flat)
+        return flat[i, :n].copy()
+
     def _retry_one(self, data: np.ndarray, elems: int,
-                   descending: bool) -> tuple:
+                   descending: bool, packspec=None) -> tuple:
         """Unified capacity ladder for a single overflowed request — the
         batched attempt at ``self.config`` counts as the failed initial
         attempt, so the ladder starts at the first capacity bump exactly
         like ``repro.sort``'s overflow policy would. Returns
-        ``(sorted array, ladder_steps_taken)``."""
+        ``(sorted array | tuple of columns, ladder_steps_taken)``."""
         p, per = self.n_procs, -(-elems // self.n_procs)
         x = jnp.asarray(_pad_chunk(data, p, per, self._fill(data.dtype,
                                                             descending)))
@@ -217,10 +232,14 @@ class FlushEngine:
 
         r, _cfg, n = retry_overflowed(
             lambda cfg: sim.sample_sort_sim_flat(
-                x, cfg, investigator=self.investigator, descending=descending
+                x, cfg, investigator=self.investigator, descending=descending,
+                packspec=packspec,
             ),
             self.config, self.policy, on_retry=on_retry,
         )
+        if packspec is not None:
+            return (tuple(np.asarray(c)[: data.shape[0]].copy()
+                          for c in r.flat), n)
         return np.asarray(r.flat)[: data.shape[0]].copy(), n
 
 

@@ -113,6 +113,26 @@ def test_multikey_lexicographic_all_backends(mesh1):
         np.testing.assert_array_equal(out.keys[1], k2[expect])
 
 
+def test_explain_reports_multikey_strategy():
+    """repro.explain() must carry the pack/LSD decision and its reason
+    (widths when packed, the fallback cause when not)."""
+    rng = np.random.default_rng(55)
+    narrow = (rng.integers(0, 16, 800).astype(np.int8),
+              rng.integers(0, 64, 800).astype(np.int16))
+    text = repro.explain(narrow, config=CFG, limits=LIMITS)
+    assert "multikey=packed" in text
+    assert "packed into ONE int32 sort" in text and "/31 bits" in text
+    wide = (rng.integers(0, 1 << 20, 800).astype(np.uint32),
+            rng.integers(0, 1 << 20, 800).astype(np.uint32))
+    text = repro.explain(wide, config=CFG, limits=LIMITS)
+    assert "multikey=lsd" in text
+    assert "LSD stable-argsort passes" in text
+    assert "exceeds the 31-bit pack budget" in text
+    # single-key plans keep no multikey line
+    assert "multikey" not in repro.explain(narrow[0], config=CFG,
+                                           limits=LIMITS)
+
+
 def test_multikey_mixed_order_and_values():
     rng = np.random.default_rng(6)
     k1 = rng.integers(0, 3, 2000).astype(np.int32)

@@ -1,0 +1,345 @@
+"""Bitwidth-aware multi-key packing: planner decision + PackSpec
+measurement, packed == LSD == np.lexsort bit-identity (the seeded
+differential fuzzer in ``tests/fuzz_harness.py`` drives the broad
+matrix; targeted edges live here), the packed-sentinel payload error,
+declared ``SortLimits.key_bits`` validation, empty/singleton tuples,
+serve coalescing of packed tuples, and the FlushEngine's fused unpack.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import keyenc
+from repro.serve import SortServer
+from repro.stream.service import FlushEngine
+
+import fuzz_harness
+
+CFG = repro.SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(chunk_elems=1 << 12, n_procs=4)
+
+
+# ------------------------------------------------------ seeded fuzzing
+
+
+def test_fuzz_differential_200_cases():
+    """The acceptance budget: 200 seeded random multi-key cases,
+    bit-identical across {packed, LSD} x {sim, mesh, stream} x
+    {device, host decode} vs the np.lexsort oracle (the matrix is
+    covered across the seeds; any failure message carries its
+    REPRO_FUZZ_SEED reproducer)."""
+    stats = fuzz_harness.run_budget(cases=200)
+    assert stats["packed"] >= 30 and stats["lsd"] >= 30, dict(stats)
+
+
+@pytest.mark.slow
+def test_fuzz_differential_deep():
+    """Long fuzz run (fresh seed range beyond the tier-1 budget)."""
+    fuzz_harness.run_budget(cases=1000, base=10_000)
+
+
+# ------------------------------------------------- planner decision
+
+
+def test_plan_packs_narrow_tuple_and_explains():
+    rng = np.random.default_rng(0)
+    k1 = rng.integers(0, 16, 500).astype(np.int8)
+    k2 = rng.integers(0, 200, 500).astype(np.uint16)
+    plan = repro.plan((k1, k2), config=CFG, limits=LIMITS)
+    assert plan.multikey == "packed"
+    assert plan.packspec is not None
+    assert plan.packspec.total_bits <= keyenc.PACK_BUDGET_BITS
+    text = plan.explain()
+    assert "multikey=packed" in text and "bits" in text
+    assert any("packed into ONE int32 sort" in r for r in plan.reasons)
+
+
+def test_plan_width_overflow_falls_back_to_lsd():
+    rng = np.random.default_rng(1)
+    k1 = rng.integers(0, 1 << 20, 500).astype(np.uint32)  # ~20 bits
+    k2 = rng.integers(0, 1 << 20, 500).astype(np.uint32)  # ~20 bits
+    plan = repro.plan((k1, k2), config=CFG, limits=LIMITS)
+    assert plan.multikey == "lsd" and plan.packspec is None
+    assert any("31-bit pack budget" in r for r in plan.reasons)
+    # ... and the fallback execution still matches the oracle
+    out = repro.sort((k1, k2), want="order", config=CFG, limits=LIMITS)
+    np.testing.assert_array_equal(out.order(), np.lexsort((k2, k1)))
+    assert out.meta.multikey == "lsd"
+
+
+def test_forced_packed_raises_with_fallback_reason():
+    rng = np.random.default_rng(2)
+    wide = tuple(rng.integers(0, 1 << 20, 100).astype(np.uint32)
+                 for _ in range(2))
+    with pytest.raises(ValueError, match="cannot pack.*31-bit"):
+        repro.plan(wide, config=CFG,
+                   limits=repro.SortLimits(multikey="packed"))
+    with pytest.raises(ValueError, match="multikey"):
+        repro.plan(wide, config=CFG,
+                   limits=repro.SortLimits(multikey="never"))
+
+
+def test_forced_lsd_skips_packing():
+    rng = np.random.default_rng(3)
+    k1 = rng.integers(0, 4, 300).astype(np.int32)
+    k2 = rng.integers(0, 4, 300).astype(np.int32)
+    plan = repro.plan((k1, k2), config=CFG,
+                      limits=repro.SortLimits(multikey="lsd"))
+    assert plan.multikey == "lsd"
+    assert any("SortLimits.multikey='lsd'" in r for r in plan.reasons)
+
+
+def test_nan_float_column_falls_back_and_errors_loudly():
+    k1 = np.array([1.0, np.nan, 2.0], np.float32)
+    k2 = np.array([1, 2, 3], np.int8)
+    plan = repro.plan((k1, k2), config=CFG, limits=LIMITS)
+    assert plan.multikey == "lsd"
+    assert any("NaN" in r for r in plan.reasons)
+    with pytest.raises(ValueError, match="NaN"):
+        repro.sort((k1, k2), want="order", config=CFG, limits=LIMITS)
+
+
+# ------------------------------------------------------ packed edges
+
+
+def test_packed_negative_ints_mixed_orders_all_backends():
+    import jax
+
+    mesh1 = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(4)
+    n = 3001
+    k1 = rng.integers(-100, 100, n).astype(np.int16)
+    k2 = rng.integers(-8, 8, n).astype(np.int8)
+    k3 = rng.integers(0, 50, n).astype(np.uint8)
+    orders = ("desc", "asc", "desc")
+    expect = np.lexsort((keyenc.flip_np(k3), k2, keyenc.flip_np(k1)))
+    for where in ("sim", "stream", (mesh1, "data")):
+        for decode in ("device", "host"):
+            lim = repro.SortLimits(chunk_elems=1 << 12, n_procs=4,
+                                   stream_threshold=None, decode=decode,
+                                   multikey="packed")
+            out = repro.sort((k1, k2, k3), order=orders, want="order",
+                             where=where, limits=lim, config=CFG)
+            assert out.meta.multikey == "packed"
+            np.testing.assert_array_equal(out.order(), expect)
+            for a, k in zip(out.keys, (k1, k2, k3)):
+                np.testing.assert_array_equal(a, k[expect])
+                assert a.dtype == k.dtype
+
+
+def test_packed_float_total_order_and_negatives():
+    # narrow float field: same-sign float values span few mantissa/
+    # exponent steps in rank space (a sign crossing costs ~31 bits —
+    # the rank range jumps the whole negative half — and falls back)
+    rng = np.random.default_rng(5)
+    pool = np.array([-2.0, -1.75, -1.5, -1.25], np.float32)
+    kf = pool[rng.integers(0, pool.size, 2000)]
+    ki = rng.integers(0, 10, 2000).astype(np.int8)
+    plan = repro.plan((ki, kf), config=CFG, limits=LIMITS)
+    assert plan.multikey == "packed", plan.explain()
+    out = repro.sort((ki, kf), order=("asc", "desc"), want="order",
+                     config=CFG, limits=LIMITS)
+    expect = np.lexsort((keyenc.flip_np(kf), ki))
+    np.testing.assert_array_equal(out.order(), expect)
+    np.testing.assert_array_equal(out.keys[1], kf[expect])
+
+
+def test_packed_values_payload_bit_identical_to_lsd():
+    rng = np.random.default_rng(6)
+    n = 2500
+    k1 = rng.integers(0, 3, n).astype(np.int32)   # heavy ties
+    k2 = rng.integers(0, 4, n).astype(np.int32)
+    v = rng.integers(0, 1 << 20, n).astype(np.int32)
+    packed = repro.sort((k1, k2), v, config=CFG,
+                        limits=repro.SortLimits(multikey="packed"))
+    lsd = repro.sort((k1, k2), v, config=CFG,
+                     limits=repro.SortLimits(multikey="lsd"))
+    expect = np.lexsort((k2, k1))
+    np.testing.assert_array_equal(packed.values, v[expect])
+    np.testing.assert_array_equal(packed.values, lsd.values)
+    for a, b in zip(packed.keys, lsd.keys):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_empty_and_singleton_tuples():
+    with pytest.raises(ValueError, match="non-empty tuple"):
+        repro.sort((), config=CFG)
+    k = np.random.default_rng(7).integers(0, 9, 257).astype(np.int32)
+    # a 1-tuple collapses to the single-key path: no multikey decision
+    assert repro.plan((k,), config=CFG).multikey is None
+    np.testing.assert_array_equal(repro.sort((k,), config=CFG).keys,
+                                  np.sort(k))
+    # empty key arrays: packed plan (zero widths), empty result, dtypes
+    empty = (np.empty(0, np.int16), np.empty(0, np.float32))
+    plan = repro.plan(empty, config=CFG, limits=LIMITS)
+    assert plan.multikey == "packed" and plan.packspec.total_bits == 0
+    out = repro.sort(empty, config=CFG, limits=LIMITS)
+    assert out.keys[0].shape == (0,) and out.keys[0].dtype == np.int16
+    assert out.keys[1].dtype == np.float32
+
+
+# ------------------------------------------- sentinel / key_bits edges
+
+
+def _saturating_pair(n=64):
+    """16+15 = 31 bits; row 0 saturates every field -> packed int32 max."""
+    rng = np.random.default_rng(8)
+    k1 = rng.integers(0, 1 << 16, n).astype(np.uint16)
+    k2 = rng.integers(0, 1 << 15, n).astype(np.uint16)
+    k1[0], k2[0] = (1 << 16) - 1, (1 << 15) - 1
+    return k1, k2
+
+
+def test_packed_sentinel_collision_names_packed_value_and_columns():
+    k1, k2 = _saturating_pair()
+    lim = repro.SortLimits(key_bits=(16, 15))
+    assert repro.plan((k1, k2), config=CFG, limits=lim).multikey == "packed"
+    with pytest.raises(ValueError) as ei:
+        repro.sort((k1, k2), want="order", config=CFG, limits=lim)
+    msg = str(ei.value)
+    assert "2147483647" in msg            # the packed offending value
+    assert "key 0" in msg and "65535" in msg    # source column + value
+    assert "key 1" in msg and "32767" in msg
+    # payload variant errors identically
+    with pytest.raises(ValueError, match="2147483647"):
+        repro.sort((k1, k2), np.arange(k1.size, dtype=np.int32),
+                   config=CFG, limits=lim)
+
+
+def test_packed_sentinel_keys_only_is_unrestricted():
+    k1, k2 = _saturating_pair()
+    lim = repro.SortLimits(key_bits=(16, 15))
+    out = repro.sort((k1, k2), config=CFG, limits=lim)
+    expect = np.lexsort((k2, k1))
+    np.testing.assert_array_equal(out.keys[0], k1[expect])
+    np.testing.assert_array_equal(out.keys[1], k2[expect])
+
+
+def test_width31_payload_ok_when_not_saturated():
+    # full 31-bit pack but no row reaches the saturated value
+    rng = np.random.default_rng(9)
+    k1 = rng.integers(0, (1 << 16) - 1, 500).astype(np.uint16)
+    k2 = rng.integers(0, 1 << 15, 500).astype(np.uint16)
+    k2[k1 == (1 << 16) - 1] = 0  # belt and braces: no saturated tuple
+    lim = repro.SortLimits(key_bits=(16, 15))
+    out = repro.sort((k1, k2), want="order", config=CFG, limits=lim)
+    np.testing.assert_array_equal(out.order(), np.lexsort((k2, k1)))
+
+
+def test_key_bits_declared_violation_names_column():
+    k1 = np.array([300, 1, 2], np.int16)  # 300 does not fit 8 bits
+    k2 = np.array([1, 2, 3], np.int16)
+    with pytest.raises(ValueError, match=r"key_bits\[0\].*300|300.*key_bits\[0\]"):
+        repro.sort((k1, k2), config=CFG,
+                   limits=repro.SortLimits(key_bits=(8, 8)))
+    # negative values violate the declared [0, 2**w) contract too
+    with pytest.raises(ValueError, match=r"key_bits\[1\]"):
+        repro.sort((k2, np.array([-1, 2, 3], np.int16)), config=CFG,
+                   limits=repro.SortLimits(key_bits=(8, 8)))
+
+
+def test_key_bits_shape_and_float_validation():
+    k = np.arange(4, dtype=np.int16)
+    f = np.array([1.0, 1.25, 1.5, 1.75], np.float32)  # narrow rank range
+    with pytest.raises(ValueError, match="2 entries for 3 keys"):
+        repro.plan((k, k, k), config=CFG,
+                   limits=repro.SortLimits(key_bits=(4, 4)))
+    with pytest.raises(ValueError, match="float32"):
+        repro.plan((k, f), config=CFG,
+                   limits=repro.SortLimits(key_bits=(4, 8)))
+    # None entries measure; declared widths produce a data-independent
+    # spec (what serve bucketing relies on)
+    s1, _ = keyenc.plan_pack([k, f], (False, False), (4, None))
+    s2, _ = keyenc.plan_pack([k + 1, f], (False, False), (4, None))
+    assert s1.fields[0] == s2.fields[0] and s1.fields[0].declared
+
+
+# ------------------------------------------------------------- serving
+
+
+def test_serve_coalesces_packed_multikey_buckets():
+    rng = np.random.default_rng(10)
+    lim = repro.SortLimits(n_procs=4, key_bits=(4, 8))
+    with SortServer(max_batch=8, max_delay_ms=100.0,
+                                limits=lim, config=CFG) as srv:
+        reqs = [
+            (rng.integers(0, 16, 512).astype(np.int8),
+             rng.integers(0, 256, 512).astype(np.uint16))
+            for _ in range(5)
+        ]
+        futs = [srv.submit(ks, order=("asc", "desc")) for ks in reqs]
+        srv.flush()
+        for (k1, k2), f in zip(reqs, futs):
+            out = f.result(timeout=30)
+            expect = np.lexsort((keyenc.flip_np(k2), k1))
+            np.testing.assert_array_equal(out.keys[0], k1[expect])
+            np.testing.assert_array_equal(out.keys[1], k2[expect])
+            assert out.keys[0].dtype == np.int8
+            assert out.meta.coalesced == 5
+            assert out.meta.multikey == "packed"
+            assert out.meta.order == ("asc", "desc")
+        stats = srv.stats()
+        assert stats["flushes"] == 1 and stats["flushed_requests"] == 5
+
+
+def test_serve_rejects_saturated_queue_before_packing():
+    """Backpressure must be near-free for packed submits: a full queue
+    rejects BEFORE the O(n*k) host work runs — neither the width
+    measurement (plan_pack, paid even without declared key_bits) nor
+    pack_keys may execute on a doomed submit."""
+    from unittest import mock
+
+    from repro.serve.sortd import QueueFullError
+
+    rng = np.random.default_rng(13)
+    lim = repro.SortLimits(n_procs=4)  # measured specs: the costly path
+    ks = (rng.integers(0, 16, 256).astype(np.int8),
+          rng.integers(0, 256, 256).astype(np.uint16))
+    with SortServer(max_batch=64, max_delay_ms=10_000.0, max_queue=2,
+                    limits=lim, config=CFG) as srv:
+        futs = [srv.submit(ks), srv.submit(ks)]
+        with mock.patch.object(keyenc, "plan_pack",
+                               side_effect=AssertionError("measured a "
+                                                          "doomed submit")), \
+             mock.patch.object(keyenc, "pack_keys",
+                               side_effect=AssertionError("packed a doomed "
+                                                          "submit")):
+            with pytest.raises(QueueFullError) as ei:
+                srv.submit(ks)
+        assert ei.value.retry_after_ms > 0
+        srv.flush()
+        for f in futs:
+            assert f.result(timeout=30).meta.multikey == "packed"
+
+
+def test_serve_lsd_multikey_dispatches_directly():
+    rng = np.random.default_rng(11)
+    wide = (rng.integers(0, 1 << 20, 256).astype(np.uint32),
+            rng.integers(0, 1 << 20, 256).astype(np.uint32))
+    with SortServer(max_batch=8, max_delay_ms=20.0,
+                                config=CFG) as srv:
+        out = srv.submit(wide).result(timeout=60)
+        expect = np.lexsort((wide[1], wide[0]))
+        np.testing.assert_array_equal(out.keys[0], wide[0][expect])
+        assert out.meta.multikey == "lsd"
+        assert srv.stats()["direct_dispatches"] == 1
+
+
+def test_flush_engine_runs_packed_group_with_fused_unpack():
+    rng = np.random.default_rng(12)
+    cols = [
+        (rng.integers(0, 16, 300).astype(np.int16),
+         rng.integers(0, 100, 300).astype(np.uint16))
+        for _ in range(3)
+    ]
+    # declared widths: one data-independent spec covers every request
+    spec, _ = keyenc.plan_pack(list(cols[0]), (False, True), (4, 7))
+    engine = FlushEngine(config=CFG, n_procs=4)
+    datas = [keyenc.pack_keys(list(ks), spec) for ks in cols]
+    results = engine.run_group(datas, packspec=spec)
+    for (k1, k2), (res, retries) in zip(cols, results):
+        assert retries == 0
+        assert isinstance(res, tuple) and len(res) == 2
+        expect = np.lexsort((keyenc.flip_np(k2), k1))
+        np.testing.assert_array_equal(res[0], k1[expect])
+        np.testing.assert_array_equal(res[1], k2[expect])
