@@ -81,16 +81,22 @@ _RECORDS: list[dict] = []
 
 
 def emit(name: str, us: float, derived: str = "", *, size=None, dtype=None,
-         backend=None, balance=None, **extra):
+         backend=None, balance=None, ladder_retries=None, **extra):
     """Print the CSV line AND append a machine-readable record; ``run.py``
     drains the records into BENCH_<suite>.json so the perf trajectory is
-    tracked across PRs."""
+    tracked across PRs. Every record carries ``balance`` (the run's
+    max/mean processor-count imbalance, paper Table II) and
+    ``ladder_retries`` (capacity-ladder steps the run took) — null when
+    the benchmark has no sort to measure them on — so load-balance and
+    overflow regressions are visible in the same trajectory as timing."""
     print(f"{name},{us:.1f},{derived}")
     rec = {"op": name, "us_per_call": round(float(us), 2), "derived": derived}
-    for k, v in (("size", size), ("dtype", dtype), ("backend", backend),
-                 ("balance", balance)):
+    for k, v in (("size", size), ("dtype", dtype), ("backend", backend)):
         if v is not None:
             rec[k] = v
+    rec["balance"] = None if balance is None else float(balance)
+    rec["ladder_retries"] = (None if ladder_retries is None
+                             else int(ladder_retries))
     rec.update(extra)
     _RECORDS.append(rec)
 

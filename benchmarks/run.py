@@ -15,7 +15,9 @@ see benchmarks/serve_bench.py / api_bench.py). The api decode gate
 sort; the ``multikey`` gate asserts the packed multi-key path is >=2x
 faster than the LSD stable passes for a 2^20 three-narrow-key sort;
 ``serve_pad_retries`` asserts zero overflow-ladder retries for
-coalesced non-pow2 request sizes.
+coalesced non-pow2 request sizes; ``trace_overhead`` asserts the
+observability layer costs <2% when tracing is off and that a traced
+sort's phase spans cover >=95% of its wall window.
 """
 import argparse
 import json
@@ -60,6 +62,7 @@ def main() -> None:
             "planner_overhead": api_bench.planner_overhead,
             "decode_gate": api_bench.decode_materialization,
             "multikey": api_bench.multikey_pack,
+            "trace_overhead": api_bench.trace_overhead,
             "api_matrix": api_bench.api_matrix,
         },
         "serve": {

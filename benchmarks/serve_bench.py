@@ -101,7 +101,8 @@ def serve_throughput():
              f"occupancy={occupancy:.1f};speedup={speedup:.2f}x",
              backend="sim", size=n, dtype="float32",
              clients=n_clients, occupancy=round(occupancy, 2),
-             speedup=round(speedup, 2), smoke=SMOKE)
+             speedup=round(speedup, 2), smoke=SMOKE,
+             ladder_retries=after["retries"] - before["retries"])
         emit("serve_sequential", us_seq,
              f"elems_per_s={n / (us_seq / 1e6):.0f}",
              backend="sim", size=n, dtype="float32", smoke=SMOKE)
@@ -141,7 +142,8 @@ def serve_pad_retries():
         emit("serve_pad_overflow_retries", 0.0,
              f"retries={stats['retries']};flushes={stats['flushes']}",
              backend="sim", size=sum(a.size for a in reqs),
-             dtype="float32", retries=stats["retries"], smoke=SMOKE)
+             dtype="float32", retries=stats["retries"], smoke=SMOKE,
+             ladder_retries=stats["retries"])
         assert stats["retries"] == 0, (
             f"coalesced non-pow2 flushes walked the capacity ladder "
             f"{stats['retries']} time(s); expected 0"

@@ -1,0 +1,90 @@
+"""Observability tour: phase tracing, Chrome export, metrics scrape.
+
+A traced sort prints its phase table (wall time, per-processor counts,
+per-phase imbalance — the paper's Table II lens, per step), an ambient
+trace collects a whole block of sorts, the trace exports to a
+chrome://tracing / Perfetto JSON file, and a short burst against the
+async SortServer is scraped through the Prometheus text exposition.
+
+    PYTHONPATH=src python examples/sort_observe.py
+"""
+import numpy as np
+
+import repro
+from repro import obs
+from repro.serve import SortServer
+
+
+def print_phase_table(tr):
+    total = tr.duration()
+    print(f"  {'phase':<12}{'ms':>9}{'share':>8}  counts / imbalance")
+    for span in tr.spans:
+        ms = span.duration * 1e3
+        share = span.duration / total if total else 0.0
+        extra = ""
+        if "per_proc" in span.attrs:
+            counts = span.attrs["per_proc"]
+            shown = counts if len(counts) <= 8 else counts[:8] + ["..."]
+            extra = f"{shown}  imb={span.attrs['imbalance']:.3f}"
+        print(f"  {span.name:<12}{ms:9.2f}{share:8.1%}  {extra}")
+    print(f"  span coverage of traced window: {tr.coverage():.1%}")
+
+
+def main():
+    cfg = repro.SortConfig(use_pallas=False)
+    rng = np.random.default_rng(0)
+
+    # -- one traced sort: SortLimits(trace=True) attaches the phase
+    #    breakdown to out.meta.trace; it freezes at materialization
+    x = rng.normal(0, 1, 1 << 18).astype(np.float32)
+    out = repro.sort(x, config=cfg,
+                     limits=repro.SortLimits(trace=True,
+                                             stream_threshold=None))
+    assert np.array_equal(out.keys, np.sort(x))  # materializes + freezes
+    tr = out.meta.trace
+    print(f"traced sort of 2^18 float32 ({tr.duration() * 1e3:.1f}ms):")
+    print_phase_table(tr)
+
+    # -- Chrome/Perfetto export: load trace_sort.json in chrome://tracing
+    tr.to_chrome_file("trace_sort.json")
+    print("wrote trace_sort.json (chrome://tracing, ui.perfetto.dev)\n")
+
+    # -- ambient trace: every sort in the block lands in one trace
+    with obs.trace(job="observe-demo") as amb:
+        for n in (1 << 14, 1 << 15):
+            o = repro.sort(rng.normal(0, 1, n).astype(np.float32),
+                           config=cfg,
+                           limits=repro.SortLimits(stream_threshold=None))
+            o.keys
+    totals = amb.phase_totals()
+    top = sorted(totals.items(), key=lambda kv: -kv[1])[:3]
+    print("ambient trace over 2 sorts, top phases by total time:")
+    for name, secs in top:
+        print(f"  {name:<12}{secs * 1e3:9.2f}ms")
+    print()
+
+    # -- serve a burst, then scrape the process-wide registry
+    with SortServer(max_batch=16, max_delay_ms=5.0, config=cfg,
+                    limits=repro.SortLimits(n_procs=8)) as server:
+        futs = [server.submit(rng.normal(0, 1, 2048).astype(np.float32))
+                for _ in range(24)]
+        for f in futs:
+            f.result(120)
+        s = server.stats()
+        print(f"served 24 requests: queue-wait p50 "
+              f"{s['queue_wait_ms_p50']:.1f}ms, execute p50 "
+              f"{s['execute_ms_p50']:.1f}ms, total p99 "
+              f"{s['latency_ms_p99']:.1f}ms")
+
+    text = obs.render_prometheus()
+    wanted = ("sortd_requests_total", "sortd_queue_depth",
+              "repro_sorts_total", "repro_program_cache_hits_total",
+              "repro_overflow_ladder_retries_total")
+    print("prometheus exposition (selected families):")
+    for line in text.splitlines():
+        if line.startswith(wanted):
+            print(f"  {line}")
+
+
+if __name__ == "__main__":
+    main()

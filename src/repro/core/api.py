@@ -89,6 +89,38 @@ mutate). ``SortLimits(decode="host")`` selects the legacy numpy decode
     Same signature; returns the ``SortPlan`` (backend + reasons) the
     planner would execute / its human-readable rendering.
 
+Observability (``repro.obs``)
+-----------------------------
+Phase-level tracing: ``repro.sort(x, limits=SortLimits(trace=True))``
+attaches a ``Trace`` to ``out.meta.trace`` recording one wall-time span
+per pipeline phase — ``plan``, ``encode`` (key encode / multi-key
+pack), ``stage`` (H2D), ``local_sort``, ``splitter``, ``exchange``,
+``merge``, ``decode``, ``d2h`` — with ``jax.block_until_ready`` fencing
+so device work is charged to the phase that dispatched it (a traced
+sim/mesh sort runs as separately-jitted phase programs; the untraced
+hot path keeps the fused program). Spans carry per-processor counts and
+the max/mean ``imbalance`` per phase (paper Table II, per step). The
+trace freezes — becomes immutable and publishes its spans to the
+``repro_sort_phase_seconds`` histogram — when the output materializes.
+``with obs.trace(job="nightly") as tr:`` installs an ambient trace that
+collects every sort in the block instead. ``tr.phase_totals()``,
+``tr.coverage()``, and ``tr.to_chrome_file(path)`` (Chrome/Perfetto
+``chrome://tracing`` JSON) digest it.
+
+Metrics: one process-wide registry aggregates the serve tier
+(``sortd_*`` request outcomes, queue depth, queue-wait/execute/total
+latency histograms), the shared program cache
+(``repro_program_cache_{hits,builds}_total``), the overflow ladder
+(``repro_overflow_ladder_retries_total``), per-backend sort counts
+(``repro_sorts_total``) and published phase timings.
+``obs.render_prometheus()`` renders the Prometheus text exposition;
+``tests/metrics_schema.json`` pins the metric names/label sets in CI.
+``obs.disabled()`` / ``obs.set_enabled(False)`` turn the whole
+subsystem off (the ``trace_overhead`` gate holds its residue under 2%).
+``REPRO_PROFILE=1`` additionally brackets flush programs and stream
+chunk staging with ``jax.profiler`` annotations. Runnable tour:
+``examples/sort_observe.py``.
+
 ``SortOutput`` fields & methods
     .keys .values .counts .overflowed .send_counts .raw .meta
     .order() .provenance() .imbalance() .searchsorted(q) .topk(k)

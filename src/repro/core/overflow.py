@@ -19,6 +19,16 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+
+# every capacity bump anywhere — sim/mesh retry loops, stream chunk
+# ladders, serve flush re-runs — passes through retry_overflowed, so one
+# counter here is the process-wide ladder pressure signal
+LADDER_RETRIES = _obs_metrics.counter(
+    "repro_overflow_ladder_retries_total",
+    "Capacity-ladder growth steps taken after static-bucket overflow.",
+)
+
 
 class SortOverflowError(RuntimeError):
     """The sort still overflowed after exhausting the capacity ladder."""
@@ -77,6 +87,7 @@ def retry_overflowed(
     result = last
     for i in range(policy.max_doublings):
         config = bump_capacity(config, policy)
+        LADDER_RETRIES.inc()
         if on_retry is not None:
             on_retry(config)
         result = run(config)

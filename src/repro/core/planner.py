@@ -40,6 +40,17 @@ from repro.core.overflow import (
 )
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.tracing import maybe_span as _span
+
+# one counter for every sort the planner dispatches, labeled by the
+# backend it chose — the registry-side view of the placement rules
+_SORTS_TOTAL = obs_metrics.counter(
+    "repro_sorts_total",
+    "Sorts executed by the unified front end, by planner backend.",
+    labels=("backend",),
+)
 
 
 def check_key_dtype(dt, what: str = "keys") -> None:
@@ -104,6 +115,15 @@ class SortLimits:
       server coalesce packed multi-key traffic into shared buckets —
       measured specs vary with each request's data. Ignored for
       single-key sorts.
+    trace: record the phase-level span breakdown of this sort (plan,
+      encode, stage, local sort, splitter, exchange, merge, decode, D2H)
+      on ``SortOutput.meta.trace`` — a ``repro.obs.tracing.Trace`` with
+      per-processor counts, per-phase imbalance, and Chrome trace-event
+      export. The sim and (keys-only) mesh backends run the sort as
+      separately fenced phase programs under tracing, so the breakdown
+      is real wall time per phase, not dispatch time. Default False:
+      the untraced hot path is unchanged. An ambient ``obs.trace()``
+      block traces regardless of this flag.
     """
 
     n_procs: int = 8
@@ -116,6 +136,7 @@ class SortLimits:
     decode: str = "device"
     multikey: str = "auto"
     key_bits: tuple | None = None
+    trace: bool = False
 
     def policy(self) -> OverflowPolicy:
         return OverflowPolicy(
@@ -195,6 +216,9 @@ class _Req:
     pack_ranks: Any = None  # per-column uint32 rank arrays measured at
     #                         plan time; pack_keys reuses them instead of
     #                         recomputing the monotone transforms
+    trace: Any = None  # obs.tracing.Trace when this sort is traced; the
+    #                    backends record their phase spans on it and the
+    #                    meta carries it out (sub-requests inherit it)
 
     @property
     def needs_payload(self) -> bool:
@@ -525,6 +549,7 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
     differential testing and as the decode benchmark baseline.
     """
     want_order = req.want == "order"
+    tr = req.trace
 
     if plan.decode == "device":
         from repro.kernels.ops import _next_pow2
@@ -535,45 +560,54 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
         # .values access — is a D2H copy plus a host slice. The program
         # length rounds n up to a power-of-two shape bucket so varied
         # request sizes (a serving workload) reuse O(log) compiled
-        # decode programs instead of one per distinct n.
-        dk, dv = keyenc.decode_grid(
-            keys_grid, counts, values_grid, m=_next_pow2(m),
-            descending=descending and not reverse, want_order=want_order,
-            packspec=req.packspec,
-        )
+        # decode programs instead of one per distinct n. Tracing fences
+        # the program inside the "decode" span — losing the overlap but
+        # charging the decode to the right phase.
+        with _span(tr, "decode") as sp:
+            dk, dv = keyenc.decode_grid(
+                keys_grid, counts, values_grid, m=_next_pow2(m),
+                descending=descending and not reverse, want_order=want_order,
+                packspec=req.packspec,
+            )
+            if tr is not None:
+                sp.fence((dk, dv))
 
         def materialize():
-            if isinstance(dk, tuple):
-                # packed multi-key: the program unpacked the columns
-                ks = tuple(np.asarray(c)[:m] for c in dk)
-            else:
-                ks = np.asarray(dk)[:m]
-                if reverse:
-                    # keys-only descending ran ascending on the raw keys:
-                    # the descending view is the first m positions read
-                    # backwards (a stride trick, not a host pass)
-                    ks = ks[::-1]
-            return ks, (np.asarray(dv)[:m] if dv is not None else None)
+            with _span(tr, "d2h"):
+                if isinstance(dk, tuple):
+                    # packed multi-key: the program unpacked the columns
+                    ks = tuple(np.asarray(c)[:m] for c in dk)
+                else:
+                    ks = np.asarray(dk)[:m]
+                    if reverse:
+                        # keys-only descending ran ascending on the raw
+                        # keys: the descending view is the first m
+                        # positions read backwards (a stride trick, not a
+                        # host pass)
+                        ks = ks[::-1]
+                return ks, (np.asarray(dv)[:m] if dv is not None else None)
 
         return materialize
 
     def materialize():
-        if values_grid is None:
-            ks, vs = _unpad_grid(keys_grid, counts, m), None
-        else:
-            ks = _unpad_grid(keys_grid, counts, m)
-            vs = _unpad_grid(values_grid, counts, m)
-            if want_order:
-                # the tie fix must see the PACKED keys when unpacking
-                # follows: a packed tie is exactly an all-columns tie
-                vs = _stable_order_fix(ks, vs)
-        if reverse:
-            ks = ks[::-1].copy()
-        elif descending:
-            ks = keyenc.decode_np(ks, True)
-        if req.packspec is not None:
-            ks = keyenc.unpack_np(ks, req.packspec)
-        return ks, vs
+        # host decode: the D2H copy and the numpy decode are one phase
+        with _span(tr, "decode", path="host"):
+            if values_grid is None:
+                ks, vs = _unpad_grid(keys_grid, counts, m), None
+            else:
+                ks = _unpad_grid(keys_grid, counts, m)
+                vs = _unpad_grid(values_grid, counts, m)
+                if want_order:
+                    # the tie fix must see the PACKED keys when unpacking
+                    # follows: a packed tie is exactly an all-columns tie
+                    vs = _stable_order_fix(ks, vs)
+            if reverse:
+                ks = ks[::-1].copy()
+            elif descending:
+                ks = keyenc.decode_np(ks, True)
+            if req.packspec is not None:
+                ks = keyenc.unpack_np(ks, req.packspec)
+            return ks, vs
 
     return materialize
 
@@ -581,30 +615,48 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
 def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
     import jax.numpy as jnp
 
-    enc, payload, descending, reverse = _prep_single(req)
+    tr = req.trace
+    with _span(tr, "encode"):
+        enc, payload, descending, reverse = _prep_single(req)
     p = plan.n_procs
     m = req.n
-    if req.n_local is not None:
-        xk = jnp.asarray(enc)
-        xv = jnp.asarray(payload) if payload is not None else None
-        pad = 0
-    else:
-        per = max(1, -(-req.n // p))
-        pad = p * per - m
-        if pad == 0:
-            # divisible: no host round-trip, the array stays device-resident
-            xk = jnp.asarray(enc).reshape(p, per)
-            xv = (jnp.asarray(payload).reshape(p, per)
-                  if payload is not None else None)
+    with _span(tr, "stage") as sp:
+        if req.n_local is not None:
+            xk = jnp.asarray(enc)
+            xv = jnp.asarray(payload) if payload is not None else None
+            pad = 0
         else:
-            flat = np.asarray(enc).reshape(-1)
-            xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)))
-            xv = None
-            if payload is not None:
-                vflat = np.asarray(payload).reshape(-1)
-                xv = jnp.asarray(_pad_grid(vflat, p, per, _sentinel(vflat.dtype)))
+            per = max(1, -(-req.n // p))
+            pad = p * per - m
+            if pad == 0:
+                # divisible: no host round-trip, the array stays
+                # device-resident
+                xk = jnp.asarray(enc).reshape(p, per)
+                xv = (jnp.asarray(payload).reshape(p, per)
+                      if payload is not None else None)
+            else:
+                flat = np.asarray(enc).reshape(-1)
+                xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)))
+                xv = None
+                if payload is not None:
+                    vflat = np.asarray(payload).reshape(-1)
+                    xv = jnp.asarray(
+                        _pad_grid(vflat, p, per, _sentinel(vflat.dtype))
+                    )
+        if tr is not None:
+            sp.fence((xk, xv))  # charge the H2D copy to staging
 
-    if xv is None:
+    if tr is not None:
+        # traced: the four-phase programs, one fenced span each
+        if xv is None:
+            run = lambda cfg: sim.sample_sort_sim_phased(
+                xk, cfg, investigator=req.investigator, trace=tr
+            )
+        else:
+            run = lambda cfg: sim.sample_sort_sim_phased_kv(
+                xk, xv, cfg, investigator=req.investigator, trace=tr
+            )
+    elif xv is None:
         run = lambda cfg: sim.sample_sort_sim(
             xk, cfg, investigator=req.investigator
         )
@@ -633,29 +685,40 @@ def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
 def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
     import jax.numpy as jnp
 
-    enc, payload, descending, reverse = _prep_single(req)
+    tr = req.trace
+    with _span(tr, "encode"):
+        enc, payload, descending, reverse = _prep_single(req)
     axes = plan.axis_name if isinstance(plan.axis_name, tuple) else (plan.axis_name,)
     p = 1
     for a in axes:
         p *= plan.mesh.shape[a]
     per = max(1, -(-req.n // p))
     m = req.n
-    pad = p * per - m
-    if pad == 0:
-        # divisible: pass the (possibly mesh-sharded) array straight to
-        # shard_map — no host materialization round-trip
-        xk = jnp.asarray(enc).reshape(-1)
-        xv = (jnp.asarray(payload).reshape(-1)
-              if payload is not None else None)
-    else:
-        flat = np.asarray(enc).reshape(-1)
-        xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)).reshape(-1))
-        xv = None
-        if payload is not None:
-            vflat = np.asarray(payload).reshape(-1)
-            xv = jnp.asarray(_pad_grid(vflat, p, per, _sentinel(vflat.dtype)).reshape(-1))
+    with _span(tr, "stage") as sp:
+        pad = p * per - m
+        if pad == 0:
+            # divisible: pass the (possibly mesh-sharded) array straight to
+            # shard_map — no host materialization round-trip
+            xk = jnp.asarray(enc).reshape(-1)
+            xv = (jnp.asarray(payload).reshape(-1)
+                  if payload is not None else None)
+        else:
+            flat = np.asarray(enc).reshape(-1)
+            xk = jnp.asarray(_pad_grid(flat, p, per, _sentinel(flat.dtype)).reshape(-1))
+            xv = None
+            if payload is not None:
+                vflat = np.asarray(payload).reshape(-1)
+                xv = jnp.asarray(_pad_grid(vflat, p, per, _sentinel(vflat.dtype)).reshape(-1))
+        if tr is not None:
+            sp.fence((xk, xv))
 
-    if xv is None:
+    if tr is not None and xv is None:
+        # traced keys-only: four fenced phase programs (sample_sort.py)
+        run = lambda cfg: sample_sort.distributed_sort_phased(
+            xk, plan.mesh, plan.axis_name, cfg,
+            investigator=req.investigator, trace=tr,
+        )
+    elif xv is None:
         run = lambda cfg: sample_sort.distributed_sort(
             xk, plan.mesh, plan.axis_name, cfg, investigator=req.investigator
         )
@@ -663,6 +726,17 @@ def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
         run = lambda cfg: sample_sort.distributed_sort_kv(
             xk, xv, plan.mesh, plan.axis_name, cfg, investigator=req.investigator
         )
+    if tr is not None and xv is not None:
+        # kv mesh sorts keep the fused program: one "sort" span covering
+        # local_sort+splitter+exchange+merge, fenced, per-device counts
+        fused = run
+
+        def run(cfg):
+            with tr.span("sort", phases="local_sort+splitter+exchange+merge") as sp:
+                res = sp.fence(fused(cfg))
+                sp.counts(list(res.count))
+            return res
+
     res, cfg_used, retries = run_with_capacity_retry(
         run, req.config, plan.limits.policy()
     )
@@ -706,7 +780,9 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
     # decode="host" the legacy paths remain: keys-only reverses the
     # materialized output, kv flip-decodes on host.
     device_decode = plan.decode == "device"
-    enc, payload, descending, reverse = _prep_single(req, raw=device_decode)
+    tr = req.trace
+    with _span(tr, "encode"):
+        enc, payload, descending, reverse = _prep_single(req, raw=device_decode)
     stream_desc = device_decode and descending
     if stream_desc:
         reverse = False  # enc is already raw; the pipeline encodes on device
@@ -734,7 +810,7 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
     if payload is None:
         gen = _accounted(
             sort_stream(enc, scfg, investigator=req.investigator,
-                        stats=stats, descending=stream_desc)
+                        stats=stats, descending=stream_desc, trace=tr)
         )
         if reverse:
             out = SortOutput(meta, materialize=None)
@@ -755,7 +831,7 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
     def materialize():
         ks, vs = sort_external_kv(enc, vflat, scfg,
                                   investigator=req.investigator, stats=stats,
-                                  descending=stream_desc)
+                                  descending=stream_desc, trace=tr)
         _account()
         if req.want == "order":
             # stream tie fix stays on host: the whole out-of-core output
@@ -784,6 +860,7 @@ def _meta(req: _Req, plan: SortPlan, backend: str, cfg, retries: int) -> SortMet
         n_local=req.n_local,
         dtype=req.dtype,
         multikey=plan.multikey if req.multikey else None,
+        trace=req.trace,
     )
 
 
@@ -806,15 +883,19 @@ def _exec_packed_multikey(req: _Req, plan: SortPlan) -> SortOutput:
     LSD construction and to ``np.lexsort``.
     """
     spec = plan.packspec
-    packed = keyenc.pack_keys(req.keys, spec, ranks=req.pack_ranks)
+    with _span(req.trace, "encode", pack=spec.describe() if spec else None):
+        packed = keyenc.pack_keys(req.keys, spec, ranks=req.pack_ranks)
     sub_want = "order" if req.needs_payload else "values"
     sub = _Req(
         keys=packed, values=None, want=sub_want, descending=(False,),
         config=req.config, investigator=req.investigator, n=req.n,
         n_local=None, dtype=np.dtype(np.int32), is_iterator=False,
-        multikey=False, packspec=spec,
+        multikey=False, packspec=spec, trace=req.trace,
     )
     out = BACKENDS[plan.backend].execute(sub, plan)
+    # the wrapper's meta carries the trace; the sub-result materializing
+    # inside materialize() below must not freeze it prematurely
+    out.meta.trace = None
     meta = _meta(req, plan, plan.backend, out.meta.config, out.meta.retries)
     wrapper = SortOutput(
         meta, counts=out.counts, overflowed=out.overflowed,
@@ -863,8 +944,13 @@ def _exec_multikey(req: _Req, plan: SortPlan) -> SortOutput:
             descending=(descending,), config=req.config,
             investigator=req.investigator, n=int(karr.shape[0]), n_local=None,
             dtype=karr.dtype, is_iterator=False, multikey=False,
+            trace=req.trace,
         )
-        return backend.execute(sub, plan)
+        out = backend.execute(sub, plan)
+        # LSD passes materialize mid-flight; only the top-level output
+        # may freeze the shared trace
+        out.meta.trace = None
+        return out
 
     klist = req.keys
     perm = np.asarray(sub_sort(klist[-1], req.descending[-1]).values)
@@ -877,6 +963,10 @@ def _exec_multikey(req: _Req, plan: SortPlan) -> SortOutput:
     values = req.values[perm] if req.values is not None else None
     meta = _meta(req, plan, plan.backend, req.config,
                  last.meta.retries if last is not None else 0)
+    if req.trace is not None:
+        # the LSD composition is fully materialized here — no lazy
+        # _force will run, so the trace completes now
+        req.trace.materialized()
     if req.want == "order":
         return SortOutput(meta, keys=sorted_keys, values=perm,
                           counts=last.counts if last is not None else None)
@@ -907,6 +997,7 @@ def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
     time (via ``serve_profile``) and dispatches later from its flush
     loop — both funnel through here, so serving traffic cannot bypass
     the planner's backend decision."""
+    _SORTS_TOTAL.labels(backend=plan.backend).inc()
     if req.n == 0:
         meta = _meta(req, plan, plan.backend, req.config, 0)
         if req.multikey:
@@ -919,6 +1010,8 @@ def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
         out = SortOutput(meta, keys=keys_out, values=vals,
                          counts=np.zeros(0, np.int64))
         out._chunks = iter(())
+        if req.trace is not None:
+            req.trace.materialized()  # empty result: nothing lazy left
         return out
     if req.multikey:
         return _exec_multikey(req, plan)
@@ -959,7 +1052,17 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
 
 def execute(keys, values=None, *, order="asc", want="values", where=None,
             limits=None, config=None, investigator=True) -> SortOutput:
-    req = _normalize(keys, values, order=order, want=want, config=config,
-                     investigator=investigator)
-    plan = _make_plan(req, where, limits)
+    lim = limits or SortLimits()
+    # an ambient obs.trace() block wins; else SortLimits(trace=True)
+    # builds a per-sort trace that freezes when the output materializes
+    tr = obs_tracing.current_trace()
+    if tr is None and lim.trace and obs_tracing.enabled():
+        tr = obs_tracing.Trace()
+    with _span(tr, "plan"):
+        req = _normalize(keys, values, order=order, want=want, config=config,
+                         investigator=investigator)
+        plan = _make_plan(req, where, lim)
+    if tr is not None:
+        tr.labels.setdefault("backend", plan.backend)
+        req.trace = tr
     return execute_request(req, plan)

@@ -47,6 +47,11 @@ class SortMeta:
     dtype: the planned key dtype, threaded at plan time; None only for
       iterator inputs that never yielded a chunk (empty results then
       default to float32 — the library's 32-bit mode).
+    trace: the ``repro.obs.tracing.Trace`` of this sort's phase spans —
+      set when tracing was active (``SortLimits(trace=True)`` or an
+      ambient ``obs.trace()`` block); None otherwise. Per-sort traces
+      freeze (become immutable, publish to the metrics registry) when
+      the output materializes.
     """
 
     backend: str
@@ -62,6 +67,7 @@ class SortMeta:
     chunk_retries: tuple | None = None
     coalesced: int | None = None
     multikey: str | None = None
+    trace: Any = None
 
 
 class SortOutput:
@@ -122,6 +128,10 @@ class SortOutput:
             # iterator inputs have unknown n until materialization
             first = self._keys[0] if isinstance(self._keys, tuple) else self._keys
             self.meta.n = int(first.shape[0])
+        if self.meta.trace is not None:
+            # materialization completes the sort: publish the phase spans
+            # and (for per-sort traces) freeze — immutable from here on
+            self.meta.trace.materialized()
 
     @property
     def keys(self):
@@ -173,6 +183,9 @@ class SortOutput:
             self.counts = np.asarray(sizes, np.int64)
         if not self.meta.n:
             self.meta.n = int(sum(sizes))
+        if self.meta.trace is not None:
+            # consuming the chunk stream IS the materialization
+            self.meta.trace.materialized()
 
     def order(self) -> np.ndarray:
         """The sorting permutation (``want="order"`` results)."""

@@ -199,6 +199,108 @@ def _mesh_program(mesh, axis_name, config, investigator: bool, kv: bool):
     return jax.jit(f)
 
 
+@functools.lru_cache(maxsize=None)
+def _mesh_phase_programs(mesh, axis_name, config, investigator: bool):
+    """Per-phase shard_map programs for traced mesh sorts (keys-only).
+
+    The fused ``_mesh_program`` keeps communication overlapped with the
+    local merge — the paper's latency-hiding — but is opaque to phase
+    attribution. Traced sorts trade that overlap for the breakdown: the
+    same shard bodies run as four programs (local sort / splitter
+    selection / exchange / merge) so each span fences on its own output.
+    kv mesh sorts keep the fused program under tracing (one "sort" span)
+    — phase splitting both paths is not worth doubling this table."""
+    axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+
+    def local_body(xl):
+        xs = local_sort(xl[0], tile=config.tile, use_pallas=config.use_pallas)
+        return xs[None]
+
+    def split_body(xsl):
+        xs = xsl[0]
+        p = _axis_size(axis_name)
+        (n,) = xs.shape
+        cap = config.capacity(p, n)
+        s = config.num_samples(p, n, key_bytes=xs.dtype.itemsize)
+        samples = spl.regular_sample(xs, s)
+        all_samples = jax.lax.all_gather(samples, axis_name, tiled=True)
+        splitters = spl.select_splitters(all_samples, p)
+        bounds = (
+            spl.investigator_bounds(xs, splitters)
+            if investigator
+            else spl.naive_bounds(xs, splitters)
+        )
+        send_counts = bounds[1:] - bounds[:-1]
+        overflowed = jax.lax.pmax(jnp.any(send_counts > cap), axis_name)
+        return bounds[None], send_counts[None], overflowed[None]
+
+    def exch_body(xsl, bl):
+        xs, bounds = xsl[0], bl[0]
+        p = _axis_size(axis_name)
+        (n,) = xs.shape
+        cap = config.capacity(p, n)
+        fill = kops.sentinel_for(xs.dtype)
+        xs_pad = jnp.concatenate([xs, jnp.full((cap,), fill, xs.dtype)])
+        send = _gather_buckets(xs_pad, bounds, cap, p)
+        recv = jax.lax.all_to_all(
+            send, axis_name, split_axis=0, concat_axis=0, tiled=True
+        )
+        send_counts = bounds[1:] - bounds[:-1]
+        recv_counts = jax.lax.all_to_all(
+            send_counts, axis_name, split_axis=0, concat_axis=0, tiled=True
+        )
+        return recv[None], recv_counts.sum()[None]
+
+    def merge_body(rl):
+        merged = merge_lib.merge_padded_runs(rl[0], use_pallas=config.use_pallas)
+        return merged[None]
+
+    local_f = jax.jit(shard_map_compat(
+        local_body, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))
+    split_f = jax.jit(shard_map_compat(
+        split_body, mesh=mesh, in_specs=P(axes),
+        out_specs=(P(axes), P(axes), P(axes))))
+    exch_f = jax.jit(shard_map_compat(
+        exch_body, mesh=mesh, in_specs=(P(axes), P(axes)),
+        out_specs=(P(axes), P(axes))))
+    merge_f = jax.jit(shard_map_compat(
+        merge_body, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))
+    return local_f, split_f, exch_f, merge_f
+
+
+def distributed_sort_phased(
+    x: jnp.ndarray,
+    mesh: jax.sharding.Mesh,
+    axis_name="data",
+    config: spl.SortConfig = spl.SortConfig(),
+    *,
+    investigator: bool = True,
+    trace,
+) -> ShardSortResult:
+    """Traced mesh sort: same result as ``distributed_sort``, run as four
+    fenced phase programs recording spans on ``trace`` with per-device
+    counts. Each overflow-ladder step appends a fresh set of spans."""
+    p = _axis_product(mesh, axis_name)
+    local_f, split_f, exch_f, merge_f = _mesh_phase_programs(
+        mesh, axis_name, config, investigator
+    )
+    xg = x.reshape(p, -1)
+    n = xg.shape[1]
+    with trace.span("local_sort") as sp:
+        xs = sp.fence(local_f(xg))
+        sp.counts([n] * p)
+    with trace.span("splitter") as sp:
+        bounds, send_counts, overflowed = sp.fence(split_f(xs))
+        sp.set(overflowed=bool(jnp.any(overflowed)))
+    with trace.span("exchange") as sp:
+        recv, counts = sp.fence(exch_f(xs, bounds))
+        sp.counts(list(counts))
+    with trace.span("merge") as sp:
+        merged = sp.fence(merge_f(recv))
+        sp.counts(list(counts))
+    return ShardSortResult(merged, counts, overflowed, send_counts)
+
+
 def _axis_product(mesh, axis_name) -> int:
     axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
     p = 1

@@ -1,0 +1,72 @@
+"""repro.obs — dependency-free tracing + metrics for the sort pipeline.
+
+Three layers, one import:
+
+* **Spans** (``obs.trace()`` / ``SortLimits(trace=True)``): wall-time
+  phase breakdown of a sort — plan, encode, stage, local sort, splitter,
+  exchange, merge, decode, D2H — with per-processor counts and measured
+  imbalance, exportable as Chrome trace-event JSON. See ``tracing``.
+* **Metrics** (``obs.counter/gauge/histogram``, ``obs.render_prometheus``):
+  process-wide registry the serve tier, program cache, and overflow
+  ladder publish into; rendered as Prometheus text exposition. See
+  ``metrics``.
+* **Profiling** (``obs.annotate``): optional ``jax.profiler`` step
+  annotations on the flush/staging hot paths (``REPRO_PROFILE=1``).
+
+``obs.disabled()`` switches the whole subsystem off for a block — the
+``trace_overhead`` benchmark gate uses it to price the instrumentation.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs import metrics, profiling, tracing
+from repro.obs.metrics import (
+    REGISTRY,
+    MetricsRegistry,
+    counter,
+    gauge,
+    histogram,
+    render_prometheus,
+)
+from repro.obs.profiling import annotate, set_profiling
+from repro.obs.tracing import Span, Trace, current_trace, maybe_span, trace
+
+__all__ = [
+    "metrics",
+    "profiling",
+    "tracing",
+    "REGISTRY",
+    "MetricsRegistry",
+    "counter",
+    "gauge",
+    "histogram",
+    "render_prometheus",
+    "annotate",
+    "set_profiling",
+    "Span",
+    "Trace",
+    "current_trace",
+    "maybe_span",
+    "trace",
+    "disabled",
+    "set_enabled",
+]
+
+
+def set_enabled(flag: bool) -> None:
+    """Master switch for spans *and* metric mutation."""
+    tracing.set_enabled(flag)
+    metrics.set_enabled(flag)
+
+
+@contextlib.contextmanager
+def disabled():
+    """Run a block with all observability off (spans skipped, metric
+    mutations dropped). Not reentrancy-counted — intended for benchmark
+    gates and tests, not nested production use."""
+    set_enabled(False)
+    try:
+        yield
+    finally:
+        set_enabled(True)

@@ -1,0 +1,42 @@
+"""Optional ``jax.profiler`` step annotations.
+
+Wall-time spans (``repro.obs.tracing``) answer "which phase is slow";
+the profiler answers "what is that phase doing on the device". These
+hooks bridge the two: when enabled, the flush-program and stream
+chunk-staging hot paths wrap their device work in
+``jax.profiler.TraceAnnotation`` so a captured profile (via
+``jax.profiler.trace(...)`` or TensorBoard) shows the same phase names
+the span trace uses.
+
+Disabled by default — ``TraceAnnotation`` costs a TraceMe even without a
+capture running, so the hooks are a no-op unless ``REPRO_PROFILE=1`` is
+set in the environment or ``set_profiling(True)`` is called.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+_profiling = os.environ.get("REPRO_PROFILE", "") == "1"
+
+
+def set_profiling(flag: bool) -> None:
+    global _profiling
+    _profiling = bool(flag)
+
+
+def profiling_enabled() -> bool:
+    return _profiling
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """``jax.profiler.TraceAnnotation(name)`` when profiling is on,
+    otherwise a zero-cost no-op."""
+    if not _profiling:
+        yield
+        return
+    import jax.profiler
+
+    with jax.profiler.TraceAnnotation(name):
+        yield

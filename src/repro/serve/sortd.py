@@ -59,7 +59,44 @@ from repro.core import keyenc, planner
 from repro.core.overflow import bump_capacity
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
+from repro.obs import metrics as obs_metrics
 from repro.stream.service import FlushEngine
+
+# Process-wide serve metrics (see repro.obs): every SortServer instance
+# publishes into these families, mirroring the per-instance stats()
+# dict in the shared Prometheus registry. Queue-wait and execute are
+# split on purpose — conflated, backpressure (deep queue) is
+# indistinguishable from slow programs (long flushes).
+_LAT_BUCKETS_MS = (0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+                   500.0, 1000.0, 2500.0, 10000.0, float("inf"))
+_M_REQUESTS = obs_metrics.counter(
+    "sortd_requests_total",
+    "Sort-server requests by terminal outcome.",
+    labels=("outcome",),  # submitted|completed|failed|cancelled|rejected
+)
+_M_QUEUE_DEPTH = obs_metrics.gauge(
+    "sortd_queue_depth", "Pending requests across all buckets."
+)
+_M_QUEUE_WAIT = obs_metrics.histogram(
+    "sortd_queue_wait_ms", "Request wait from submit to dispatch (ms).",
+    buckets=_LAT_BUCKETS_MS,
+)
+_M_EXECUTE = obs_metrics.histogram(
+    "sortd_execute_ms", "Request execution from dispatch to resolve (ms).",
+    buckets=_LAT_BUCKETS_MS,
+)
+_M_LATENCY = obs_metrics.histogram(
+    "sortd_latency_ms", "End-to-end request latency, submit to resolve (ms).",
+    buckets=_LAT_BUCKETS_MS,
+)
+_M_FLUSHES = obs_metrics.counter(
+    "sortd_flushes_total", "Dispatch groups fired, by kind.",
+    labels=("kind",),  # coalesced|direct
+)
+_M_COALESCED = obs_metrics.counter(
+    "sortd_coalesced_requests_total",
+    "Requests that shared a vmapped coalesced flush.",
+)
 
 
 class QueueFullError(RuntimeError):
@@ -87,7 +124,7 @@ class SortFuture(Future):
 class _Pending:
     """One admitted request waiting in a bucket."""
 
-    __slots__ = ("fut", "req", "plan", "data", "t_submit")
+    __slots__ = ("fut", "req", "plan", "data", "t_submit", "t_dispatch")
 
     def __init__(self, fut, req, plan, data, t_submit):
         self.fut = fut
@@ -95,6 +132,10 @@ class _Pending:
         self.plan = plan        # SortPlan made at admission
         self.data = data        # flat np array (coalescable path), else None
         self.t_submit = t_submit
+        self.t_dispatch = None  # set when the flush/worker picks it up:
+        #                         splits latency into queue-wait + execute
+        #                         (direct requests: pool queue time counts
+        #                         as queue-wait — it IS backpressure)
 
 
 class SortServer:
@@ -151,9 +192,13 @@ class SortServer:
         self._direct_pool = ThreadPoolExecutor(
             max_workers=int(direct_workers), thread_name_prefix="sortd-direct"
         )
-        # request latencies (submit -> resolve, seconds); appended and
-        # snapshotted under the condition lock — stats() iterates it
+        # request latencies (seconds); appended and snapshotted under the
+        # condition lock — stats() iterates them. _lat is end-to-end
+        # (submit -> resolve); _lat_queue / _lat_exec split it at
+        # dispatch so backpressure and slow programs read separately
         self._lat: deque[float] = deque(maxlen=int(latency_window))
+        self._lat_queue: deque[float] = deque(maxlen=int(latency_window))
+        self._lat_exec: deque[float] = deque(maxlen=int(latency_window))
         self._buckets: dict[tuple, list[_Pending]] = {}
         self._depth = 0
         self._seq = 0
@@ -187,6 +232,7 @@ class SortServer:
                 raise RuntimeError("SortServer is closed")
             if self._depth >= self.max_queue:
                 self._stats["rejected"] += 1
+                _M_REQUESTS.labels(outcome="rejected").inc()
                 raise QueueFullError(
                     f"sort queue full ({self.max_queue} pending requests)",
                     retry_after_ms=self._retry_after_ms(time.monotonic()),
@@ -238,6 +284,7 @@ class SortServer:
                 raise RuntimeError("SortServer is closed")
             if self._depth >= self.max_queue:
                 self._stats["rejected"] += 1
+                _M_REQUESTS.labels(outcome="rejected").inc()
                 raise QueueFullError(
                     f"sort queue full ({self.max_queue} pending requests)",
                     retry_after_ms=self._retry_after_ms(now),
@@ -257,6 +304,8 @@ class SortServer:
             self._buckets.setdefault(key, []).append(pend)
             self._depth += 1
             self._stats["submitted"] += 1
+            _M_REQUESTS.labels(outcome="submitted").inc()
+            _M_QUEUE_DEPTH.set(self._depth)
             self._cond.notify()
         return fut
 
@@ -284,17 +333,34 @@ class SortServer:
         batch occupancy (``flushes``/``flushed_requests``/
         ``occupancy_mean`` cover COALESCED flushes only; individually
         dispatched requests are counted in ``direct_dispatches``),
-        program-cache and overflow-ladder counters."""
+        program-cache and overflow-ladder counters.
+
+        End-to-end latency splits at dispatch: ``queue_wait_ms_*``
+        (submit -> dispatch; deep values mean backpressure) and
+        ``execute_ms_*`` (dispatch -> resolve; deep values mean slow
+        programs). The same samples feed the process-wide
+        ``sortd_queue_wait_ms`` / ``sortd_execute_ms`` histograms in
+        ``repro.obs`` (scrape with ``obs.render_prometheus()``)."""
         with self._cond:
             s = dict(self._stats)
             depth = self._depth
             lat_ms = np.asarray(self._lat, np.float64) * 1e3
+            queue_ms = np.asarray(self._lat_queue, np.float64) * 1e3
+            exec_ms = np.asarray(self._lat_exec, np.float64) * 1e3
         flushes = s["flushes"]
+
+        def _pct(arr, q):
+            return float(np.percentile(arr, q)) if arr.size else None
+
         s.update(
             queue_depth=depth,
             occupancy_mean=(s["flushed_requests"] / flushes) if flushes else 0.0,
-            latency_ms_p50=float(np.percentile(lat_ms, 50)) if lat_ms.size else None,
-            latency_ms_p99=float(np.percentile(lat_ms, 99)) if lat_ms.size else None,
+            latency_ms_p50=_pct(lat_ms, 50),
+            latency_ms_p99=_pct(lat_ms, 99),
+            queue_wait_ms_p50=_pct(queue_ms, 50),
+            queue_wait_ms_p99=_pct(queue_ms, 99),
+            execute_ms_p50=_pct(exec_ms, 50),
+            execute_ms_p99=_pct(exec_ms, 99),
         )
         return s
 
@@ -363,6 +429,7 @@ class SortServer:
                 self._force = False
                 work = [(k, self._buckets.pop(k)) for k in ready]
                 self._depth -= sum(len(p) for _, p in work)
+                _M_QUEUE_DEPTH.set(self._depth)
             for key, pends in work:
                 self._flush_group(key, pends)
 
@@ -373,6 +440,7 @@ class SortServer:
         if cancelled:
             with self._cond:
                 self._stats["cancelled"] += cancelled
+            _M_REQUESTS.labels(outcome="cancelled").inc(cancelled)
         if not live:
             return
         with self._cond:
@@ -385,6 +453,11 @@ class SortServer:
             else:
                 self._stats["direct_dispatches"] += len(live)
         if key[0] == "batch":
+            _M_FLUSHES.labels(kind="coalesced").inc()
+            _M_COALESCED.inc(len(live))
+            t_dispatch = time.monotonic()
+            for p in live:
+                p.t_dispatch = t_dispatch
             try:
                 results = self._engine.run_group(
                     [p.data for p in live], descending=key[1],
@@ -403,12 +476,16 @@ class SortServer:
                     self._resolve(
                         p, self._wrap_batched(p, res, len(live), retries))
         else:
+            _M_FLUSHES.labels(kind="direct").inc(len(live))
             for p in live:
                 # off the flush loop: a slow stream/mesh dispatch must
                 # not hold coalescable buckets past their deadline
                 self._direct_pool.submit(self._dispatch_direct, p)
 
     def _dispatch_direct(self, p: _Pending) -> None:
+        # queue-wait for a direct request includes the worker-pool queue:
+        # waiting for a free worker is backpressure, not execution
+        p.t_dispatch = time.monotonic()
         try:
             out = planner.execute_request(p.req, p.plan)
             # materialize HERE so terminal errors land on the future (not
@@ -441,14 +518,29 @@ class SortServer:
         # packed multi-key flushes resolve to the unpacked column tuple
         return SortOutput(meta, keys=arr)
 
+    def _record_latency(self, p: _Pending, now: float) -> None:
+        """Called under the lock: record total + split latency samples."""
+        total = now - p.t_submit
+        t_d = p.t_dispatch if p.t_dispatch is not None else now
+        queue_wait = t_d - p.t_submit
+        execute = now - t_d
+        self._lat.append(total)
+        self._lat_queue.append(queue_wait)
+        self._lat_exec.append(execute)
+        _M_LATENCY.observe(total * 1e3)
+        _M_QUEUE_WAIT.observe(queue_wait * 1e3)
+        _M_EXECUTE.observe(execute * 1e3)
+
     def _resolve(self, p: _Pending, out: SortOutput) -> None:
         with self._cond:
-            self._lat.append(time.monotonic() - p.t_submit)
+            self._record_latency(p, time.monotonic())
             self._stats["completed"] += 1
+        _M_REQUESTS.labels(outcome="completed").inc()
         p.fut.set_result(out)
 
     def _fail(self, p: _Pending, e: Exception) -> None:
         with self._cond:
-            self._lat.append(time.monotonic() - p.t_submit)
+            self._record_latency(p, time.monotonic())
             self._stats["failed"] += 1
+        _M_REQUESTS.labels(outcome="failed").inc()
         p.fut.set_exception(e)

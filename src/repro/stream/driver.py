@@ -18,6 +18,7 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro.obs.tracing import maybe_span as _span
 from repro.stream.external_merge import external_merge, external_merge_kv
 from repro.stream.partition import Partition, partition_runs
 from repro.stream.runs import StreamConfig, generate_runs
@@ -25,20 +26,30 @@ from repro.stream.runs import StreamConfig, generate_runs
 
 def _pipeline(
     data, cfg: StreamConfig, values=None, *, investigator: bool = True,
-    stats: dict | None = None, descending: bool = False,
+    stats: dict | None = None, descending: bool = False, trace=None,
 ) -> Partition | None:
     """None = empty dataset (np.sort of empty is empty, so no error).
 
     ``stats`` (optional, mutated) receives ``chunk_retries`` — the
     per-chunk capacity-ladder steps of pass 1, which the planner threads
-    into ``SortOutput.meta`` ladder accounting."""
-    runs = generate_runs(data, cfg, values, investigator=investigator,
-                         descending=descending)
+    into ``SortOutput.meta`` ladder accounting. ``trace`` (an
+    ``obs.tracing.Trace``) records one ``local_sort`` span for pass 1
+    (per-run sizes as the processor counts) and one ``splitter`` span
+    for pass 2 (per-bucket sizes); pass-3 ``merge`` spans are recorded
+    per bucket by ``external_merge``."""
+    with _span(trace, "local_sort") as sp:
+        runs = generate_runs(data, cfg, values, investigator=investigator,
+                             descending=descending)
+        sp.counts([len(r) for r in runs])
+        sp.set(chunk_retries=sum(r.retries for r in runs))
     if stats is not None:
         stats["chunk_retries"] = [r.retries for r in runs]
     if not runs:
         return None
-    return partition_runs(runs, cfg, investigator=investigator)
+    with _span(trace, "splitter") as sp:
+        part = partition_runs(runs, cfg, investigator=investigator)
+        sp.counts(list(part.bucket_sizes))
+    return part
 
 
 def _empty_like(data) -> np.ndarray:
@@ -58,19 +69,20 @@ def sort_stream(
     investigator: bool = True,
     stats: dict | None = None,
     descending: bool = False,
+    trace=None,
 ) -> Iterator[np.ndarray]:
     """Out-of-core sort, streamed: yields sorted chunks whose
     concatenation equals np.sort(data) (reversed when ``descending``).
     Peak device memory is O(chunk). ``stats`` (optional dict) collects
-    pass-1 ladder accounting."""
+    pass-1 ladder accounting; ``trace`` collects per-pass phase spans."""
     part = _pipeline(data, cfg, investigator=investigator, stats=stats,
-                     descending=descending)
+                     descending=descending, trace=trace)
     if part is None:
         return
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
     yield from external_merge(
         part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk,
-        descending=descending,
+        descending=descending, trace=trace,
     )
 
 
@@ -81,10 +93,12 @@ def sort_external(
     investigator: bool = True,
     stats: dict | None = None,
     descending: bool = False,
+    trace=None,
 ) -> np.ndarray:
     """Out-of-core sort, materialized on host."""
     chunks = list(sort_stream(data, cfg, investigator=investigator,
-                              stats=stats, descending=descending))
+                              stats=stats, descending=descending,
+                              trace=trace))
     if not chunks:
         return _empty_like(data)
     return np.concatenate(chunks)
@@ -98,18 +112,19 @@ def sort_external_kv(
     investigator: bool = True,
     stats: dict | None = None,
     descending: bool = False,
+    trace=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Out-of-core key/value sort (the payload — e.g. provenance indices —
     rides every pass: run generation, partitioning and the final merge)."""
     part = _pipeline(keys, cfg, values, investigator=investigator,
-                     stats=stats, descending=descending)
+                     stats=stats, descending=descending, trace=trace)
     if part is None:
         return _empty_like(keys), _empty_like(values)
     out_chunk = cfg.out_chunk_elems or cfg.chunk_elems
     ks, vs = [], []
     for mk, mv in external_merge_kv(
         part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk,
-        descending=descending,
+        descending=descending, trace=trace,
     ):
         ks.append(mk)
         vs.append(mv)

@@ -21,6 +21,7 @@ from repro.core import keyenc
 from repro.core import merge as merge_lib
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
+from repro.obs.tracing import maybe_span as _span
 from repro.stream.partition import Partition
 
 
@@ -95,27 +96,36 @@ def _chunk_slices(n: int, out_chunk: int | None):
 
 def external_merge(
     part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None,
-    descending: bool = False
+    descending: bool = False, trace=None
 ) -> Iterator[np.ndarray]:
     """Yield the globally sorted dataset as a stream of sorted chunks.
 
     With ``descending=True`` (flip-encoded partition), encoded-ascending
     bucket order IS decoded-descending order, so the stream yields the
-    user's descending output chunk by chunk in bounded memory."""
-    for segs in part.segments:
-        merged = merge_segments(segs, use_pallas=use_pallas,
-                                descending=descending)
+    user's descending output chunk by chunk in bounded memory. ``trace``
+    records one ``merge`` span per bucket (segment sizes as counts; the
+    span includes the bucket's device decode + D2H — merge_segments
+    returns host arrays)."""
+    for b, segs in enumerate(part.segments):
+        with _span(trace, "merge", bucket=b) as sp:
+            sp.counts([s.shape[0] for s in segs])
+            merged = merge_segments(segs, use_pallas=use_pallas,
+                                    descending=descending)
         for lo, hi in _chunk_slices(merged.shape[0], out_chunk):
             yield merged[lo:hi]
 
 
 def external_merge_kv(
     part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None,
-    descending: bool = False
+    descending: bool = False, trace=None
 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
     assert part.value_segments is not None, "partition carries no values"
-    for segs, vsegs in zip(part.segments, part.value_segments):
-        mk, mv = merge_segments_kv(segs, vsegs, use_pallas=use_pallas,
-                                   descending=descending)
+    for b, (segs, vsegs) in enumerate(
+        zip(part.segments, part.value_segments)
+    ):
+        with _span(trace, "merge", bucket=b) as sp:
+            sp.counts([s.shape[0] for s in segs])
+            mk, mv = merge_segments_kv(segs, vsegs, use_pallas=use_pallas,
+                                       descending=descending)
         for lo, hi in _chunk_slices(mk.shape[0], out_chunk):
             yield mk[lo:hi], mv[lo:hi]

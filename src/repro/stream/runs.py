@@ -34,6 +34,7 @@ from repro.core import overflow, sim
 from repro.core import planner as planner_grid
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
+from repro.obs.profiling import annotate as _annotate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,16 +183,18 @@ def generate_runs(
             kfill = keyenc.flip_np(kfill)
         # H2D of the NEXT chunk goes on the wire while the previous
         # chunk's sort is still executing (async dispatch) — the
-        # double-buffer overlap.
-        dev_k = jax.device_put(_pad_chunk(chunk, p, per, kfill))
-        dev_v = None
-        if val_chunks is not None:
-            vchunk = next(val_chunks, None)
-            if vchunk is None or vchunk.shape[0] != m:
-                raise ValueError("values must chunk identically to keys")
-            planner_grid.check_key_dtype(vchunk.dtype, what="stream chunk values")
-            vfill = np.asarray(kops.sentinel_for(jnp.dtype(vchunk.dtype)))
-            dev_v = jax.device_put(_pad_chunk(vchunk, p, per, vfill))
+        # double-buffer overlap. The profiler annotation (REPRO_PROFILE=1)
+        # makes that overlap visible in a captured device profile.
+        with _annotate("repro.stream.stage_chunk"):
+            dev_k = jax.device_put(_pad_chunk(chunk, p, per, kfill))
+            dev_v = None
+            if val_chunks is not None:
+                vchunk = next(val_chunks, None)
+                if vchunk is None or vchunk.shape[0] != m:
+                    raise ValueError("values must chunk identically to keys")
+                planner_grid.check_key_dtype(vchunk.dtype, what="stream chunk values")
+                vfill = np.asarray(kops.sentinel_for(jnp.dtype(vchunk.dtype)))
+                dev_v = jax.device_put(_pad_chunk(vchunk, p, per, vfill))
         if inflight is not None:
             runs.append(finalize(inflight))  # blocks on the *previous* sort
         inflight = (dev_k, dev_v, dispatch(dev_k, dev_v, cfg.sort), cfg.sort, m)

@@ -48,7 +48,21 @@ from repro.core.overflow import OverflowPolicy, SortOverflowError, retry_overflo
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
+from repro.obs import metrics as obs_metrics
+from repro.obs.profiling import annotate as _annotate
 from repro.stream.runs import _pad_chunk
+
+# Registry mirrors of the per-instance ``stats`` dicts: process-wide
+# compile/reuse accounting for every ProgramCache in the process, scraped
+# through ``obs.render_prometheus()`` alongside the serve-tier metrics.
+_M_CACHE_BUILDS = obs_metrics.counter(
+    "repro_program_cache_builds_total",
+    "Vmapped sort programs compiled into a ProgramCache (cache misses).",
+)
+_M_CACHE_HITS = obs_metrics.counter(
+    "repro_program_cache_hits_total",
+    "ProgramCache lookups served by an already-compiled program.",
+)
 
 
 class ProgramCache:
@@ -91,8 +105,10 @@ class ProgramCache:
             fn = jax.jit(jax.vmap(body))
             self.programs[key] = fn
             self.stats["programs"] += 1
+            _M_CACHE_BUILDS.inc()
         else:
             self.stats["hits"] += 1
+            _M_CACHE_HITS.inc()
         return fn
 
 
@@ -187,7 +203,10 @@ class FlushEngine:
         fn = self.cache.get(b, p, per, dtype, self.config, self.investigator,
                             flat=True, descending=descending,
                             packspec=packspec)
-        res = fn(jnp.asarray(batch))
+        # profiler annotation (REPRO_PROFILE=1) brackets the flush program
+        # dispatch so captured device profiles attribute the vmapped sort
+        with _annotate("repro.service.flush_batch"):
+            res = fn(jnp.asarray(batch))
         self.stats["batches"] += 1
 
         overflowed = np.asarray(res.overflowed)

@@ -1,0 +1,92 @@
+"""CI metric-name stability check.
+
+Prometheus metric names and label sets are a public scrape surface:
+dashboards and alert rules break silently when one is renamed. This
+check imports every module that registers metrics, snapshots the
+process-wide registry schema (``REGISTRY.describe()`` — name, type,
+sorted label names per family), and diffs it against the checked-in
+``tests/metrics_schema.json``.
+
+    PYTHONPATH=src python tests/check_metrics_schema.py            # check
+    PYTHONPATH=src python tests/check_metrics_schema.py --update   # regen
+
+Renames/removals must update the schema file DELIBERATELY (run with
+``--update`` and commit the diff alongside the code change) — the
+failure message exists to make that a reviewed decision, not an
+accident. Also collected by pytest (``test_metrics_schema_stable``).
+"""
+import json
+import pathlib
+import sys
+
+SCHEMA_PATH = pathlib.Path(__file__).parent / "metrics_schema.json"
+
+
+def current_schema() -> list[dict]:
+    """Import every metric-registering module, then snapshot the
+    registry. Module-level metric handles register at import time, so
+    the imports ARE the registration."""
+    import repro.core.overflow    # repro_overflow_ladder_retries_total
+    import repro.core.planner     # repro_sorts_total
+    import repro.obs.tracing      # repro_sort_phase_seconds
+    import repro.serve.sortd      # sortd_*
+    import repro.stream.service   # repro_program_cache_*
+
+    from repro.obs import metrics
+    # repro_test_* names are scratch metrics the test suite registers in
+    # the (process-wide) registry — not scrape surface
+    return [d for d in metrics.REGISTRY.describe()
+            if not d["name"].startswith("repro_test_")]
+
+
+def diff(expected: list[dict], got: list[dict]) -> list[str]:
+    exp = {d["name"]: d for d in expected}
+    cur = {d["name"]: d for d in got}
+    lines = []
+    for name in sorted(set(exp) - set(cur)):
+        lines.append(f"  removed: {exp[name]}")
+    for name in sorted(set(cur) - set(exp)):
+        lines.append(f"  added:   {cur[name]}")
+    for name in sorted(set(exp) & set(cur)):
+        if exp[name] != cur[name]:
+            lines.append(f"  changed: {exp[name]} -> {cur[name]}")
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    got = current_schema()
+    if "--update" in argv:
+        SCHEMA_PATH.write_text(json.dumps(got, indent=1) + "\n")
+        print(f"wrote {SCHEMA_PATH} ({len(got)} metric families)")
+        return 0
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, got)
+    if lines:
+        print("metric exposition schema drifted from "
+              "tests/metrics_schema.json:", file=sys.stderr)
+        print("\n".join(lines), file=sys.stderr)
+        print(
+            "\nMetric names/labels are a public scrape surface — renames "
+            "must update the schema deliberately:\n"
+            "  PYTHONPATH=src python tests/check_metrics_schema.py --update\n"
+            "and commit the regenerated file with this change.",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"metrics schema stable ({len(got)} families)")
+    return 0
+
+
+def test_metrics_schema_stable():
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, current_schema())
+    assert not lines, (
+        "metric exposition schema drifted (renames must update "
+        "tests/metrics_schema.json deliberately — run "
+        "`python tests/check_metrics_schema.py --update`):\n"
+        + "\n".join(lines)
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -310,3 +310,83 @@ def test_terminal_overflow_lands_on_future():
         with pytest.raises(repro.SortOverflowError):
             fut.result(300)
         assert srv.stats()["failed"] == 1
+
+
+# ------------------------------------------------------- observability
+
+
+def test_metrics_scrape_under_concurrent_load():
+    """Scrape stats() and obs.render_prometheus() WHILE client threads
+    hammer the server: every snapshot must be internally consistent (no
+    torn reads — resolved requests never exceed submissions), counters
+    must be monotone across scrapes, and the final exposition must be
+    parseable prometheus text carrying the serve metric families."""
+    from repro import obs
+
+    stop = threading.Event()
+    snaps: list[dict] = []
+    expositions: list[str] = []
+
+    def scraper():
+        while not stop.is_set():
+            s = srv.stats()
+            snaps.append(s)
+            expositions.append(obs.render_prometheus())
+            time.sleep(0.005)
+
+    with _server(max_batch=8, max_delay_ms=5) as srv:
+        t = threading.Thread(target=scraper)
+        t.start()
+        try:
+            def client(cid):
+                rng = np.random.default_rng(100 + cid)
+                futs = [
+                    srv.submit(rng.normal(0, 1, 256).astype(np.float32))
+                    for _ in range(4)
+                ]
+                for f in futs:
+                    np.testing.assert_array_equal(
+                        f.result(120).keys, np.sort(f.result(120).keys)
+                    )
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(4)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        finally:
+            stop.set()
+            t.join()
+        snaps.append(srv.stats())
+
+    # no torn snapshots: a scrape can never observe more resolutions
+    # than submissions, nor a negative queue depth
+    for s in snaps:
+        assert s["completed"] + s["failed"] + s["cancelled"] <= s["submitted"]
+        assert s["queue_depth"] >= 0
+    # counters monotone across successive scrapes
+    for a, b in zip(snaps, snaps[1:]):
+        for k in ("submitted", "completed", "failed", "cancelled", "flushes"):
+            assert b[k] >= a[k], f"{k} went backwards: {a[k]} -> {b[k]}"
+    final = snaps[-1]
+    assert final["completed"] == 16 and final["failed"] == 0
+    # split latency accounting present and coherent
+    for k in ("queue_wait_ms_p50", "queue_wait_ms_p99",
+              "execute_ms_p50", "execute_ms_p99"):
+        assert final[k] is not None and final[k] >= 0.0
+
+    # the exposition parses as prometheus text and carries the families
+    text = expositions[-1] if expositions else obs.render_prometheus()
+    seen = set()
+    for line in text.splitlines():
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            continue
+        assert line, "blank line inside exposition body"
+        name_part, _, value = line.rpartition(" ")
+        float(value)  # every sample line ends in a parseable number
+        seen.add(name_part.split("{")[0])
+    for fam in ("sortd_requests_total", "sortd_queue_depth",
+                "sortd_latency_ms_bucket", "sortd_queue_wait_ms_bucket",
+                "sortd_execute_ms_bucket"):
+        assert fam in seen, f"missing metric family {fam}"
