@@ -13,7 +13,10 @@ input, no wall-clock assert). ``multikey_pack`` is the packing gate: a
 packed int32 pass than as LSD stable passes (same smoke convention).
 ``api_matrix`` records wall time and achieved balance of
 planner-dispatched sorts per backend/size/dtype for the cross-PR JSON
-trajectory.
+trajectory. ``tune_dispatch`` is the cost-model gate: a calibrated
+``repro.tune`` store must never steer the planner to a backend >1.25x
+slower than the measured-fastest, and a cold store must leave plans
+bit-identical to the static rule.
 """
 from __future__ import annotations
 
@@ -260,6 +263,87 @@ def trace_overhead():
          backend="sim", size=n, dtype="float32",
          coverage=round(cov, 4), smoke=SMOKE)
     assert cov >= 0.95, f"span coverage {cov:.3f} < 0.95 of traced window"
+
+
+def tune_dispatch():
+    """Cost-model dispatch gate (the ``repro.tune`` acceptance criteria).
+
+    (a) Cold start is bit-identical: with an EMPTY tune store ambient,
+    the planner must produce the same plan — backend, reason strings,
+    chunk sizing — as with no tuner at all, and keep
+    ``cost_source == "static"``.
+
+    (b) Calibrated dispatch is never badly wrong: sim and stream are
+    measured directly (pinned ``where=``) at probe sizes, the
+    measurements seed a fresh ``TuneStore``, and the planner — now
+    consulting the model (``cost_source == "model"``) — must pick a
+    backend whose measured time is <= 1.25x the measured-fastest at the
+    probed size. The probe records are emitted with ``tune_op="sort"``
+    so ``run.py --calibrate`` folds this run's measurements back into
+    the on-disk store.
+
+    ``REPRO_API_SMOKE=1`` / ``REPRO_TUNE_SMOKE=1`` shrink the probes and
+    keep the plan-shape asserts (cold identity, model consultation,
+    correctness) while dropping the 1.25x wall-clock assert — shared
+    runners cannot promise stable ratios at tiny sizes."""
+    from repro import tune
+
+    smoke = SMOKE or os.environ.get("REPRO_TUNE_SMOKE", "") == "1"
+    sizes = ((1 << 12, 1 << 13, 1 << 14) if smoke
+             else (1 << 14, 1 << 16, 1 << 18))
+    n_gate = sizes[1]
+    limits = repro.SortLimits(chunk_elems=1 << 14, n_procs=8,
+                              stream_threshold=sizes[-1])
+    rng = np.random.default_rng(17)
+    data = {n: rng.normal(0, 1, n).astype(np.float32) for n in sizes}
+
+    def run(n, backend):
+        o = repro.sort(data[n], where=backend, limits=limits, config=CFG)
+        return jax.block_until_ready(np.asarray(o.keys))
+
+    # (a) cold bit-identity: empty store => the static plan, untouched
+    plan_bare = repro.sort(data[n_gate], limits=limits, config=CFG).meta.plan
+    with tune.active(tune.TuneStore()):
+        plan_cold = repro.sort(data[n_gate], limits=limits,
+                               config=CFG).meta.plan
+    assert plan_cold.backend == plan_bare.backend
+    assert plan_cold.reasons == plan_bare.reasons
+    assert plan_cold.chunk_elems == plan_bare.chunk_elems
+    assert plan_cold.cost_source == "static" and not plan_cold.cost_predicted
+
+    # (b) measure both backends at the probes, seed a fresh store
+    store = tune.TuneStore()
+    measured = {}
+    for n in sizes:
+        for backend in ("sim", "stream"):
+            us = timeit(lambda n=n, b=backend: run(n, b),
+                        warmup=1, iters=2 if smoke else 5)
+            measured[(backend, n)] = us
+            # weight 2: three probe bins x2 reaches the model's
+            # full-confidence count (FULL_COUNT=6) per backend curve
+            store.observe("sort", backend, "float32", n, us, weight=2.0)
+            emit(f"tune_probe_{backend}_{n}", us, backend=backend, size=n,
+                 dtype="float32", tune_op="sort", smoke=smoke)
+
+    with tune.active(store):
+        out = repro.sort(data[n_gate], limits=limits, config=CFG)
+        keys = np.asarray(out.keys)
+    np.testing.assert_array_equal(keys, np.sort(data[n_gate]))
+    plan = out.meta.plan
+    assert plan.cost_source == "model", (
+        f"calibrated store did not reach the planner: {plan.reasons}"
+    )
+    chosen = plan.backend
+    fastest = min(measured[(b, n_gate)] for b in ("sim", "stream"))
+    ratio = measured[(chosen, n_gate)] / fastest
+    emit("tune_dispatch_gate", measured[(chosen, n_gate)],
+         f"chosen={chosen};vs_fastest={ratio:.2f}x", backend=chosen,
+         size=n_gate, dtype="float32", ratio=round(ratio, 3), smoke=smoke)
+    if not smoke:
+        assert ratio <= 1.25, (
+            f"cost model chose {chosen}: {ratio:.2f}x slower than the "
+            f"measured-fastest backend at n={n_gate}"
+        )
 
 
 def api_matrix():

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.tune import COST_MODEL_VERSION
+
 
 def timeit(fn, *args, warmup=2, iters=5):
     """Median wall time (us) of a jitted callable (block_until_ready)."""
@@ -90,7 +92,11 @@ def emit(name: str, us: float, derived: str = "", *, size=None, dtype=None,
     the benchmark has no sort to measure them on — so load-balance and
     overflow regressions are visible in the same trajectory as timing."""
     print(f"{name},{us:.1f},{derived}")
-    rec = {"op": name, "us_per_call": round(float(us), 2), "derived": derived}
+    # every record is stamped with the active cost-model version so a
+    # calibration store (run.py --calibrate) can reject stale history
+    # after a tune-schema bump instead of silently mixing regimes
+    rec = {"op": name, "us_per_call": round(float(us), 2), "derived": derived,
+           "cost_model": COST_MODEL_VERSION}
     for k, v in (("size", size), ("dtype", dtype), ("backend", backend)):
         if v is not None:
             rec[k] = v

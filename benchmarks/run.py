@@ -6,10 +6,15 @@ across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|serve|all]
                                             [--only fig5,...] [--out-dir .]
+                                            [--calibrate] [--tune-store PATH]
 
 The serve suite honors REPRO_SERVE_SMOKE=1 and the api suite
 REPRO_API_SMOKE=1 (tiny sizes, correctness-only gates — the CI profile;
-see benchmarks/serve_bench.py / api_bench.py). The api decode gate
+see benchmarks/serve_bench.py / api_bench.py); REPRO_TUNE_SMOKE=1 puts
+the two repro.tune gates (``tune_dispatch``, ``serve_adaptive``) in the
+same correctness-only mode. ``--calibrate`` folds the run's per-sort
+records into the ``repro.tune`` store (``--tune-store`` overrides the
+path) so the cost-model planner starts warm on this machine. The api decode gate
 (``decode_gate``) asserts the fused device-decode materialization is
 >=1.5x faster than the host-decode baseline for a 2^22 descending kv
 sort; the ``multikey`` gate asserts the packed multi-key path is >=2x
@@ -36,6 +41,13 @@ def main() -> None:
                          "serve = async sort-server throughput/latency")
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_<suite>.json files land")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fold this run's per-sort records (tune_op / "
+                         "api_sort_* matrix entries) into the repro.tune "
+                         "store, so the cost-model planner starts warm")
+    ap.add_argument("--tune-store", default=None,
+                    help="tune-store path for --calibrate (default: "
+                         "repro.tune.DEFAULT_STORE_PATH)")
     args = ap.parse_args()
 
     from benchmarks import (api_bench, common, external_sort, ours,
@@ -64,17 +76,20 @@ def main() -> None:
             "multikey": api_bench.multikey_pack,
             "trace_overhead": api_bench.trace_overhead,
             "api_matrix": api_bench.api_matrix,
+            "tune_dispatch": api_bench.tune_dispatch,
         },
         "serve": {
             "serve_throughput": serve_bench.serve_throughput,
             "serve_latency": serve_bench.serve_latency,
             "serve_pad_retries": serve_bench.serve_pad_retries,
+            "serve_adaptive": serve_bench.serve_adaptive,
         },
     }
     selected = list(suites) if args.suite == "all" else [args.suite]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failed = []
+    calibration = []
     for suite_name in selected:
         common.drain_records()
         for name, fn in suites[suite_name].items():
@@ -86,11 +101,23 @@ def main() -> None:
                 failed.append(name)
                 traceback.print_exc()
         records = common.drain_records()
+        calibration.extend(records)
         if records:
             path = f"{args.out_dir}/BENCH_{suite_name}.json"
             with open(path, "w") as f:
                 json.dump({"suite": suite_name, "records": records}, f, indent=1)
             print(f"wrote {path} ({len(records)} records)", file=sys.stderr)
+    if args.calibrate:
+        from repro import tune
+
+        store_path = args.tune_store or tune.DEFAULT_STORE_PATH
+        store, reason = tune.TuneStore.load_or_cold(store_path)
+        if reason != "loaded":
+            print(f"calibrating a fresh store ({reason})", file=sys.stderr)
+        n = store.ingest_bench(calibration)
+        store.save(store_path)
+        print(f"calibrated {store_path}: +{n} records, "
+              f"{store.total_count} observations total", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -5,7 +5,9 @@ deadline.
 
 Gates (the serve-suite acceptance criteria):
   * async throughput >= 2x sequential, at mean batch occupancy >= 4;
-  * a lone request resolves within 2x ``max_delay_ms``.
+  * a lone request resolves within 2x ``max_delay_ms``;
+  * an ``adapt=`` server matches/beats a mis-tuned static server's p99
+    under the same closed-loop load (``serve_adaptive``).
 
 Both use ``common.gate_ratio``/``gate_us`` (interleaved median-of-N with
 warmup) — the de-flaked gate estimators. ``REPRO_SERVE_SMOKE=1`` (the CI
@@ -17,6 +19,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 
 import numpy as np
 
@@ -150,6 +153,121 @@ def serve_pad_retries():
         )
     finally:
         server.close()
+
+
+def serve_adaptive():
+    """Adaptive-serving gate: a server with the ``adapt=`` feedback
+    controller (``repro.tune.AdaptConfig``) must match or beat a
+    statically mis-tuned server's client-observed p99 under the same
+    closed-loop load.
+
+    Both servers start from the same deliberately slack knobs
+    (``max_delay_ms=40``, batch cap above the offered in-flight load, so
+    the delay deadline — not the slot target — fires every flush). The
+    static server is stuck waiting the full deadline per flush; the
+    adaptive one walks ``max_delay_ms`` down toward the config's p99
+    target within its hard bounds. Closed-loop clients (each keeps a
+    fixed number of requests in flight) hold batch occupancy >= 4, the
+    regime where micro-batching is actually paying and the controller
+    has a real window to read. Full-mode asserts: the controller moved
+    (>=1 adaptation), knobs stayed inside the config bounds, occupancy
+    >= 4, and adaptive p99 <= 1.1x static p99. Smoke
+    (``REPRO_SERVE_SMOKE=1`` / ``REPRO_TUNE_SMOKE=1``) shrinks the load
+    and keeps the correctness + bounds + stats-surface asserts only —
+    shared runners cannot promise wall-clock convergence."""
+    from repro.tune import AdaptConfig
+
+    smoke = SMOKE or os.environ.get("REPRO_TUNE_SMOKE", "") == "1"
+    n_clients, inflight, warm_rounds, rounds, elems = (
+        (2, 2, 3, 4, 64) if smoke else (8, 4, 40, 25, 128))
+    delay_ms = 10.0 if smoke else 40.0
+    batch_cap = 2 * n_clients * inflight  # delay deadline stays binding
+    cfg = AdaptConfig(
+        target_p99_ms=3.0 if smoke else 6.0, min_delay_ms=0.5,
+        max_delay_ms=delay_ms, min_batch=max(1, n_clients // 2),
+        max_batch=batch_cap, interval_s=0.05, patience=1, min_samples=4,
+    )
+    rng = np.random.default_rng(5)
+    arrays = [[rng.normal(0, 1, elems).astype(np.float32)
+               for _ in range(inflight)] for _ in range(n_clients)]
+    expect = [[np.sort(a) for a in client] for client in arrays]
+    limits = repro.SortLimits(n_procs=PROCS)
+
+    def drive(server, n_rounds, lats=None, check=False):
+        """Closed-loop load: each client keeps ``inflight`` same-shape
+        requests outstanding; per-request wall times land in ``lats``."""
+        def client(i):
+            for r in range(n_rounds):
+                t0 = time.perf_counter()
+                futs = [server.submit(a) for a in arrays[i]]
+                outs = [f.result(120) for f in futs]
+                dt = time.perf_counter() - t0
+                if lats is not None:
+                    lats.extend([dt] * len(outs))
+                if check and r == 0:
+                    for got, want in zip(outs, expect[i]):
+                        np.testing.assert_array_equal(got.keys, want)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    def warm_programs(server):
+        # pre-compile every pow2 batch program the flushes can pop, so
+        # compiles never land inside a measured (or adapting) window
+        b = 1
+        while b <= batch_cap:
+            server.sort_many_async([arrays[0][0]] * b)
+            b *= 2
+
+    def measure(adapt):
+        server = SortServer(max_batch=batch_cap, max_delay_ms=delay_ms,
+                            config=CFG, limits=limits, adapt=adapt)
+        try:
+            warm_programs(server)
+            drive(server, warm_rounds, check=True)  # convergence window
+            before = server.stats()
+            lats: list[float] = []
+            drive(server, rounds, lats=lats)
+            after = server.stats()
+            p99 = float(np.percentile(np.asarray(lats) * 1e3, 99))
+            flushes = after["flushes"] - before["flushes"]
+            occupancy = ((after["flushed_requests"]
+                          - before["flushed_requests"]) / max(flushes, 1))
+            return p99, occupancy, after
+        finally:
+            server.close()
+
+    p99_static, occ_static, _ = measure(None)
+    p99_adapt, occ_adapt, stats = measure(cfg)
+
+    assert stats.get("adaptive") is True
+    assert cfg.min_delay_ms <= stats["max_delay_ms"] <= cfg.max_delay_ms
+    assert cfg.min_batch <= stats["max_batch"] <= cfg.max_batch
+    emit("serve_static_p99", p99_static * 1e3,
+         f"max_delay_ms={delay_ms};occupancy={occ_static:.1f}",
+         backend="sim", size=elems * n_clients * inflight, dtype="float32",
+         p99_ms=round(p99_static, 2), occupancy=round(occ_static, 2),
+         smoke=smoke)
+    emit("serve_adaptive_p99", p99_adapt * 1e3,
+         f"delay_ms={stats['max_delay_ms']:.2f};"
+         f"adaptations={stats['adaptations']};"
+         f"vs_static={p99_adapt / max(p99_static, 1e-9):.2f}x",
+         backend="sim", size=elems * n_clients * inflight, dtype="float32",
+         p99_ms=round(p99_adapt, 2), occupancy=round(occ_adapt, 2),
+         adaptations=stats["adaptations"],
+         max_delay_ms=round(stats["max_delay_ms"], 2), smoke=smoke)
+    if not smoke:
+        assert stats["adaptations"] >= 1, (
+            "controller never adjusted despite a 40ms delay vs a 6ms target"
+        )
+        assert occ_adapt >= 4, f"batch occupancy {occ_adapt:.1f} < 4"
+        assert p99_adapt <= 1.1 * p99_static, (
+            f"adaptive p99 {p99_adapt:.1f}ms > 1.1x static {p99_static:.1f}ms"
+        )
 
 
 def serve_latency():

@@ -1,0 +1,99 @@
+"""Autotuning tour: calibrate a cost model, watch it steer dispatch,
+jump the overflow ladder, and let the sort server tune itself.
+
+Four stops:
+  1. calibrate — time sim vs stream at a few sizes, feed a TuneStore
+     (the same records ``benchmarks.run --calibrate`` persists);
+  2. dispatch — ``repro.explain`` shows the planner pricing both
+     backends from the store and picking the predicted-fastest
+     (``cost_source="model"``), vs the static size rule when cold;
+  3. overflow — with a tuner ambient, an undersized capacity_factor
+     recovers in ONE measured jump instead of walking the geometric
+     ladder;
+  4. serving — ``SortServer(adapt=AdaptConfig(...))`` walks its
+     ``max_delay_ms`` down toward a p99 target under closed-loop load.
+
+    PYTHONPATH=src python examples/sort_autotune.py
+"""
+import time
+
+import numpy as np
+
+import repro
+from repro import tune
+from repro.serve import SortServer
+
+CFG = repro.SortConfig(use_pallas=False)
+LIMITS = repro.SortLimits(chunk_elems=1 << 14, n_procs=8)
+
+
+def time_sort(x, where):
+    _ = repro.sort(x, where=where, limits=LIMITS, config=CFG).keys  # warm
+    t0 = time.perf_counter()
+    _ = repro.sort(x, where=where, limits=LIMITS, config=CFG).keys
+    return (time.perf_counter() - t0) * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # -- 1. calibrate: measure both backends at probe sizes
+    store = tune.TuneStore()
+    print("calibrating sim vs stream:")
+    for n in (1 << 14, 1 << 16, 1 << 18):
+        x = rng.normal(0, 1, n).astype(np.float32)
+        for backend in ("sim", "stream"):
+            us = time_sort(x, backend)
+            store.observe("sort", backend, "float32", n, us, weight=2.0)
+            print(f"  n=2^{n.bit_length() - 1} {backend:<7}{us:10.0f}us")
+
+    # -- 2. dispatch: cold = static size rule; warm = model pricing
+    x = rng.normal(0, 1, 1 << 16).astype(np.float32)
+    print("\ncold (static rule):")
+    print(repro.explain(x, limits=LIMITS, config=CFG))
+    with tune.active(store):
+        print("\ncalibrated (cost model):")
+        print(repro.explain(x, limits=LIMITS, config=CFG))
+        out = repro.sort(x, limits=LIMITS, config=CFG)
+        assert np.array_equal(out.keys, np.sort(x))
+        print(f"model-dispatched to {out.meta.backend!r} "
+              f"(cost_source={out.meta.plan.cost_source})")
+
+    # -- 3. overflow: measured ladder jump vs geometric doublings
+    y = rng.integers(0, 1 << 14, 1 << 14).astype(np.int32)
+    tight = repro.SortConfig(use_pallas=False, capacity_factor=0.15)
+    static = repro.sort(y, where="sim", limits=LIMITS, config=tight)
+    _ = static.keys
+    with tune.active(tune.TuneStore()):
+        measured = repro.sort(y, where="sim", limits=LIMITS, config=tight)
+        _ = measured.keys
+    print(f"\nundersized capacity_factor=0.15 on 2^14 uniform ints:")
+    print(f"  static geometric ladder: {static.meta.retries} retries")
+    print(f"  measured capacity jump:  {measured.meta.retries} retry")
+
+    # -- 4. serving: the adapt controller walks a mis-tuned 40ms flush
+    #    deadline down toward the 6ms p99 objective
+    cfg = tune.AdaptConfig(target_p99_ms=6.0, min_delay_ms=0.5,
+                           max_delay_ms=40.0, min_batch=4, max_batch=64,
+                           interval_s=0.05, patience=1, min_samples=4)
+    reqs = [rng.normal(0, 1, 128).astype(np.float32) for _ in range(8)]
+    with SortServer(max_batch=64, max_delay_ms=40.0, config=CFG,
+                    limits=repro.SortLimits(n_procs=8), adapt=cfg) as server:
+        print("\nadaptive server (start max_delay_ms=40, target p99=6ms):")
+        for round_ in range(30):
+            t0 = time.perf_counter()
+            for out in server.sort_many_async(reqs):
+                assert out.meta.coalesced is not None
+            round_ms = (time.perf_counter() - t0) * 1e3
+            if round_ % 10 == 9:
+                s = server.stats()
+                print(f"  round {round_ + 1:>2}: max_delay_ms="
+                      f"{s['max_delay_ms']:6.2f}  round_wall="
+                      f"{round_ms:6.1f}ms  adaptations={s['adaptations']}")
+        s = server.stats()
+        print(f"converged at max_delay_ms={s['max_delay_ms']:.2f} "
+              f"after {s['adaptations']} adjustments")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,9 +17,17 @@ front end: ``submit() -> SortFuture`` with planner-routed dispatch,
 micro-batching on slot/deadline targets, admission control, and a
 telemetry surface (see ``repro.serve.sortd``).
 
+``repro.tune`` is the opt-in empirical control plane: a persisted cost
+model that lets the planner dispatch on measured backend costs, start
+the overflow ladder from measured imbalance, and auto-tune the sort
+server's batching knobs against a p99 objective — bit-identical to the
+static heuristics until calibrated (see ``repro.core.api``'s tuning
+section and ``benchmarks.run --calibrate``).
+
 See ``repro.core.api`` for the full API reference and the deprecation
 table of the legacy ``SortLibrary`` facade.
 """
+from repro import tune
 from repro.core import (
     OverflowPolicy,
     SortConfig,
@@ -40,5 +48,5 @@ __all__ = [
     "sort", "plan", "explain",
     "SortOutput", "SortMeta", "SortPlan", "SortLimits", "SortConfig",
     "OverflowPolicy", "SortOverflowError", "register_backend",
-    "SortLibrary", "load_imbalance",
+    "SortLibrary", "load_imbalance", "tune",
 ]

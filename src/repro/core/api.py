@@ -121,6 +121,46 @@ subsystem off (the ``trace_overhead`` gate holds its residue under 2%).
 chunk staging with ``jax.profiler`` annotations. Runnable tour:
 ``examples/sort_observe.py``.
 
+Empirical tuning (``repro.tune``)
+---------------------------------
+The planner's size rules and overflow ladder are static heuristics; the
+``repro.tune`` control plane replaces them with measurements when you
+opt in — and is bit-identical to the static library when you don't (no
+tuner installed, or a cold/low-confidence store).
+
+``tune.configure(path=tune.DEFAULT_STORE_PATH, bench=(...))`` installs
+the ambient ``Tuner`` from a persisted ``TuneStore`` — per-(op, backend,
+dtype) cost observations binned by log2(size), fed from
+``BENCH_*.json`` history (``bench=`` paths, or
+``benchmarks.run --calibrate`` which writes the store directly) and
+online from every completed sort's dispatch->materialize wall time.
+``with tune.active(store):`` scopes a tuner instead. Once warm:
+
+* **dispatch** — ``_make_plan`` asks the log-log interpolated
+  ``CostModel`` to price each candidate backend at the request's size;
+  a confident prediction picks the predicted-fastest
+  (``plan.cost_source == "model"``) and sizes stream chunks by modeled
+  chunk-sort throughput. ``repro.explain`` prints the per-candidate
+  predictions and which one won; the ``tune_dispatch`` bench gate
+  asserts a calibrated model is never >1.25x off the measured-fastest.
+* **overflow** — the capacity ladder's first retry jumps straight to
+  the capacity the failed attempt's own ``send_counts`` measured
+  (``overflow.measured_capacity_need``) instead of walking geometric
+  doublings: splitters don't depend on capacity, so the re-run traffic
+  is identical and the jump is exact (clamped to the ladder ceiling).
+* **serving** — ``SortServer(adapt=tune.AdaptConfig(...))`` runs a
+  feedback controller that walks ``max_delay_ms``/``max_batch`` toward
+  a p99 latency objective within hard bounds (deadband + patience
+  hysteresis); ``stats()`` reports the live knobs and an
+  ``adaptations`` count.
+
+Decisions are observable: ``repro_tune_plans_total{source}`` counts
+static- vs model-sourced plans, ``repro_tune_observations_total{op}``
+the samples collected, and ``repro_tune_serve_*`` the controller's knob
+positions. The store file format is a persistence contract pinned by
+``tests/tune_schema.json``; incompatible files reject at load and
+recalibrate from cold. Runnable tour: ``examples/sort_autotune.py``.
+
 ``SortOutput`` fields & methods
     .keys .values .counts .overflowed .send_counts .raw .meta
     .order() .provenance() .imbalance() .searchsorted(q) .topk(k)

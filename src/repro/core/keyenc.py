@@ -336,6 +336,39 @@ def unpack_fields(packed: jnp.ndarray, spec: PackSpec) -> tuple:
     return tuple(cols)
 
 
+@functools.lru_cache(maxsize=None)
+def _unpack_chunk_prog(spec: PackSpec, m: int):
+    # one compiled program per (spec, pow2 length) bucket — a steady
+    # stream of output chunks reuses O(log) programs, not one per size
+    return jax.jit(lambda x: unpack_fields(x, spec))
+
+
+def unpack_chunk(packed: np.ndarray, spec: PackSpec) -> tuple:
+    """Device-unpack ONE packed output chunk into its column tuple.
+
+    The per-chunk twin of the fused unpack ``decode_grid`` runs for
+    sim/mesh materialization: the stream backend's sorted output arrives
+    as host chunks of the packed int32 key, and this pushes each chunk
+    back through ``unpack_fields`` on device (padded to the next power
+    of two for program reuse, sliced back after D2H) so packed
+    multi-key results stream via ``SortOutput.chunks()`` without a host
+    bit-surgery pass per column."""
+    packed = np.asarray(packed)
+    n = int(packed.shape[0])
+    if n == 0:
+        return unpack_np(packed, spec)
+    from repro.kernels.ops import _next_pow2
+
+    m = _next_pow2(n)
+    if m != n:
+        buf = np.zeros(m, packed.dtype)
+        buf[:n] = packed
+    else:
+        buf = packed
+    cols = _unpack_chunk_prog(spec, m)(jnp.asarray(buf))
+    return tuple(np.asarray(c)[:n] for c in cols)
+
+
 def check_payload_keys(keys, descending: bool, *, packspec=None) -> None:
     """Reject payload sorts whose keys collide with the padding sentinel.
 

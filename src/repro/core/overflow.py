@@ -70,6 +70,32 @@ def bump_capacity(config, policy: OverflowPolicy):
     )
 
 
+def measured_capacity_need(p: int, n_local: int) -> Callable:
+    """Build the ``measured=`` hook for ``retry_overflowed``: invert the
+    static bucket formula against the overflowed result's own
+    ``send_counts``.
+
+    ``SortConfig.capacity(p, n_local) = min(int(ideal·f) + 32, n_local)``
+    with ``ideal = ceil(n_local/p)``, and ``send_counts`` depends only on
+    the splitters and the data — NOT on the capacity — so a re-run's
+    traffic is identical and the smallest ``f`` whose buckets hold the
+    measured maximum is exactly sufficient. Blind geometric growth pays
+    one recompile + re-sort per step to discover what the first failure
+    already measured; this jumps there in one retry."""
+
+    def need(result, config) -> float | None:
+        sc = np.asarray(result.send_counts)
+        if sc.size == 0:
+            return None
+        max_send = int(sc.max())
+        ideal = max(1, -(-int(n_local) // int(p)))
+        # smallest f with int(ideal*f) + 32 >= max_send (the min(·,
+        # n_local) clamp only ever raises effective capacity demand met)
+        return max(0.0, (max_send - 31)) / ideal
+
+    return need
+
+
 def retry_overflowed(
     run: Callable,
     config,
@@ -77,16 +103,36 @@ def retry_overflowed(
     *,
     last=None,
     on_retry: Callable | None = None,
+    measured: Callable | None = None,
 ):
     """The attempt at ``config`` already overflowed; walk the ladder.
 
     ``run(config)`` must return a result with an ``overflowed`` field.
     Returns (result, config_used, retries). Raises ``SortOverflowError``
     when the ladder is exhausted and the policy says to raise.
-    """
+
+    ``measured`` (optional; the planner passes it only when a tuner is
+    ambient, so the cold path is bit-identical): called once with
+    ``(last_result, config)`` before the first retry, returning the
+    capacity_factor the overflowed result's own ``send_counts`` say is
+    required (or None to decline). When that exceeds the next geometric
+    step, the first retry jumps straight to it — clamped to the ladder's
+    own ceiling (``f·growth^max_doublings``), so the measured start can
+    reach exactly as far as blind growth could, never further."""
     result = last
     for i in range(policy.max_doublings):
-        config = bump_capacity(config, policy)
+        target = None
+        if i == 0 and measured is not None and result is not None:
+            target = measured(result, config)
+        stepped = bump_capacity(config, policy)
+        if target is not None and target > stepped.capacity_factor:
+            ceiling = (config.capacity_factor
+                       * policy.growth ** policy.max_doublings)
+            config = dataclasses.replace(
+                config, capacity_factor=min(float(target), ceiling)
+            )
+        else:
+            config = stepped
         LADDER_RETRIES.inc()
         if on_retry is not None:
             on_retry(config)
@@ -106,6 +152,7 @@ def run_with_capacity_retry(
     policy: OverflowPolicy = OverflowPolicy(),
     *,
     on_retry: Callable | None = None,
+    measured: Callable | None = None,
 ):
     """Initial attempt + capacity ladder. Returns (result, config, retries)."""
     result = run(config)
@@ -117,4 +164,5 @@ def run_with_capacity_retry(
                 f"sort overflowed even at capacity_factor={config.capacity_factor}"
             )
         return result, config, 0
-    return retry_overflowed(run, config, policy, last=result, on_retry=on_retry)
+    return retry_overflowed(run, config, policy, last=result,
+                            on_retry=on_retry, measured=measured)

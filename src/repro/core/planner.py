@@ -28,14 +28,17 @@ legacy numpy decode for differential testing.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import numpy as np
 
+from repro import tune as _tune
 from repro.core import keyenc, sample_sort, sim
 from repro.core.overflow import (
     OverflowPolicy,
     ladder_totals,
+    measured_capacity_need,
     run_with_capacity_retry,
 )
 from repro.core.result import SortMeta, SortOutput
@@ -160,11 +163,27 @@ class SortPlan:
     decode: str = "device"
     multikey: str | None = None  # "packed" | "lsd"; None for single-key
     packspec: Any = None         # keyenc.PackSpec when multikey == "packed"
+    cost_source: str = "static"  # "model" when an ambient repro.tune cost
+    #                              model (confidently) made the placement
+    cost_predicted: Any = None   # {backend: {"us", "confidence"}} — the
+    #                              model's per-candidate predictions, kept
+    #                              even when below the confidence bar
 
     def explain(self) -> str:
         lines = [f"repro.sort plan: backend={self.backend!r}"]
         for r in self.reasons:
             lines.append(f"  - {r}")
+        if self.cost_predicted:
+            lines.append(f"  cost: source={self.cost_source}")
+            for b in sorted(self.cost_predicted):
+                d = self.cost_predicted[b]
+                chosen = "  <- chosen" if (
+                    self.cost_source == "model" and b == self.backend
+                ) else ""
+                lines.append(
+                    f"    {b}: predicted {d['us']:.0f}us "
+                    f"(confidence {d['confidence']:.2f}){chosen}"
+                )
         if self.multikey is not None:
             detail = (f" ({self.packspec.describe()})"
                       if self.packspec is not None else "")
@@ -311,6 +330,8 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     mesh = None
     axis_name = "data"
     reasons: list[str] = []
+    cost_source = "static"
+    cost_predicted = None
 
     choice = None
     if where is not None:
@@ -326,16 +347,24 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     elif req.is_iterator:
         choice = "stream"
         reasons.append("iterator input: size unknown, not host-resident")
-    elif limits.stream_threshold is not None and req.n > limits.stream_threshold:
-        choice = "stream"
-        reasons.append(
-            f"n={req.n} exceeds stream_threshold={limits.stream_threshold}"
-        )
     else:
-        choice = "sim"
-        reasons.append(
-            f"n={req.n} fits one device program "
-            f"(stream_threshold={limits.stream_threshold})"
+        # size rule — the one placement an ambient cost model may
+        # override (pins and iterator inputs are constraints, not costs)
+        if (limits.stream_threshold is not None
+                and req.n > limits.stream_threshold):
+            static_choice = "stream"
+            static_reason = (
+                f"n={req.n} exceeds stream_threshold="
+                f"{limits.stream_threshold}"
+            )
+        else:
+            static_choice = "sim"
+            static_reason = (
+                f"n={req.n} fits one device program "
+                f"(stream_threshold={limits.stream_threshold})"
+            )
+        choice, cost_source, cost_predicted = _consult_cost_model(
+            req, static_choice, static_reason, reasons
         )
     if choice not in BACKENDS:
         raise KeyError(f"unknown backend {choice!r}; have {sorted(BACKENDS)}")
@@ -370,11 +399,88 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
             'decode="host": legacy numpy materialization (differential-'
             "testing / baseline path)"
         )
+    chunk_elems = limits.chunk_elems
+    if choice == "stream":
+        chunk_elems = _pick_chunk_elems(req, limits.chunk_elems, reasons)
     return SortPlan(
-        backend=choice, n_procs=n_procs, chunk_elems=limits.chunk_elems,
+        backend=choice, n_procs=n_procs, chunk_elems=chunk_elems,
         limits=limits, reasons=tuple(reasons), mesh=mesh, axis_name=axis_name,
         decode=limits.decode, multikey=multikey_decision, packspec=packspec,
+        cost_source=cost_source, cost_predicted=cost_predicted,
     )
+
+
+# the placements the size rule arbitrates between — mesh needs caller
+# topology and is never chosen on cost alone
+_COST_CANDIDATES = ("sim", "stream")
+
+
+def _consult_cost_model(req: _Req, static_choice: str, static_reason: str,
+                        reasons: list):
+    """Size-rule placement, possibly overridden by the ambient cost model.
+
+    Returns ``(choice, cost_source, cost_predicted)``. With no tuner
+    installed — or a cold/low-confidence store — the static choice and
+    its exact reason string come back untouched, so cold starts plan
+    bit-identically to the pre-tune library."""
+    tuner = _tune.current()
+    if tuner is None:
+        reasons.append(static_reason)
+        return static_choice, "static", None
+    winner, preds = tuner.model.choose(
+        "sort", _COST_CANDIDATES, str(req.dtype), req.n,
+        min_confidence=tuner.min_confidence,
+    )
+    predicted = {
+        b: {"us": p.us, "confidence": p.confidence}
+        for b, p in preds.items() if p is not None
+    } or None
+    if winner is None:
+        _tune.note_plan("static")
+        reasons.append(static_reason)
+        return static_choice, "static", predicted
+    _tune.note_plan("model")
+    costs = " ".join(
+        f"{b}~{preds[b].us:.0f}us" for b in sorted(preds)
+    )
+    if winner == static_choice:
+        reasons.append(
+            f"cost model confirms the static rule ({static_reason}): {costs}"
+        )
+    else:
+        reasons.append(
+            f"cost model overrides the static rule ({static_reason}): "
+            f"{costs} -> {winner} predicted fastest"
+        )
+    return winner, "model", predicted
+
+
+def _pick_chunk_elems(req: _Req, base: int, reasons: list) -> int:
+    """Stream chunk sizing from measured per-chunk sort cost.
+
+    Considers halving/doubling the configured chunk (clamped to
+    [2^12, 2^22]) and keeps the candidate with the best predicted
+    chunk-sort *throughput*; any candidate below the confidence bar
+    keeps the static size — resizing on a hunch would thrash the
+    compiled-program cache."""
+    tuner = _tune.current()
+    if tuner is None:
+        return base
+    dtype = str(req.dtype) if req.dtype is not None else "float32"
+    scored = []
+    for cand in sorted({max(1 << 12, base // 2), base,
+                        min(1 << 22, base * 2)}):
+        pred = tuner.model.predict("chunk_sort", "stream", dtype, cand)
+        if pred is None or pred.confidence < tuner.min_confidence:
+            return base
+        scored.append((cand / pred.us, cand))
+    best = max(scored)[1]
+    if best != base:
+        reasons.append(
+            f"cost model: chunk_elems {base} -> {best} "
+            f"(best predicted chunk-sort throughput)"
+        )
+    return best
 
 
 def _decide_multikey(req: _Req, limits: SortLimits, reasons: list):
@@ -612,6 +718,15 @@ def _grid_materialize(req: _Req, plan: SortPlan, keys_grid, values_grid,
     return materialize
 
 
+def _measured_hook(p: int, n_local: int):
+    """Measured-imbalance ladder start (``overflow.measured_capacity_need``)
+    for the sim/mesh retry loops — only when a tuner is ambient, so the
+    cold-start ladder walks exactly the pre-tune geometric steps."""
+    if _tune.current() is None:
+        return None
+    return measured_capacity_need(p, n_local)
+
+
 def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
     import jax.numpy as jnp
 
@@ -665,7 +780,8 @@ def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
             xk, xv, cfg, investigator=req.investigator
         )
     res, cfg_used, retries = run_with_capacity_retry(
-        run, req.config, plan.limits.policy()
+        run, req.config, plan.limits.policy(),
+        measured=_measured_hook(p, int(xk.shape[1])),
     )
 
     kg, vg = (res.values, None) if xv is None else (res.keys, res.values)
@@ -738,7 +854,8 @@ def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
             return res
 
     res, cfg_used, retries = run_with_capacity_retry(
-        run, req.config, plan.limits.policy()
+        run, req.config, plan.limits.policy(),
+        measured=_measured_hook(p, per),
     )
 
     kg, vg = (res.values, None) if xv is None else (res.keys, res.values)
@@ -897,6 +1014,30 @@ def _exec_packed_multikey(req: _Req, plan: SortPlan) -> SortOutput:
     # inside materialize() below must not freeze it prematurely
     out.meta.trace = None
     meta = _meta(req, plan, plan.backend, out.meta.config, out.meta.retries)
+    if out._chunks is not None and plan.decode == "device":
+        # stream keys-only: unpack each packed output chunk ON DEVICE
+        # (keyenc.unpack_chunk — the same fused field decode
+        # decode_grid runs for sim/mesh, compiled per (spec, pow2 len)),
+        # so packed multi-key results stream via .chunks() in bounded
+        # memory instead of host-unpacking at materialization
+        wrapper = SortOutput(
+            meta, overflowed=out.overflowed,
+            send_counts=out.send_counts, raw=out.raw,
+        )
+
+        def _unpacked_chunks():
+            for c in out.chunks():
+                yield keyenc.unpack_chunk(c, spec)
+            # the stream backend fills counts/retries lazily — sync them
+            # once the sub-stream is exhausted
+            wrapper.counts = out.counts
+            wrapper.overflowed = out.overflowed
+            meta.retries = out.meta.retries
+            meta.config = out.meta.config
+            meta.chunk_retries = out.meta.chunk_retries
+
+        wrapper._chunks = _unpacked_chunks()
+        return wrapper
     wrapper = SortOutput(
         meta, counts=out.counts, overflowed=out.overflowed,
         send_counts=out.send_counts, raw=out.raw, materialize=None,
@@ -1013,9 +1154,20 @@ def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
         if req.trace is not None:
             req.trace.materialized()  # empty result: nothing lazy left
         return out
+    t0 = time.perf_counter() if _tune.current() is not None else None
     if req.multikey:
-        return _exec_multikey(req, plan)
-    return BACKENDS[plan.backend].execute(req, plan)
+        out = _exec_multikey(req, plan)
+    else:
+        out = BACKENDS[plan.backend].execute(req, plan)
+    if t0 is not None:
+        if out._keys is not None:
+            # already materialized (LSD multi-key): the sort is complete
+            _tune.record_sort(out.meta, time.perf_counter() - t0)
+        else:
+            # lazy result: SortOutput records at materialization, giving
+            # the cost model the full dispatch->D2H wall time
+            out.meta.t_start = t0
+    return out
 
 
 def serve_profile(keys, values=None, *, order="asc", want="values",

@@ -13,6 +13,7 @@ shards for sim/mesh, None for stream) so the deprecation shims on
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Iterator
 
 import numpy as np
@@ -68,6 +69,10 @@ class SortMeta:
     coalesced: int | None = None
     multikey: str | None = None
     trace: Any = None
+    # dispatch timestamp (time.perf_counter) stamped by execute_request
+    # when a repro.tune tuner is ambient; materialization computes the
+    # wall time and feeds it back into the cost model, then clears it
+    t_start: float | None = None
 
 
 class SortOutput:
@@ -115,7 +120,12 @@ class SortOutput:
             )
         elif self._chunks is not None:
             parts = list(self.chunks())
-            if parts:
+            if parts and isinstance(parts[0], tuple):
+                # packed multi-key stream: chunks are column tuples
+                self._keys = tuple(
+                    np.concatenate(cols) for cols in zip(*parts)
+                )
+            elif parts:
                 self._keys = np.concatenate(parts)
             else:
                 # meta.dtype is the planned dtype, threaded at plan time;
@@ -132,6 +142,19 @@ class SortOutput:
             # materialization completes the sort: publish the phase spans
             # and (for per-sort traces) freeze — immutable from here on
             self.meta.trace.materialized()
+        self._record_tune()
+
+    def _record_tune(self) -> None:
+        """Feed the completed sort's wall time (dispatch -> materialized)
+        into the ambient cost model; runs at most once per output, and
+        only when ``execute_request`` stamped a start time (i.e. a
+        ``repro.tune`` tuner was installed at dispatch)."""
+        if self.meta.t_start is None:
+            return
+        t0, self.meta.t_start = self.meta.t_start, None
+        from repro import tune as _tune
+
+        _tune.record_sort(self.meta, time.perf_counter() - t0)
 
     @property
     def keys(self):
@@ -156,7 +179,9 @@ class SortOutput:
         """Stream backend only: yield sorted chunks in bounded memory
         (single use — consuming it is the materialization). Keys-only
         results stream in both orders: descending chunks are flip-decoded
-        on device per chunk under the default ``decode="device"`` plan."""
+        on device per chunk under the default ``decode="device"`` plan,
+        and packed multi-key results yield per-chunk COLUMN TUPLES
+        (each chunk device-unpacked via ``keyenc.unpack_chunk``)."""
         if self._chunks is None:
             if self._chunks_consumed:
                 raise ValueError("chunks() was already consumed (single use)")
@@ -165,9 +190,8 @@ class SortOutput:
                     "this stream result does not stream: kv/argsort "
                     "results materialize on host (the value gather is "
                     "not bounded-memory), as do packed multi-key tuples "
-                    "(the columns unpack at materialization) and "
-                    'descending results under the legacy decode="host" '
-                    "plan — use .keys/.values"
+                    'and descending results under the legacy decode='
+                    '"host" plan — use .keys/.values'
                 )
             raise ValueError(
                 f"chunks() is only available on the stream backend "
@@ -177,7 +201,8 @@ class SortOutput:
         self._chunks_consumed = True
         sizes = []
         for c in gen:
-            sizes.append(c.shape[0])
+            # packed multi-key stream chunks are column tuples
+            sizes.append(c[0].shape[0] if isinstance(c, tuple) else c.shape[0])
             yield c
         if self.counts is None:
             self.counts = np.asarray(sizes, np.int64)
@@ -186,6 +211,7 @@ class SortOutput:
         if self.meta.trace is not None:
             # consuming the chunk stream IS the materialization
             self.meta.trace.materialized()
+        self._record_tune()
 
     def order(self) -> np.ndarray:
         """The sorting permutation (``want="order"`` results)."""

@@ -61,6 +61,7 @@ from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
 from repro.obs import metrics as obs_metrics
 from repro.stream.service import FlushEngine
+from repro.tune.adapt import AdaptConfig, AdaptiveController
 
 # Process-wide serve metrics (see repro.obs): every SortServer instance
 # publishes into these families, mirroring the per-instance stats()
@@ -158,6 +159,16 @@ class SortServer:
       the flush loop would head-of-line block every coalescable bucket
       past its deadline, so direct requests run on this small pool while
       the loop keeps servicing slot/deadline targets.
+    adapt: optional ``repro.tune.AdaptConfig`` (or a pre-built
+      ``AdaptiveController``) enabling closed-loop tuning of
+      ``max_delay_ms``/``max_batch`` against the config's p99 objective:
+      the flush loop periodically evaluates the live latency window and
+      moves the knobs within the config's hard bounds (hysteresis +
+      patience keep them from flapping; see ``repro.tune.adapt``).
+      ``stats()`` then reports the live values plus an ``adaptations``
+      count, and the ``repro_tune_serve_*`` gauges track them in the
+      metrics registry. Default None: the static knobs are used
+      unchanged, bit-identical to the pre-tune server.
 
     The server starts its flush thread on construction; use it as a
     context manager (or call ``close()``) to drain and stop it.
@@ -166,13 +177,29 @@ class SortServer:
     def __init__(self, *, max_batch: int = 16, max_delay_ms: float = 5.0,
                  max_queue: int = 1024, limits=None,
                  config: SortConfig | None = None, investigator: bool = True,
-                 direct_workers: int = 2, latency_window: int = 2048):
+                 direct_workers: int = 2, latency_window: int = 2048,
+                 adapt: AdaptConfig | AdaptiveController | None = None):
         self.max_batch = int(max_batch)
         self.max_delay = float(max_delay_ms) / 1e3
         self.max_queue = int(max_queue)
         self.limits = limits if limits is not None else planner.SortLimits()
         self.config = config if config is not None else SortConfig()
         self.investigator = investigator
+        self._adapt = None
+        self._adapt_last = 0.0
+        self._adapt_seen = 0
+        engine_batch = self.max_batch
+        if adapt is not None:
+            ctrl = (adapt if isinstance(adapt, AdaptiveController)
+                    else AdaptiveController(adapt, delay_ms=max_delay_ms,
+                                            batch=max_batch))
+            self._adapt = ctrl
+            # start from the controller's (bounds-clamped) view
+            self.max_delay = ctrl.delay_ms / 1e3
+            self.max_batch = ctrl.batch
+            # the engine's vmapped-batch cap must cover the controller's
+            # whole range, or growing max_batch would silently slice
+            engine_batch = max(engine_batch, ctrl.config.max_batch)
         self._stats = {
             "submitted": 0, "completed": 0, "failed": 0, "cancelled": 0,
             "rejected": 0, "flushes": 0, "flushed_requests": 0,
@@ -184,7 +211,7 @@ class SortServer:
             investigator=self.investigator,
             max_doublings=self.limits.max_doublings,
             growth=self.limits.growth,
-            max_batch=self.max_batch, stats=self._stats,
+            max_batch=engine_batch, stats=self._stats,
             # the direct-dispatch workers add to stats["retries"] under
             # this same lock; sharing it keeps the counter exact
             stats_lock=self._cond,
@@ -362,6 +389,15 @@ class SortServer:
             execute_ms_p50=_pct(exec_ms, 50),
             execute_ms_p99=_pct(exec_ms, 99),
         )
+        if self._adapt is not None:
+            # live knob values + controller activity (stats() gains these
+            # keys only on adaptive servers: static snapshots unchanged)
+            s.update(
+                adaptive=True,
+                max_delay_ms=self.max_delay * 1e3,
+                max_batch=self.max_batch,
+                adaptations=self._adapt.adjustments,
+            )
         return s
 
     def close(self, timeout: float | None = None) -> None:
@@ -432,6 +468,37 @@ class SortServer:
                 _M_QUEUE_DEPTH.set(self._depth)
             for key, pends in work:
                 self._flush_group(key, pends)
+            self._maybe_adapt()
+
+    def _maybe_adapt(self) -> None:
+        """Adaptive-serve evaluation point, called from the flush loop
+        between dispatch rounds: feed the controller the p99 of the
+        latency samples completed since the previous evaluation and
+        apply whatever knob values it settles on. No-op without
+        ``adapt=``, and paced by the config's interval/min-sample gates
+        so the controller reacts to windows, not to single requests."""
+        ctrl = self._adapt
+        if ctrl is None:
+            return
+        now = time.monotonic()
+        if now - self._adapt_last < ctrl.config.interval_s:
+            return
+        with self._cond:
+            completed = self._stats["completed"]
+            fresh = completed - self._adapt_seen
+            if fresh <= 0:
+                return
+            recent = list(self._lat)[-min(fresh, len(self._lat)):]
+            depth = self._depth
+        self._adapt_last = now
+        self._adapt_seen = completed
+        if not recent:
+            return
+        p99 = float(np.percentile(np.asarray(recent, np.float64) * 1e3, 99))
+        if ctrl.update(p99, completed=fresh, queue_depth=depth):
+            with self._cond:
+                self.max_delay = ctrl.delay_ms / 1e3
+                self.max_batch = ctrl.batch
 
     # --------------------------------------------------------- execution
     def _flush_group(self, key: tuple, pends: list[_Pending]) -> None:

@@ -14,10 +14,12 @@ legacy reverse-at-materialization path, it streams.
 """
 from __future__ import annotations
 
+import time
 from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro import tune as _tune
 from repro.obs.tracing import maybe_span as _span
 from repro.stream.external_merge import external_merge, external_merge_kv
 from repro.stream.partition import Partition, partition_runs
@@ -38,10 +40,18 @@ def _pipeline(
     for pass 2 (per-bucket sizes); pass-3 ``merge`` spans are recorded
     per bucket by ``external_merge``."""
     with _span(trace, "local_sort") as sp:
+        t0 = time.perf_counter()
         runs = generate_runs(data, cfg, values, investigator=investigator,
                              descending=descending)
+        dt = time.perf_counter() - t0
         sp.counts([len(r) for r in runs])
         sp.set(chunk_retries=sum(r.retries for r in runs))
+    tuner = _tune.current()
+    if tuner is not None and runs:
+        # per-chunk sort cost (stage + in-core sort, amortized over the
+        # pass) feeds the model's chunk_elems sizing in core.planner
+        tuner.observe("chunk_sort", "stream", str(runs[0].keys.dtype),
+                      cfg.chunk_elems, dt / len(runs) * 1e6)
     if stats is not None:
         stats["chunk_retries"] = [r.retries for r in runs]
     if not runs:

@@ -158,6 +158,8 @@ def generate_runs(
         # steady-state inputs converge to one program
         retries = 0
         if bool(res.overflowed):
+            from repro import tune as _tune
+
             res, sort_cfg, retries = overflow.retry_overflowed(
                 lambda c: dispatch(dev_k, dev_v, c),
                 sort_cfg,
@@ -165,6 +167,11 @@ def generate_runs(
                     max_doublings=cfg.max_doublings, growth=cfg.growth
                 ),
                 last=res,
+                # with a tuner ambient the chunk ladder starts from the
+                # capacity its own send_counts measured (see
+                # overflow.measured_capacity_need); cold path unchanged
+                measured=(overflow.measured_capacity_need(p, per)
+                          if _tune.current() is not None else None),
             )
         if dev_v is None:
             return Run(_unpad(res.values, res.counts, m), retries=retries)

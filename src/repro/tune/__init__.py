@@ -1,0 +1,176 @@
+"""repro.tune — empirical cost model + adaptive control plane.
+
+PRs 1–6 built the mechanisms (sim/mesh/stream backends, the overflow
+ladder, the coalescing serve tier); this package replaces their static
+steering guesses with measurements:
+
+* :mod:`~repro.tune.store` — persisted per-(op, size, dtype, backend)
+  cost observations (JSON, schema-versioned), seeded from
+  ``BENCH_*.json`` history and updated online from ``SortOutput``
+  timings.
+* :mod:`~repro.tune.model` — log-log interpolated cost curves with
+  confidence; the planner consults them at dispatch time.
+* :mod:`~repro.tune.adapt` — the serve-side feedback controller that
+  auto-tunes ``SortServer`` flush parameters against a p99 objective.
+
+Nothing here activates by itself. The planner, the overflow ladder and
+the result-side recorder all ask :func:`current` for the ambient
+:class:`Tuner` and do exactly what they did before when it is ``None``
+(the default) — or when it is present but its store is cold or
+low-confidence. ``repro.tune.configure()`` installs a tuner backed by a
+store file (creating a cold one if the file is absent or damaged);
+:func:`active` scopes one to a ``with`` block for tests.
+
+Layering: this package depends only on numpy/stdlib plus
+``repro.obs.metrics`` (itself dependency-free), so ``core.planner`` can
+import it without cycles.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+
+from ..obs import metrics as _metrics
+from .adapt import AdaptConfig, AdaptiveController
+from .model import MIN_CONFIDENCE, MODEL_VERSION, CostModel, Prediction
+from .store import SCHEMA_VERSION, TuneStore, TuneStoreError
+
+__all__ = [
+    "AdaptConfig", "AdaptiveController", "CostModel", "Prediction",
+    "TuneStore", "TuneStoreError", "Tuner", "COST_MODEL_VERSION",
+    "DEFAULT_STORE_PATH", "active", "configure", "current", "disable",
+    "record_sort",
+]
+
+# stamped onto benchmark records (benchmarks/common.py) so BENCH history
+# states which store schema + model produced/consumed it
+COST_MODEL_VERSION = f"tune-{SCHEMA_VERSION}.{MODEL_VERSION}"
+
+DEFAULT_STORE_PATH = os.environ.get("REPRO_TUNE_STORE", ".repro_tune.json")
+
+_C_OBSERVATIONS = _metrics.counter(
+    "repro_tune_observations_total",
+    "Cost observations recorded into the tune store, by op.",
+    labels=("op",),
+)
+_C_PLANS = _metrics.counter(
+    "repro_tune_plans_total",
+    "Planner decisions while a tuner was active, by cost source.",
+    labels=("source",),  # model|static
+)
+
+
+class Tuner:
+    """An installed store + model pair, plus its runtime knobs.
+
+    min_confidence: the bar every candidate's prediction must clear
+      before the planner acts on the model instead of the static rules.
+    autosave_every: persist the store back to ``path`` every N
+      observations (0 disables; explicit ``save()`` always works).
+    """
+
+    def __init__(self, store: TuneStore | None = None, *,
+                 path: str | None = None,
+                 min_confidence: float = MIN_CONFIDENCE,
+                 autosave_every: int = 0):
+        self.store = store if store is not None else TuneStore()
+        self.model = CostModel(self.store)
+        self.path = path
+        self.min_confidence = float(min_confidence)
+        self.autosave_every = int(autosave_every)
+        self._lock = threading.Lock()
+        self._since_save = 0
+
+    def observe(self, op: str, backend: str, dtype, n: int, us: float) -> None:
+        with self._lock:
+            self.store.observe(op, backend, dtype, n, us)
+            self._since_save += 1
+            flush = (self.autosave_every and self.path
+                     and self._since_save >= self.autosave_every)
+            if flush:
+                self._since_save = 0
+        _C_OBSERVATIONS.labels(op=op).inc()
+        if flush:
+            try:
+                self.store.save(self.path)
+            except OSError:
+                pass  # an unwritable store path must never fail a sort
+
+    def save(self, path: str | None = None) -> str:
+        p = path or self.path or DEFAULT_STORE_PATH
+        self.store.save(p)
+        return p
+
+
+_ambient: Tuner | None = None
+_ambient_lock = threading.Lock()
+
+
+def current() -> Tuner | None:
+    """The ambient tuner, or None — the everything-static default."""
+    return _ambient
+
+
+def install(tuner: Tuner | None) -> Tuner | None:
+    """Install (or with None, remove) the ambient tuner; returns it."""
+    global _ambient
+    with _ambient_lock:
+        _ambient = tuner
+    return tuner
+
+
+def disable() -> None:
+    install(None)
+
+
+def configure(path: str = DEFAULT_STORE_PATH, *, bench=(),
+              min_confidence: float = MIN_CONFIDENCE,
+              autosave_every: int = 0) -> Tuner:
+    """Install a tuner backed by the store file at ``path``.
+
+    A missing or damaged file yields a cold store (static behavior until
+    observations accumulate) — never an error. ``bench`` optionally
+    names BENCH_*.json files whose records seed the store on first load
+    (ignored when unreadable: history is a bonus, not a dependency).
+    """
+    import json
+
+    store, _ = TuneStore.load_or_cold(path)
+    if len(store) == 0:
+        for b in bench:
+            try:
+                with open(b) as f:
+                    store.ingest_bench(json.load(f))
+            except (OSError, ValueError):
+                continue
+    return install(Tuner(store, path=path, min_confidence=min_confidence,
+                         autosave_every=autosave_every))
+
+
+@contextlib.contextmanager
+def active(store_or_tuner):
+    """Scope a tuner (or a bare TuneStore) as the ambient one."""
+    tuner = (store_or_tuner if isinstance(store_or_tuner, Tuner)
+             else Tuner(store_or_tuner))
+    prev = _ambient
+    install(tuner)
+    try:
+        yield tuner
+    finally:
+        install(prev)
+
+
+def note_plan(source: str) -> None:
+    """Planner hook: count one dispatch decision by cost source."""
+    _C_PLANS.labels(source=source).inc()
+
+
+def record_sort(meta, elapsed_s: float) -> None:
+    """Result hook: feed one completed top-level sort's wall time back
+    into the ambient store (no-op when no tuner is installed)."""
+    tuner = _ambient
+    if tuner is None or not meta.n:
+        return
+    tuner.observe("sort", meta.backend, str(meta.dtype), int(meta.n),
+                  elapsed_s * 1e6)

@@ -31,6 +31,7 @@ def current_schema() -> list[dict]:
     import repro.obs.tracing      # repro_sort_phase_seconds
     import repro.serve.sortd      # sortd_*
     import repro.stream.service   # repro_program_cache_*
+    import repro.tune             # repro_tune_*
 
     from repro.obs import metrics
     # repro_test_* names are scratch metrics the test suite registers in

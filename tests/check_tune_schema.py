@@ -1,0 +1,98 @@
+"""CI tune-store schema stability check.
+
+The on-disk tune store (``repro.tune.TuneStore``) outlives any one
+process: a store calibrated today must load in next month's build, and
+``run.py --calibrate`` appends to whatever file is already there. Its
+JSON shape — schema version, top-level fields, the per-(op, backend,
+dtype) key format, the per-bin field names, the binning resolution — is
+therefore a persistence contract, not an implementation detail. This
+check snapshots that shape from a canonical in-memory store and diffs
+it against the checked-in ``tests/tune_schema.json``.
+
+    PYTHONPATH=src python tests/check_tune_schema.py            # check
+    PYTHONPATH=src python tests/check_tune_schema.py --update   # regen
+
+A deliberate format change must bump ``store.SCHEMA_VERSION`` (old
+files then reject cleanly at load and recalibrate from cold) AND
+regenerate this schema file with ``--update`` — the failure message
+exists to make that a reviewed decision, not an accident. Also
+collected by pytest (``test_tune_schema_stable``).
+"""
+import json
+import pathlib
+import sys
+
+SCHEMA_PATH = pathlib.Path(__file__).parent / "tune_schema.json"
+
+
+def current_schema() -> dict:
+    """Serialize a canonical one-observation store and describe its
+    shape (field names and formats, not values)."""
+    from repro.tune import store as store_mod
+    from repro.tune import COST_MODEL_VERSION, TuneStore
+
+    store = TuneStore()
+    store.observe("sort", "sim", "float32", 4096, 100.0)
+    doc = store.to_json()
+    (key, bins), = doc["keys"].items()
+    (_, fields), = bins.items()
+    return {
+        "schema_version": doc["schema"],
+        "cost_model_version": COST_MODEL_VERSION,
+        "top_level_fields": sorted(doc),
+        "key_separator": "|",
+        "key_parts": ["op", "backend", "dtype"],
+        "canonical_key": key,
+        "bin_fields": sorted(fields),
+        "bins_per_octave": store_mod.BINS_PER_OCTAVE,
+    }
+
+
+def diff(expected: dict, got: dict) -> list[str]:
+    lines = []
+    for field in sorted(set(expected) | set(got)):
+        if expected.get(field) != got.get(field):
+            lines.append(
+                f"  {field}: {expected.get(field)!r} -> {got.get(field)!r}"
+            )
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    got = current_schema()
+    if "--update" in argv:
+        SCHEMA_PATH.write_text(json.dumps(got, indent=1) + "\n")
+        print(f"wrote {SCHEMA_PATH}")
+        return 0
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, got)
+    if lines:
+        print("tune-store schema drifted from tests/tune_schema.json:",
+              file=sys.stderr)
+        print("\n".join(lines), file=sys.stderr)
+        print(
+            "\nThe store format is a persistence contract (calibrated "
+            "stores outlive builds) — a deliberate change must bump "
+            "repro.tune.store.SCHEMA_VERSION and regenerate:\n"
+            "  PYTHONPATH=src python tests/check_tune_schema.py --update\n"
+            "and commit the regenerated file with this change.",
+            file=sys.stderr,
+        )
+        return 1
+    print("tune-store schema stable")
+    return 0
+
+
+def test_tune_schema_stable():
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, current_schema())
+    assert not lines, (
+        "tune-store schema drifted (format changes must bump "
+        "SCHEMA_VERSION and update tests/tune_schema.json deliberately — "
+        "run `python tests/check_tune_schema.py --update`):\n"
+        + "\n".join(lines)
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,248 @@
+"""repro.tune — empirical cost model + adaptive control plane.
+
+Covers the subsystem's contract surface:
+
+* TuneStore persistence: round-trip fidelity, strict rejection of
+  corrupt/old-schema files (``TuneStoreError``), and the runtime
+  ``load_or_cold`` degradation (an empty store + reason, never a crash);
+* cold-start bit-identity: an EMPTY ambient store must leave the
+  planner's choices — backend, reason strings, chunk sizing — exactly
+  as with no tuner installed (``cost_source == "static"``);
+* calibrated dispatch: a store seeded with a clear sim/stream crossover
+  must flip the static rule (``cost_source == "model"``) and surface
+  its predictions through ``SortPlan.explain()``;
+* the measured overflow ladder: with a tuner ambient, the first retry
+  jumps straight to the capacity the overflow's own send_counts
+  measured, cutting the geometric ladder walk (same traffic — the
+  splitters don't depend on capacity — so the jump is exact);
+* the adaptive serve controller: convergence toward the p99 target on
+  a synthetic plant, hard bounds, deadband hysteresis, and the
+  ``SortServer(adapt=...)`` stats surface.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import tune
+from repro.tune import (AdaptConfig, AdaptiveController, CostModel,
+                        TuneStore, TuneStoreError)
+
+CFG = repro.SortConfig(use_pallas=False)
+
+
+# ----------------------------------------------------------- store
+
+
+def _seeded_store():
+    store = TuneStore()
+    for n in (1 << 12, 1 << 14, 1 << 16):
+        store.observe("sort", "sim", "float32", n, 100.0 * n / (1 << 12),
+                      weight=2.0)
+        store.observe("sort", "stream", "float32", n, 150.0, weight=2.0)
+    return store
+
+
+def test_store_round_trip(tmp_path):
+    store = _seeded_store()
+    path = str(tmp_path / "tune.json")
+    store.save(path)
+    loaded = TuneStore.load(path)
+    assert loaded.total_count == store.total_count
+    for backend in ("sim", "stream"):
+        assert (loaded.samples("sort", backend, "float32")
+                == store.samples("sort", backend, "float32"))
+
+
+def test_store_rejects_corrupt_and_old_schema(tmp_path):
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json")
+    with pytest.raises(TuneStoreError):
+        TuneStore.load(str(corrupt))
+
+    old = tmp_path / "old.json"
+    old.write_text(json.dumps({"schema": 0, "keys": {}}))
+    with pytest.raises(TuneStoreError):
+        TuneStore.load(str(old))
+
+    # the runtime path degrades to a cold store, never raises
+    for path in (corrupt, old, tmp_path / "missing.json"):
+        store, reason = TuneStore.load_or_cold(str(path))
+        assert len(store) == 0 and reason.startswith("cold")
+    store, reason = TuneStore.load_or_cold(str(tmp_path / "tune.json"))
+    assert reason.startswith("cold")
+
+
+def test_tune_schema_stable():
+    # the persistence-contract check (tests/check_tune_schema.py) also
+    # runs as a CI step; collecting it here keeps tier-1 self-contained
+    import check_tune_schema
+
+    check_tune_schema.test_tune_schema_stable()
+
+
+def test_ingest_bench_filters_records():
+    store = TuneStore()
+    n = store.ingest_bench({"records": [
+        {"tune_op": "sort", "backend": "sim", "size": 4096,
+         "dtype": "float32", "us_per_call": 120.0},
+        {"op": "api_sort_stream_float32_262144", "backend": "stream",
+         "size": 262144, "dtype": "float32", "us_per_call": 9000.0},
+        # gate ratios / aggregates have no single-sort cost: skipped
+        {"op": "serve_async_batched", "backend": "sim", "size": 1024,
+         "dtype": "float32", "us_per_call": 5.0},
+        {"tune_op": "sort", "backend": "sim"},  # missing fields
+    ]})
+    assert n == 2
+    assert store.total_count == 2
+
+
+# ------------------------------------------------- planner dispatch
+
+
+def _plan(x, **limits_kw):
+    limits = repro.SortLimits(chunk_elems=1 << 12, n_procs=4, **limits_kw)
+    return repro.sort(x, limits=limits, config=CFG).meta.plan
+
+
+def test_cold_store_plans_bit_identical():
+    rng = np.random.default_rng(0)
+    for n in (1 << 10, 1 << 15):
+        x = rng.normal(0, 1, n).astype(np.float32)
+        bare = _plan(x, stream_threshold=1 << 14)
+        with tune.active(TuneStore()):
+            cold = _plan(x, stream_threshold=1 << 14)
+        assert cold.backend == bare.backend
+        assert cold.reasons == bare.reasons
+        assert cold.chunk_elems == bare.chunk_elems
+        assert bare.cost_source == cold.cost_source == "static"
+        assert not cold.cost_predicted
+
+
+def test_calibrated_store_flips_dispatch_and_explains():
+    # seeded curves: sim cost grows linearly, stream flat — by 2^14 the
+    # model must override the static "small input -> sim" rule
+    x = np.random.default_rng(1).normal(0, 1, 1 << 14).astype(np.float32)
+    with tune.active(_seeded_store()):
+        plan = _plan(x, stream_threshold=1 << 20)
+        assert plan.cost_source == "model"
+        assert plan.backend == "stream"
+        assert any("overrides the static rule" in r for r in plan.reasons)
+        text = plan.explain()
+    assert "cost: source=model" in text
+    assert "<- chosen" in text
+    # confirmation case: at tiny n the model agrees with the static rule
+    y = x[: 1 << 12]
+    with tune.active(_seeded_store()):
+        plan = _plan(y, stream_threshold=1 << 20)
+    assert plan.cost_source == "model" and plan.backend == "sim"
+    assert any("confirms the static rule" in r for r in plan.reasons)
+
+
+def test_cost_model_confidence_gates_cold_choice():
+    model = CostModel(TuneStore())
+    winner, preds = model.choose("sort", ("sim", "stream"), "float32", 4096)
+    assert winner is None
+    assert preds == {"sim": None, "stream": None}
+    # one lone observation is below MIN_COUNT: still no winner
+    store = TuneStore()
+    store.observe("sort", "sim", "float32", 4096, 100.0)
+    winner, _ = CostModel(store).choose(
+        "sort", ("sim", "stream"), "float32", 4096)
+    assert winner is None
+
+
+def test_measured_ladder_cuts_retries():
+    # 2^14 uniform ints at capacity_factor=0.15: the static geometric
+    # ladder needs 3 doublings to fit; the measured jump reads the
+    # needed capacity off the first overflow's send_counts and lands in
+    # ONE retry. Same splitters + data => identical traffic, so the
+    # sorted output must be np-exact either way.
+    x = np.random.default_rng(7).integers(0, 1 << 14, 1 << 14).astype(np.int32)
+    cfg = repro.SortConfig(use_pallas=False, capacity_factor=0.15)
+    limits = repro.SortLimits(n_procs=8)
+
+    out_static = repro.sort(x, where="sim", limits=limits, config=cfg)
+    with tune.active(TuneStore()):
+        out_measured = repro.sort(x, where="sim", limits=limits, config=cfg)
+    np.testing.assert_array_equal(out_static.keys, np.sort(x))
+    np.testing.assert_array_equal(out_measured.keys, np.sort(x))
+    assert out_static.meta.retries > 1
+    assert out_measured.meta.retries == 1
+    assert out_measured.meta.retries < out_static.meta.retries
+
+
+def test_online_recording_feeds_store():
+    x = np.random.default_rng(2).normal(0, 1, 1 << 12).astype(np.float32)
+    store = TuneStore()
+    with tune.active(store):
+        _ = repro.sort(x, where="sim", config=CFG).keys
+    assert store.total_count >= 1
+    assert store.samples("sort", "sim", "float32")
+
+
+# ------------------------------------------------- adaptive control
+
+
+def test_controller_converges_within_bounds():
+    cfg = AdaptConfig(target_p99_ms=5.0, min_delay_ms=0.5, max_delay_ms=50.0,
+                      min_batch=4, max_batch=64, patience=1, min_samples=1)
+    ctrl = AdaptiveController(cfg, delay_ms=50.0, batch=64)
+    # synthetic plant: p99 is a fixed 2ms of work plus the flush delay
+    for _ in range(40):
+        ctrl.update(2.0 + ctrl.delay_ms, completed=32)
+    assert cfg.min_delay_ms <= ctrl.delay_ms <= cfg.max_delay_ms
+    assert cfg.min_batch <= ctrl.batch <= cfg.max_batch
+    p99 = 2.0 + ctrl.delay_ms
+    assert p99 <= cfg.target_p99_ms * (1 + cfg.deadband) + 1e-9
+    assert ctrl.adjustments >= 1
+
+
+def test_controller_deadband_hysteresis():
+    cfg = AdaptConfig(target_p99_ms=10.0, patience=1, min_samples=1)
+    ctrl = AdaptiveController(cfg, delay_ms=5.0, batch=16)
+    # in-band p99s must never move the knobs (no flapping)
+    for p99 in (9.0, 10.0, 11.0, 8.5, 11.5):
+        assert not ctrl.update(p99, completed=32)
+    assert ctrl.adjustments == 0
+    # patience: a single out-of-band window is not enough either
+    cfg2 = AdaptConfig(target_p99_ms=10.0, patience=2, min_samples=1)
+    ctrl2 = AdaptiveController(cfg2, delay_ms=5.0, batch=16)
+    assert not ctrl2.update(30.0, completed=32)
+    assert ctrl2.update(30.0, completed=32)  # second strike adjusts
+    assert ctrl2.delay_ms < 5.0
+
+
+def test_controller_ignores_thin_windows():
+    cfg = AdaptConfig(target_p99_ms=10.0, patience=1, min_samples=8,
+                      min_batch=4)
+    ctrl = AdaptiveController(cfg, delay_ms=5.0, batch=16)
+    assert not ctrl.update(100.0, completed=2, queue_depth=0)
+    assert ctrl.adjustments == 0
+    # ...unless there is real queued traffic behind the thin window
+    assert ctrl.update(100.0, completed=2, queue_depth=cfg.min_batch)
+
+
+def test_server_adapt_stats_surface():
+    from repro.serve import SortServer
+
+    x = np.random.default_rng(3).normal(0, 1, 128).astype(np.float32)
+    cfg = AdaptConfig(target_p99_ms=5.0, min_delay_ms=0.5, max_delay_ms=20.0,
+                      min_batch=1, max_batch=16)
+    with SortServer(max_batch=8, max_delay_ms=2.0, config=CFG,
+                    limits=repro.SortLimits(n_procs=4), adapt=cfg) as server:
+        outs = server.sort_many_async([x] * 4)
+        for o in outs:
+            np.testing.assert_array_equal(o.keys, np.sort(x))
+        stats = server.stats()
+    assert stats["adaptive"] is True
+    assert cfg.min_delay_ms <= stats["max_delay_ms"] <= cfg.max_delay_ms
+    assert cfg.min_batch <= stats["max_batch"] <= cfg.max_batch
+    assert stats["adaptations"] >= 0
+
+    # static servers must not grow the adaptive keys
+    with SortServer(max_batch=8, max_delay_ms=2.0, config=CFG,
+                    limits=repro.SortLimits(n_procs=4)) as server:
+        _ = server.sort_many_async([x])
+        assert "adaptive" not in server.stats()
