@@ -7,6 +7,15 @@ across PRs.
     PYTHONPATH=src python -m benchmarks.run [--suite paper|external|api|serve|all]
                                             [--only fig5,...] [--out-dir .]
                                             [--calibrate] [--tune-store PATH]
+                                            [--check-regression]
+                                            [--baseline-dir D] [--tolerance T]
+
+``--check-regression`` compares each suite's fresh records against the
+baseline ``BENCH_<suite>.json`` in ``--baseline-dir`` (loaded before the
+fresh file can clobber it) via ``repro.obsctl.compare_bench`` and exits
+nonzero when a gated op slowed beyond its tolerance — the perf analog of
+the tier-1 test gate. ``python -m repro.obsctl bench-diff A B`` runs the
+same comparison standalone between any two BENCH files.
 
 The serve suite honors REPRO_SERVE_SMOKE=1 and the api suite
 REPRO_API_SMOKE=1 (tiny sizes, correctness-only gates — the CI profile;
@@ -48,6 +57,17 @@ def main() -> None:
     ap.add_argument("--tune-store", default=None,
                     help="tune-store path for --calibrate (default: "
                          "repro.tune.DEFAULT_STORE_PATH)")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="after writing BENCH_<suite>.json, compare each "
+                         "suite's gated ops against the baseline file in "
+                         "--baseline-dir (repro.obsctl.compare_bench); "
+                         "exit nonzero on regressions beyond tolerance")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="where baseline BENCH_<suite>.json files live "
+                         "(typically the repo root's committed copies)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override every regression gate's tolerance "
+                         "(default: per-op repro.obsctl.REGRESSION_GATES)")
     args = ap.parse_args()
 
     from benchmarks import (api_bench, common, external_sort, ours,
@@ -83,13 +103,29 @@ def main() -> None:
             "serve_latency": serve_bench.serve_latency,
             "serve_pad_retries": serve_bench.serve_pad_retries,
             "serve_adaptive": serve_bench.serve_adaptive,
+            "serve_flight": serve_bench.serve_flight,
         },
     }
     selected = list(suites) if args.suite == "all" else [args.suite]
     only = set(args.only.split(",")) if args.only else None
+
+    # snapshot baselines up front: --out-dir may equal --baseline-dir,
+    # in which case writing the fresh file below would clobber them
+    baselines = {}
+    if args.check_regression:
+        for suite_name in selected:
+            base_path = f"{args.baseline_dir}/BENCH_{suite_name}.json"
+            try:
+                with open(base_path) as f:
+                    baselines[suite_name] = json.load(f)["records"]
+            except (OSError, ValueError, KeyError):
+                print(f"no baseline at {base_path}; skipping regression "
+                      f"check for suite {suite_name!r}", file=sys.stderr)
+
     print("name,us_per_call,derived")
     failed = []
     calibration = []
+    regressed = []
     for suite_name in selected:
         common.drain_records()
         for name, fn in suites[suite_name].items():
@@ -107,6 +143,17 @@ def main() -> None:
             with open(path, "w") as f:
                 json.dump({"suite": suite_name, "records": records}, f, indent=1)
             print(f"wrote {path} ({len(records)} records)", file=sys.stderr)
+        if suite_name in baselines:
+            from repro.obsctl import REGRESSION_GATES, compare_bench
+
+            gates = REGRESSION_GATES
+            if args.tolerance is not None:
+                gates = {op: args.tolerance for op in gates}
+            lines, regs = compare_bench(baselines[suite_name], records,
+                                        gates=gates)
+            print(f"--- regression check: {suite_name} ---", file=sys.stderr)
+            print("\n".join(lines), file=sys.stderr)
+            regressed.extend(regs)
     if args.calibrate:
         from repro import tune
 
@@ -118,8 +165,11 @@ def main() -> None:
         store.save(store_path)
         print(f"calibrated {store_path}: +{n} records, "
               f"{store.total_count} observations total", file=sys.stderr)
+    if regressed:
+        print(f"REGRESSED: {[r['op'] for r in regressed]}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
+    if failed or regressed:
         sys.exit(1)
 
 

@@ -7,7 +7,10 @@ Gates (the serve-suite acceptance criteria):
   * async throughput >= 2x sequential, at mean batch occupancy >= 4;
   * a lone request resolves within 2x ``max_delay_ms``;
   * an ``adapt=`` server matches/beats a mis-tuned static server's p99
-    under the same closed-loop load (``serve_adaptive``).
+    under the same closed-loop load (``serve_adaptive``);
+  * the always-on flight recorder costs <2% on coalesced throughput and
+    induced incidents dump schema-valid snapshots (``serve_flight``;
+    ``REPRO_FLIGHT_SMOKE=1`` keeps the snapshot asserts only).
 
 Both use ``common.gate_ratio``/``gate_us`` (interleaved median-of-N with
 warmup) — the de-flaked gate estimators. ``REPRO_SERVE_SMOKE=1`` (the CI
@@ -268,6 +271,100 @@ def serve_adaptive():
         assert p99_adapt <= 1.1 * p99_static, (
             f"adaptive p99 {p99_adapt:.1f}ms > 1.1x static {p99_static:.1f}ms"
         )
+
+
+def serve_flight():
+    """Flight-recorder gate: the always-on request/flush rings must cost
+    <2% on coalesced serve throughput, and induced anomalies (a terminal
+    overflow and a deadline miss) must each dump a schema-valid incident
+    snapshot whose request ring still links trace_id -> flush_id.
+
+    ``REPRO_FLIGHT_SMOKE=1`` (or the serve smoke profile) keeps the
+    correctness-of-snapshots asserts and skips the wall-clock ratio —
+    same contract as every other smoke gate here."""
+    import json
+    import tempfile
+
+    from repro.obs import flight
+
+    smoke = SMOKE or os.environ.get("REPRO_FLIGHT_SMOKE", "") == "1"
+    n_reqs, elems, iters = (8, 128, 1) if smoke else (32, 128, 7)
+    rng = np.random.default_rng(9)
+    reqs = [rng.normal(0, 1, elems).astype(np.float32) for _ in range(n_reqs)]
+    limits = repro.SortLimits(n_procs=PROCS)
+
+    def burst(server):
+        for f in [server.submit(a) for a in reqs]:
+            f.result(120)
+
+    def measure(enabled):
+        flight.RECORDER.reset()
+        flight.set_enabled(enabled)
+        server = SortServer(max_batch=n_reqs, max_delay_ms=5.0, config=CFG,
+                            limits=limits)
+        try:
+            burst(server)  # warm compile
+            return gate_us(lambda: burst(server), warmup=1, iters=iters)
+        finally:
+            server.close()
+            flight.set_enabled(True)
+
+    us_on = measure(True)
+    us_off = measure(False)
+    overhead = us_on / max(us_off, 1e-9) - 1.0
+
+    # induced incidents -> schema-valid snapshots in a scratch flight dir
+    flight.RECORDER.reset()
+    with tempfile.TemporaryDirectory() as tmp:
+        prev_dir = os.environ.get("REPRO_FLIGHT_DIR")
+        os.environ["REPRO_FLIGHT_DIR"] = tmp
+        # deadline_miss_factor ~0 flags every completed request; the
+        # overflow request fails instead, so both kinds must appear
+        server = SortServer(max_batch=n_reqs, max_delay_ms=1.0, config=CFG,
+                            limits=limits, deadline_miss_factor=1e-6)
+        try:
+            # terminal overflow on the direct path: a per-request config
+            # with a starved capacity ladder (the server's own config
+            # stays healthy for the coalesced burst below)
+            fut = server.submit(
+                rng.random(4096).astype(np.float32), where="stream",
+                config=repro.SortConfig(use_pallas=False,
+                                        capacity_factor=1e-5),
+                limits=repro.SortLimits(n_procs=PROCS, max_doublings=1))
+            try:
+                fut.result(120)
+            except Exception:
+                pass
+            burst(server)
+        finally:
+            server.close()
+            if prev_dir is None:
+                os.environ.pop("REPRO_FLIGHT_DIR", None)
+            else:
+                os.environ["REPRO_FLIGHT_DIR"] = prev_dir
+        dumps = os.listdir(tmp)
+        kinds = {n.split("_", 1)[1].rsplit("_", 1)[0] for n in dumps}
+        assert "terminal_overflow" in kinds, f"dumps: {sorted(dumps)}"
+        assert "deadline_miss" in kinds, f"dumps: {sorted(dumps)}"
+        # the deadline_miss dump fires during the coalesced burst, so
+        # ITS request ring must show the trace_id -> flush_id linkage
+        # (the overflow dump precedes the burst and has none)
+        miss = sorted(n for n in dumps if "deadline_miss" in n)[-1]
+        with open(os.path.join(tmp, miss)) as f:
+            snap = json.load(f)
+        assert snap["schema"] == flight.SNAPSHOT_SCHEMA
+        linked = [r for r in snap["requests"] if r["flush_id"]]
+        assert linked, "no coalesced request kept its flush_id linkage"
+
+    emit("serve_flight_overhead", us_on,
+         f"overhead={overhead * 100:.2f}%;incidents={len(dumps)}",
+         backend="sim", size=n_reqs * elems, dtype="float32",
+         overhead_pct=round(overhead * 100, 2), incidents=len(dumps),
+         smoke=smoke)
+    if not smoke:
+        assert overhead < 0.02, (
+            f"flight recorder costs {overhead * 100:.2f}% (>2%) on "
+            f"coalesced serve throughput")
 
 
 def serve_latency():

@@ -121,6 +121,39 @@ subsystem off (the ``trace_overhead`` gate holds its residue under 2%).
 chunk staging with ``jax.profiler`` annotations. Runnable tour:
 ``examples/sort_observe.py``.
 
+Request tracing + flight recorder (``repro.obs.flight``): every
+serve-tier request is minted a ``trace_id`` at ``SortServer.submit()``
+(surfaced on ``out.meta.trace_id``); coalesced requests additionally
+carry the ``flush_id`` of the ONE vmapped flush that served them, and
+the flush record links back to all member trace_ids with a shared
+stage/sort/d2h phase split — so "where did this request's 38 ms go"
+decomposes into queue-wait + its flush's phases after the fact. The
+process-wide recorder (``obs.flight.RECORDER``) keeps bounded rings of
+request/flush summaries, rate-sampled full phase traces (every Nth
+direct dispatch runs traced), queue-depth history, and cost-model
+predicted-vs-actual pairs — always on, O(1) leaf-lock appends, held
+under the same <2% ``trace_overhead`` budget (``serve_flight`` gate).
+Anomalies — terminal overflow, a deadline miss beyond
+``deadline_miss_factor * max_delay_ms``, a ``QueueFullError`` burst, or
+the adaptive controller pinned at an operator bound — freeze the rings
+into ``incident_<kind>_<seq>.json`` under ``$REPRO_FLIGHT_DIR``
+(rate-limited per kind; shape pinned by ``tests/flight_schema.json``).
+
+SLOs (``repro.obs.slo``): ``SortServer(slo=SLOConfig(...))`` judges
+every end-to-end latency against a declared threshold/error-budget
+objective; ``stats()["slo"]`` and the ``repro_slo_*`` gauges report the
+rolling violation ratio and burn rate (>1 = budget exhausting faster
+than provisioned). An adaptive server with no explicit SLO derives one
+from the SAME ``AdaptConfig.target_p99_ms`` the controller steers on.
+
+``python -m repro.obsctl`` is the operator CLI over all of it:
+``scrape`` (Prometheus exposition + flight snapshot), ``diff`` (two
+scrapes), ``slow`` (top-N slow requests with the queue/execute split
+and flush linkage), ``export`` (snapshot -> linked Chrome/Perfetto
+trace, one row per request and per flush), and ``bench-diff`` — the
+same ``compare_bench`` that ``benchmarks/run.py --check-regression``
+uses to fail CI when a gated BENCH op slows beyond tolerance.
+
 Empirical tuning (``repro.tune``)
 ---------------------------------
 The planner's size rules and overflow ladder are static heuristics; the

@@ -1130,17 +1130,26 @@ def make_plan(keys, values=None, *, order="asc", want="values", where=None,
     return _make_plan(req, where, limits)
 
 
-def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
+def execute_request(req: _Req, plan: SortPlan, ctx=None) -> SortOutput:
     """Execute an already-normalized request on an already-made plan.
 
     ``repro.sort`` plans and dispatches in one call; the async serving
     front end (``repro.serve.sortd``) plans every request at admission
     time (via ``serve_profile``) and dispatches later from its flush
     loop — both funnel through here, so serving traffic cannot bypass
-    the planner's backend decision."""
+    the planner's backend decision.
+
+    ``ctx`` is the request's ``obs.flight.RequestContext`` when the
+    serve tier minted one: the executed backend is stamped on it and
+    its ``trace_id`` lands on the result meta, so the flight recorder
+    can attribute this dispatch end to end."""
     _SORTS_TOTAL.labels(backend=plan.backend).inc()
+    if ctx is not None:
+        ctx.backend = plan.backend
     if req.n == 0:
         meta = _meta(req, plan, plan.backend, req.config, 0)
+        if ctx is not None:
+            meta.trace_id = ctx.trace_id
         if req.multikey:
             keys_out = tuple(np.empty(0, k.dtype) for k in req.keys)
         else:
@@ -1159,6 +1168,8 @@ def execute_request(req: _Req, plan: SortPlan) -> SortOutput:
         out = _exec_multikey(req, plan)
     else:
         out = BACKENDS[plan.backend].execute(req, plan)
+    if ctx is not None:
+        out.meta.trace_id = ctx.trace_id
     if t0 is not None:
         if out._keys is not None:
             # already materialized (LSD multi-key): the sort is complete

@@ -69,6 +69,13 @@ class SortMeta:
     coalesced: int | None = None
     multikey: str | None = None
     trace: Any = None
+    # request-scoped identity (repro.obs.flight): trace_id is minted at
+    # serve-tier submit and follows the request through flush/dispatch;
+    # flush_id names the coalesced vmapped flush that served it (None
+    # for direct dispatches and plain repro.sort calls). Look the ids up
+    # in flight-recorder snapshots / `python -m repro.obsctl`.
+    trace_id: str | None = None
+    flush_id: str | None = None
     # dispatch timestamp (time.perf_counter) stamped by execute_request
     # when a repro.tune tuner is ambient; materialization computes the
     # wall time and feeds it back into the cost model, then clears it

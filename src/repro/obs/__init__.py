@@ -12,6 +12,12 @@ Three layers, one import:
   ``metrics``.
 * **Profiling** (``obs.annotate``): optional ``jax.profiler`` step
   annotations on the flush/staging hot paths (``REPRO_PROFILE=1``).
+* **Flight recorder** (``obs.flight``): always-on bounded rings of
+  recent request/flush summaries with per-request ``trace_id``s, dumped
+  as structured incident snapshots to ``$REPRO_FLIGHT_DIR`` on anomaly
+  triggers. See ``flight`` and ``python -m repro.obsctl``.
+* **SLOs** (``obs.slo``): declarative latency / error-budget objectives
+  with burn-rate gauges in the registry (``SortServer(slo=...)``).
 
 ``obs.disabled()`` switches the whole subsystem off for a block — the
 ``trace_overhead`` benchmark gate uses it to price the instrumentation.
@@ -20,7 +26,8 @@ from __future__ import annotations
 
 import contextlib
 
-from repro.obs import metrics, profiling, tracing
+from repro.obs import flight, metrics, profiling, slo, tracing
+from repro.obs.flight import RECORDER, FlightRecorder, new_trace_id
 from repro.obs.metrics import (
     REGISTRY,
     MetricsRegistry,
@@ -30,12 +37,20 @@ from repro.obs.metrics import (
     render_prometheus,
 )
 from repro.obs.profiling import annotate, set_profiling
+from repro.obs.slo import SLOConfig, SLOTracker
 from repro.obs.tracing import Span, Trace, current_trace, maybe_span, trace
 
 __all__ = [
     "metrics",
     "profiling",
     "tracing",
+    "flight",
+    "slo",
+    "RECORDER",
+    "FlightRecorder",
+    "new_trace_id",
+    "SLOConfig",
+    "SLOTracker",
     "REGISTRY",
     "MetricsRegistry",
     "counter",
@@ -55,9 +70,10 @@ __all__ = [
 
 
 def set_enabled(flag: bool) -> None:
-    """Master switch for spans *and* metric mutation."""
+    """Master switch for spans, metric mutation, and flight recording."""
     tracing.set_enabled(flag)
     metrics.set_enabled(flag)
+    flight.set_enabled(flag)
 
 
 @contextlib.contextmanager

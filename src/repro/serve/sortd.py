@@ -56,10 +56,13 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import numpy as np
 
 from repro.core import keyenc, planner
-from repro.core.overflow import bump_capacity
+from repro.core.overflow import SortOverflowError, bump_capacity
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
+from repro.obs import flight as obs_flight
 from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.slo import SLOConfig, SLOTracker
 from repro.stream.service import FlushEngine
 from repro.tune.adapt import AdaptConfig, AdaptiveController
 
@@ -98,6 +101,12 @@ _M_COALESCED = obs_metrics.counter(
     "sortd_coalesced_requests_total",
     "Requests that shared a vmapped coalesced flush.",
 )
+_M_FLUSH_TRIGGER = obs_metrics.counter(
+    "sortd_flush_trigger_total",
+    "Why each dispatch group fired: slot target reached, deadline "
+    "expired, explicit flush(), or server close/drain.",
+    labels=("trigger",),  # slots|deadline|forced|close
+)
 
 
 class QueueFullError(RuntimeError):
@@ -125,9 +134,10 @@ class SortFuture(Future):
 class _Pending:
     """One admitted request waiting in a bucket."""
 
-    __slots__ = ("fut", "req", "plan", "data", "t_submit", "t_dispatch")
+    __slots__ = ("fut", "req", "plan", "data", "t_submit", "t_dispatch",
+                 "ctx")
 
-    def __init__(self, fut, req, plan, data, t_submit):
+    def __init__(self, fut, req, plan, data, t_submit, ctx):
         self.fut = fut
         self.req = req          # normalized planner request (direct path)
         self.plan = plan        # SortPlan made at admission
@@ -137,6 +147,7 @@ class _Pending:
         #                         splits latency into queue-wait + execute
         #                         (direct requests: pool queue time counts
         #                         as queue-wait — it IS backpressure)
+        self.ctx = ctx          # obs.flight.RequestContext (trace_id etc.)
 
 
 class SortServer:
@@ -169,6 +180,22 @@ class SortServer:
       count, and the ``repro_tune_serve_*`` gauges track them in the
       metrics registry. Default None: the static knobs are used
       unchanged, bit-identical to the pre-tune server.
+    slo: optional ``repro.obs.SLOConfig`` (or a pre-built
+      ``SLOTracker``) — every end-to-end latency is judged against the
+      declared threshold/error-budget, the burn-rate gauges
+      (``repro_slo_*``) land in the metrics registry, and ``stats()``
+      gains an ``slo`` snapshot. Default None; an adaptive server with
+      no explicit SLO derives one from the SAME ``AdaptConfig``
+      objective the controller steers on (``SLOConfig.from_adapt``).
+    deadline_miss_factor: flight-recorder anomaly threshold — a request
+      whose end-to-end latency exceeds ``factor * max_delay_ms`` dumps
+      a ``deadline_miss`` incident snapshot (see ``repro.obs.flight``).
+
+    Every request is minted a ``trace_id`` at submit and its timeline
+    (queue-wait -> flush/dispatch -> resolve, with the linking
+    ``flush_id`` and the flush's stage/sort/d2h phase split) is recorded
+    in the process-wide flight recorder (``obs.flight.RECORDER``) —
+    always on, bounded memory; inspect with ``python -m repro.obsctl``.
 
     The server starts its flush thread on construction; use it as a
     context manager (or call ``close()``) to drain and stop it.
@@ -178,7 +205,9 @@ class SortServer:
                  max_queue: int = 1024, limits=None,
                  config: SortConfig | None = None, investigator: bool = True,
                  direct_workers: int = 2, latency_window: int = 2048,
-                 adapt: AdaptConfig | AdaptiveController | None = None):
+                 adapt: AdaptConfig | AdaptiveController | None = None,
+                 slo: SLOConfig | SLOTracker | None = None,
+                 deadline_miss_factor: float = 8.0):
         self.max_batch = int(max_batch)
         self.max_delay = float(max_delay_ms) / 1e3
         self.max_queue = int(max_queue)
@@ -200,6 +229,14 @@ class SortServer:
             # the engine's vmapped-batch cap must cover the controller's
             # whole range, or growing max_batch would silently slice
             engine_batch = max(engine_batch, ctrl.config.max_batch)
+        if slo is None and self._adapt is not None:
+            slo = SLOConfig.from_adapt(self._adapt.config)
+        self._slo = (slo if isinstance(slo, SLOTracker)
+                     else SLOTracker(slo) if slo is not None else None)
+        self._flight = obs_flight.RECORDER
+        self.deadline_miss_factor = float(deadline_miss_factor)
+        self._adapt_sat_seen = (self._adapt.bound_saturations
+                                if self._adapt is not None else 0)
         self._stats = {
             "submitted": 0, "completed": 0, "failed": 0, "cancelled": 0,
             "rejected": 0, "flushes": 0, "flushed_requests": 0,
@@ -257,13 +294,12 @@ class SortServer:
         with self._cond:
             if self._closed:
                 raise RuntimeError("SortServer is closed")
+            retry_ms = None
             if self._depth >= self.max_queue:
                 self._stats["rejected"] += 1
-                _M_REQUESTS.labels(outcome="rejected").inc()
-                raise QueueFullError(
-                    f"sort queue full ({self.max_queue} pending requests)",
-                    retry_after_ms=self._retry_after_ms(time.monotonic()),
-                )
+                retry_ms = self._retry_after_ms(time.monotonic())
+        if retry_ms is not None:
+            self._reject(retry_ms)
         cfg = config if config is not None else self.config
         inv = self.investigator if investigator is None else investigator
         lim = limits if limits is not None else self.limits
@@ -305,36 +341,80 @@ class SortServer:
 
         fut = SortFuture()
         now = time.monotonic()
-        pend = _Pending(fut, req, plan, data, now)
+        # request-scoped identity: the trace_id minted here follows the
+        # request through the flush loop / worker pool into the flight
+        # recorder and onto the result's meta.trace_id
+        ctx = obs_flight.RequestContext(
+            now, kind="coalesced" if batchable else "direct",
+            n=req.n or 0, dtype=req.dtype, backend=plan.backend,
+        )
+        pend = _Pending(fut, req, plan, data, now, ctx)
+        retry_ms = None
         with self._cond:
             if self._closed:
                 raise RuntimeError("SortServer is closed")
             if self._depth >= self.max_queue:
+                # the queue filled during planning: reject below, outside
+                # the lock (the burst trigger may write a snapshot file)
                 self._stats["rejected"] += 1
-                _M_REQUESTS.labels(outcome="rejected").inc()
-                raise QueueFullError(
-                    f"sort queue full ({self.max_queue} pending requests)",
-                    retry_after_ms=self._retry_after_ms(now),
-                )
-            if batchable:
-                # descending requests bucket separately (same shapes,
-                # different fused program: in-program flip decode), and
-                # packed multi-key requests bucket per PackSpec (the
-                # fused unpack is compiled per spec)
-                desc = bool(req.descending[0]) and not req.multikey
-                pspec = plan.packspec if req.multikey else None
-                key = (("batch", desc, pspec)
-                       + self._engine.bucket_key(data))
+                retry_ms = self._retry_after_ms(now)
             else:
-                self._seq += 1
-                key = ("direct", self._seq)
-            self._buckets.setdefault(key, []).append(pend)
-            self._depth += 1
-            self._stats["submitted"] += 1
-            _M_REQUESTS.labels(outcome="submitted").inc()
-            _M_QUEUE_DEPTH.set(self._depth)
-            self._cond.notify()
+                if batchable:
+                    # descending requests bucket separately (same shapes,
+                    # different fused program: in-program flip decode),
+                    # and packed multi-key requests bucket per PackSpec
+                    # (the fused unpack is compiled per spec)
+                    desc = bool(req.descending[0]) and not req.multikey
+                    pspec = plan.packspec if req.multikey else None
+                    key = (("batch", desc, pspec)
+                           + self._engine.bucket_key(data))
+                else:
+                    self._seq += 1
+                    key = ("direct", self._seq)
+                self._buckets.setdefault(key, []).append(pend)
+                self._depth += 1
+                self._stats["submitted"] += 1
+                _M_REQUESTS.labels(outcome="submitted").inc()
+                _M_QUEUE_DEPTH.set(self._depth)
+                self._cond.notify()
+        if retry_ms is not None:
+            self._reject(retry_ms)
         return fut
+
+    def _reject(self, retry_after_ms: float) -> None:
+        """Admission rejection (stats already counted under the lock):
+        feed the flight recorder's burst detector and raise. A burst —
+        ``burst_threshold`` rejections inside ``burst_window_s`` — dumps
+        a ``queue_full_burst`` incident snapshot."""
+        _M_REQUESTS.labels(outcome="rejected").inc()
+        if self._flight.record_rejection():
+            self._flight_anomaly("queue_full_burst", {
+                "max_queue": self.max_queue,
+                "retry_after_ms": retry_after_ms,
+            })
+        raise QueueFullError(
+            f"sort queue full ({self.max_queue} pending requests)",
+            retry_after_ms=retry_after_ms,
+        )
+
+    def _flight_anomaly(self, kind: str, detail: dict) -> None:
+        """Refresh the recorder's controller/SLO state, then trigger —
+        incident snapshots carry the knob positions of the moment."""
+        if self._adapt is not None:
+            self._flight.record_adaptive(self._adapt_state())
+        if self._slo is not None:
+            self._flight.record_slo(self._slo.snapshot())
+        self._flight.anomaly(kind, detail)
+
+    def _adapt_state(self) -> dict:
+        ctrl = self._adapt
+        return {
+            "delay_ms": ctrl.delay_ms,
+            "batch": ctrl.batch,
+            "adjustments": ctrl.adjustments,
+            "bound_saturations": ctrl.bound_saturations,
+            "saturated_at": ctrl.saturated_at,
+        }
 
     def sort_many_async(self, arrays, **sort_kwargs) -> list[SortOutput]:
         """Submit every array, then wait for all: micro-batched execution
@@ -397,7 +477,12 @@ class SortServer:
                 max_delay_ms=self.max_delay * 1e3,
                 max_batch=self.max_batch,
                 adaptations=self._adapt.adjustments,
+                bound_saturations=self._adapt.bound_saturations,
             )
+        if self._slo is not None:
+            # declared objective + live burn rate (see repro.obs.slo);
+            # the same numbers scrape as the repro_slo_* gauges
+            s["slo"] = self._slo.snapshot()
         return s
 
     def close(self, timeout: float | None = None) -> None:
@@ -439,6 +524,14 @@ class SortServer:
             full = key[0] == "batch" and len(pends) >= self.max_batch
             if self._force or self._closed or full or self._deadline(key, pends) <= now:
                 ready.append(key)
+                # why this bucket fired — per-bucket flush-kind telemetry
+                # (batching efficiency: deadline-heavy traffic means the
+                # coalescing window rarely fills its slot target)
+                trigger = ("slots" if full
+                           else "forced" if self._force
+                           else "close" if self._closed
+                           else "deadline")
+                _M_FLUSH_TRIGGER.labels(trigger=trigger).inc()
         return ready
 
     def _wait_timeout(self, now: float) -> float | None:
@@ -466,6 +559,9 @@ class SortServer:
                 work = [(k, self._buckets.pop(k)) for k in ready]
                 self._depth -= sum(len(p) for _, p in work)
                 _M_QUEUE_DEPTH.set(self._depth)
+                # queue-depth history for incident snapshots (leaf-lock
+                # deque append — never blocks on I/O)
+                self._flight.record_queue_depth(self._depth, now)
             for key, pends in work:
                 self._flush_group(key, pends)
             self._maybe_adapt()
@@ -499,10 +595,27 @@ class SortServer:
             with self._cond:
                 self.max_delay = ctrl.delay_ms / 1e3
                 self.max_batch = ctrl.batch
+        self._flight.record_adaptive(self._adapt_state())
+        if ctrl.bound_saturations > self._adapt_sat_seen:
+            # the controller wanted to move but every knob is pinned at
+            # an operator bound — the objective is unreachable inside
+            # the configured envelope; leave the evidence behind
+            self._adapt_sat_seen = ctrl.bound_saturations
+            self._flight_anomaly("adapt_bound_saturation", {
+                "p99_ms": p99,
+                "target_p99_ms": ctrl.config.target_p99_ms,
+                "bound": ctrl.saturated_at,
+            })
 
     # --------------------------------------------------------- execution
     def _flush_group(self, key: tuple, pends: list[_Pending]) -> None:
-        live = [p for p in pends if p.fut.set_running_or_notify_cancel()]
+        live = []
+        for p in pends:
+            if p.fut.set_running_or_notify_cancel():
+                live.append(p)
+            else:
+                p.ctx.finish("cancelled")
+                self._flight.record_request(p.ctx.summary())
         cancelled = len(pends) - len(live)
         if cancelled:
             with self._cond:
@@ -525,10 +638,14 @@ class SortServer:
             t_dispatch = time.monotonic()
             for p in live:
                 p.t_dispatch = t_dispatch
+                p.ctx.dispatched(t_dispatch)
             try:
+                # the engine links the flush's flush_id + stage/sort/d2h
+                # phase split onto every member ctx and records ONE
+                # flush summary carrying all member trace_ids
                 results = self._engine.run_group(
                     [p.data for p in live], descending=key[1],
-                    packspec=key[2])
+                    packspec=key[2], ctxs=[p.ctx for p in live])
             except Exception as e:  # noqa: BLE001 — an unexpected error
                 # (XLA compile/runtime failure, MemoryError staging the
                 # batch, ...) must fail THESE futures, never kill the
@@ -553,17 +670,42 @@ class SortServer:
         # queue-wait for a direct request includes the worker-pool queue:
         # waiting for a free worker is backpressure, not execution
         p.t_dispatch = time.monotonic()
+        p.ctx.dispatched(p.t_dispatch)
+        # rate-sampled full phase traces: every Nth direct request runs
+        # with a per-request Trace attached, so incident snapshots hold
+        # complete plan->...->d2h breakdowns, not just coarse intervals
+        tr = None
+        if p.req.trace is None and self._flight.sample():
+            tr = obs_tracing.Trace(labels={"backend": p.plan.backend,
+                                           "trace_id": p.ctx.trace_id})
+            p.req.trace = tr
+            p.ctx.sampled = True
         try:
-            out = planner.execute_request(p.req, p.plan)
+            out = planner.execute_request(p.req, p.plan, ctx=p.ctx)
             # materialize HERE so terminal errors land on the future (not
             # in the caller's .keys access) and the stream backend's
             # ladder accounting is complete
             _ = out.keys
             with self._cond:
                 self._stats["retries"] += int(out.meta.retries)
+            p.ctx.retries = int(out.meta.retries)
+            self._record_sampled(p, tr)
             self._resolve(p, out)
         except Exception as e:  # noqa: BLE001 — future owns it
+            self._record_sampled(p, tr)
             self._fail(p, e)
+
+    def _record_sampled(self, p: _Pending, tr) -> None:
+        if tr is None:
+            return
+        p.ctx.phases = {f"{name}_ms": s * 1e3
+                        for name, s in tr.phase_totals().items()}
+        self._flight.record_trace(p.ctx.trace_id, [
+            {"name": s.name, "t0": s.t0, "t1": s.t1,
+             "attrs": {k: v for k, v in s.attrs.items()
+                       if isinstance(v, (int, float, str, bool))}}
+            for s in tr.spans
+        ])
 
     def _wrap_batched(self, p: _Pending, arr,
                       occupancy: int, retries: int) -> SortOutput:
@@ -581,6 +723,7 @@ class SortServer:
             n_keys=len(orders), dtype=p.req.dtype, coalesced=occupancy,
             retries=retries,
             multikey="packed" if isinstance(arr, tuple) else None,
+            trace_id=p.ctx.trace_id, flush_id=p.ctx.flush_id,
         )
         # packed multi-key flushes resolve to the unpacked column tuple
         return SortOutput(meta, keys=arr)
@@ -599,15 +742,49 @@ class SortServer:
         _M_EXECUTE.observe(execute * 1e3)
 
     def _resolve(self, p: _Pending, out: SortOutput) -> None:
+        now = time.monotonic()
         with self._cond:
-            self._record_latency(p, time.monotonic())
+            self._record_latency(p, now)
             self._stats["completed"] += 1
         _M_REQUESTS.labels(outcome="completed").inc()
+        p.ctx.finish("completed", now)
+        self._observe_flight(p, error=False)
         p.fut.set_result(out)
 
     def _fail(self, p: _Pending, e: Exception) -> None:
+        now = time.monotonic()
         with self._cond:
-            self._record_latency(p, time.monotonic())
+            self._record_latency(p, now)
             self._stats["failed"] += 1
         _M_REQUESTS.labels(outcome="failed").inc()
+        p.ctx.finish("failed", now, error=e)
+        self._observe_flight(p, error=True)
+        if isinstance(e, SortOverflowError):
+            # the capacity ladder is exhausted — the one failure mode
+            # the paper's balance argument says should never happen on
+            # realistic distributions, so it always leaves evidence
+            self._flight_anomaly("terminal_overflow", {
+                "trace_id": p.ctx.trace_id,
+                "n": p.ctx.n,
+                "error": repr(e),
+            })
         p.fut.set_exception(e)
+
+    def _observe_flight(self, p: _Pending, *, error: bool) -> None:
+        """Terminal accounting shared by resolve/fail: the request
+        summary lands in the flight ring, the SLO judges the latency,
+        and a deadline miss beyond ``deadline_miss_factor`` flush
+        windows triggers an incident snapshot."""
+        ctx = p.ctx
+        self._flight.record_request(ctx.summary())
+        total_ms = ctx.total_ms
+        if self._slo is not None:
+            self._slo.observe(total_ms, error=error)
+        miss_ms = self.deadline_miss_factor * self.max_delay * 1e3
+        if not error and total_ms is not None and total_ms > miss_ms:
+            self._flight_anomaly("deadline_miss", {
+                "trace_id": ctx.trace_id,
+                "total_ms": total_ms,
+                "threshold_ms": miss_ms,
+                "max_delay_ms": self.max_delay * 1e3,
+            })

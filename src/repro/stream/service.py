@@ -37,6 +37,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -48,6 +49,7 @@ from repro.core.overflow import OverflowPolicy, SortOverflowError, retry_overflo
 from repro.core.splitters import SortConfig
 from repro.kernels import ops as kops
 from repro.kernels.ops import _next_pow2
+from repro.obs import flight as obs_flight
 from repro.obs import metrics as obs_metrics
 from repro.obs.profiling import annotate as _annotate
 from repro.stream.runs import _pad_chunk
@@ -62,6 +64,17 @@ _M_CACHE_BUILDS = obs_metrics.counter(
 _M_CACHE_HITS = obs_metrics.counter(
     "repro_program_cache_hits_total",
     "ProgramCache lookups served by an already-compiled program.",
+)
+# batching efficiency (the PR 3 design premise) as a scrape surface:
+# how many requests actually shared each vmapped flush, per program
+# kind — plain ascending, descending (fused flip decode), or packed
+# multi-key (fused unpack). A mass at bucket 1 means the coalescing
+# window is not capturing concurrency.
+_M_COALESCE_SIZE = obs_metrics.histogram(
+    "repro_flush_coalesce_size",
+    "Requests coalesced into one vmapped flush program, by program kind.",
+    labels=("kind",),  # plain|descending|packed
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128, float("inf")),
 )
 
 
@@ -116,6 +129,9 @@ class ProgramCache:
 class SortRequest:
     rid: int
     data: np.ndarray  # flat, any supported key dtype
+    # request-scoped identity, minted at submit (obs.flight): links this
+    # request to the flush that served it in the flight recorder
+    trace_id: str | None = None
 
 
 class FlushEngine:
@@ -172,30 +188,48 @@ class FlushEngine:
         return keyenc.flip_np(fill) if descending else fill
 
     def run_group(self, datas: list[np.ndarray], *,
-                  descending: bool = False, packspec=None) -> list[tuple]:
+                  descending: bool = False, packspec=None,
+                  ctxs: list | None = None) -> list[tuple]:
         """Execute one shape bucket's flat arrays; per entry,
         ``(sorted array | terminal exception, ladder_steps)``.
         ``descending`` buckets run the same fused program with the
         order-flip encode/decode inside it — requests arrive raw.
         ``packspec`` buckets (packed multi-key serving) arrive as the
         packed ascending int32 arrays; the fused program unpacks the
-        columns, and each result entry is the TUPLE of column arrays."""
+        columns, and each result entry is the TUPLE of column arrays.
+
+        ``ctxs`` (optional, parallel to ``datas``) are the requests'
+        ``obs.flight.RequestContext``s: each flush links its member
+        trace_ids, stamps its coarse phase breakdown (stage / sort /
+        d2h) onto every member context, and records ONE flush summary
+        in the flight recorder — the "one flush span, N request spans"
+        linkage the trace export reconstructs."""
         elems = self.bucket_elems(datas[0].shape[0])
         out: list = []
         for i in range(0, len(datas), self.max_batch):
             out.extend(
                 self._run_batch(datas[i : i + self.max_batch], elems,
-                                descending, packspec)
+                                descending, packspec,
+                                ctxs[i : i + self.max_batch] if ctxs else None)
             )
         return out
 
     def _run_batch(self, datas: list[np.ndarray], elems: int,
-                   descending: bool, packspec=None) -> list[tuple]:
+                   descending: bool, packspec=None,
+                   ctxs: list | None = None) -> list[tuple]:
         p = self.n_procs
         per = -(-elems // p)  # ceil: row capacity p*per covers elems for any p
         dtype = datas[0].dtype
         fill = self._fill(dtype, descending)
         b = _next_pow2(len(datas))
+        kind = ("packed" if packspec is not None
+                else "descending" if descending else "plain")
+        fctx = obs_flight.FlushContext(
+            kind=kind, batch=len(datas), padded_batch=b, elems=elems,
+            dtype=dtype,
+            trace_ids=[c.trace_id for c in ctxs] if ctxs else None,
+        )
+        t0 = time.monotonic()
         batch = np.full((b, p, per), fill, dtype)
         for i, d in enumerate(datas):
             batch[i] = _pad_chunk(d, p, per, fill)
@@ -203,10 +237,13 @@ class FlushEngine:
         fn = self.cache.get(b, p, per, dtype, self.config, self.investigator,
                             flat=True, descending=descending,
                             packspec=packspec)
+        t_staged = time.monotonic()
         # profiler annotation (REPRO_PROFILE=1) brackets the flush program
         # dispatch so captured device profiles attribute the vmapped sort
         with _annotate("repro.service.flush_batch"):
             res = fn(jnp.asarray(batch))
+            jax.block_until_ready(res.flat)
+        t_sorted = time.monotonic()
         self.stats["batches"] += 1
 
         overflowed = np.asarray(res.overflowed)
@@ -217,15 +254,33 @@ class FlushEngine:
         # crosses to the host
         flat = (tuple(np.asarray(c) for c in res.flat)
                 if packspec is not None else np.asarray(res.flat))
+        t_d2h = time.monotonic()
+        fctx.phases = {
+            "stage_ms": (t_staged - t0) * 1e3,
+            "sort_ms": (t_sorted - t_staged) * 1e3,
+            "d2h_ms": (t_d2h - t_sorted) * 1e3,
+        }
+        fctx.overflowed = int(overflowed[: len(datas)].sum())
         out: list = []
         for i, d in enumerate(datas):
+            retries = 0
             if overflowed[i]:
                 try:
-                    out.append(self._retry_one(d, elems, descending, packspec))
+                    entry = self._retry_one(d, elems, descending, packspec)
                 except SortOverflowError as e:
-                    out.append((e, self.max_doublings))
-                continue
-            out.append((self._slice_result(flat, i, d.shape[0]), 0))
+                    entry = (e, self.max_doublings)
+                retries = entry[1]
+                out.append(entry)
+            else:
+                out.append((self._slice_result(flat, i, d.shape[0]), 0))
+            if ctxs:
+                ctxs[i].flush_id = fctx.flush_id
+                ctxs[i].coalesced = len(datas)
+                ctxs[i].retries = retries
+                ctxs[i].phases = fctx.phases
+            fctx.retries += retries
+        _M_COALESCE_SIZE.labels(kind=kind).observe(len(datas))
+        obs_flight.RECORDER.record_flush(fctx.summary())
         return out
 
     @staticmethod
@@ -308,10 +363,12 @@ class SortService:
     # ---------------------------------------------------------- batching
     def submit(self, data: np.ndarray) -> int:
         """Enqueue a sort request; returns its rid. ``flush`` executes the
-        queue in as few programs as the shape mix allows."""
+        queue in as few programs as the shape mix allows. Each request is
+        minted a ``trace_id`` for the flight recorder's flush linkage."""
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(SortRequest(rid, np.asarray(data).reshape(-1)))
+        self._queue.append(SortRequest(rid, np.asarray(data).reshape(-1),
+                                       trace_id=obs_flight.new_trace_id()))
         return rid
 
     def flush(self) -> dict[int, np.ndarray]:
@@ -327,14 +384,25 @@ class SortService:
         out: dict[int, np.ndarray] = {}
         errors: dict[int, Exception] = {}
         for reqs in groups.values():
-            results = self._engine.run_group([r.data for r in reqs])
-            for req, (res, _retries) in zip(reqs, results):
+            now = time.monotonic()
+            ctxs = [obs_flight.RequestContext(
+                        now, trace_id=r.trace_id, kind="coalesced",
+                        n=r.data.shape[0], dtype=r.data.dtype, backend="sim")
+                    for r in reqs]
+            for c in ctxs:
+                c.dispatched(now)  # sync service: no queue-wait to split
+            results = self._engine.run_group([r.data for r in reqs],
+                                             ctxs=ctxs)
+            for req, ctx, (res, _retries) in zip(reqs, ctxs, results):
                 if isinstance(res, Exception):
                     errors[req.rid] = RuntimeError(
                         f"sort request rid={req.rid}: {res}"
                     )
+                    ctx.finish("failed", error=res)
                 else:
                     out[req.rid] = res
+                    ctx.finish("completed")
+                obs_flight.RECORDER.record_request(ctx.summary())
         if errors:
             rids = sorted(errors)
             raise SortServiceError(

@@ -174,3 +174,14 @@ def record_sort(meta, elapsed_s: float) -> None:
         return
     tuner.observe("sort", meta.backend, str(meta.dtype), int(meta.n),
                   elapsed_s * 1e6)
+    # cost-model accountability: when the plan carried a prediction for
+    # the backend that actually ran, park the predicted-vs-actual pair
+    # in the flight recorder — incident snapshots then show whether the
+    # model was lying when things went sideways
+    predicted = getattr(meta.plan, "cost_predicted", None) or {}
+    if meta.backend in predicted:
+        from repro.obs import flight as _flight
+
+        _flight.RECORDER.record_prediction(
+            "sort", meta.backend, int(meta.n),
+            predicted[meta.backend]["us"], elapsed_s * 1e6)

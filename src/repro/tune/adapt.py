@@ -40,6 +40,13 @@ _C_ADJUST = _metrics.counter(
     "Adaptive serve knob adjustments by direction",
     labels=("direction",),
 )
+_C_SATURATED = _metrics.counter(
+    "repro_tune_serve_bound_saturation_total",
+    "Adjustment attempts refused because every knob was pinned at the "
+    "operator bound in the needed direction — the objective is "
+    "unreachable inside the configured bounds",
+    labels=("bound",),  # min|max
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +102,13 @@ class AdaptiveController:
         self.delay_ms = min(max(d, config.min_delay_ms), config.max_delay_ms)
         self.batch = min(max(b, config.min_batch), config.max_batch)
         self.adjustments = 0
+        # bound-saturation accounting: update() wanted to move but every
+        # knob was already pinned at the relevant operator bound. A
+        # rising count while p99 stays off-target is the "raise the
+        # bounds or add capacity" operator signal; the flight recorder
+        # triggers an incident snapshot on it.
+        self.bound_saturations = 0
+        self.saturated_at: str | None = None  # "min"|"max" while pinned
         self._high = 0
         self._low = 0
         self._publish()
@@ -147,8 +161,13 @@ class AdaptiveController:
             moved = True
         if moved:
             self.adjustments += 1
+            self.saturated_at = None
             _C_ADJUST.labels(direction="down").inc()
             self._publish()
+        else:
+            self.bound_saturations += 1
+            self.saturated_at = "min"
+            _C_SATURATED.labels(bound="min").inc()
         return moved
 
     def _relax(self) -> bool:
@@ -165,6 +184,11 @@ class AdaptiveController:
             moved = True
         if moved:
             self.adjustments += 1
+            self.saturated_at = None
             _C_ADJUST.labels(direction="up").inc()
             self._publish()
+        else:
+            self.bound_saturations += 1
+            self.saturated_at = "max"
+            _C_SATURATED.labels(bound="max").inc()
         return moved

@@ -1,0 +1,111 @@
+"""CI flight-snapshot schema stability check.
+
+Incident snapshots (``repro.obs.flight``) are the debugging contract of
+the serve tier: ``python -m repro.obsctl`` (slow / export) parses them,
+operators archive them from ``$REPRO_FLIGHT_DIR``, and a snapshot dumped
+by today's build must still open in next month's tooling. Their JSON
+shape — top-level fields, request/flush summary fields, the anomaly
+vocabulary — is therefore pinned here, mirroring the tune-store check.
+This builds a canonical snapshot from a synthetic recorder and diffs
+its shape against the checked-in ``tests/flight_schema.json``.
+
+    PYTHONPATH=src python tests/check_flight_schema.py            # check
+    PYTHONPATH=src python tests/check_flight_schema.py --update   # regen
+
+A deliberate format change must bump ``flight.SNAPSHOT_SCHEMA`` (so
+tooling can branch on it) AND regenerate this file with ``--update`` —
+the failure message makes that a reviewed decision, not an accident.
+Also collected by pytest (``test_flight_schema_stable``).
+"""
+import json
+import pathlib
+import sys
+
+SCHEMA_PATH = pathlib.Path(__file__).parent / "flight_schema.json"
+
+
+def current_schema() -> dict:
+    """Build one fully-populated snapshot from a synthetic recorder and
+    describe its shape (field names and vocabularies, not values)."""
+    from repro.obs import flight
+
+    rec = flight.FlightRecorder()
+    ctx = flight.RequestContext(0.0, kind="coalesced", n=128,
+                                dtype="float32", backend="sim")
+    ctx.dispatched(0.001)
+    fctx = flight.FlushContext(kind="plain", batch=2, padded_batch=2,
+                               elems=128, dtype="float32",
+                               trace_ids=[ctx.trace_id])
+    fctx.phases = {"stage_ms": 0.1, "sort_ms": 0.5, "d2h_ms": 0.1}
+    ctx.flush_id = fctx.flush_id
+    ctx.finish("completed", 0.002)
+    rec.record_request(ctx.summary())
+    rec.record_flush(fctx.summary())
+    rec.record_trace(ctx.trace_id, [{"name": "sort", "t0": 0.0, "t1": 1.0,
+                                     "attrs": {}}])
+    rec.record_queue_depth(3, 0.0)
+    rec.record_prediction("sort", "sim", 128, 90.0, 100.0)
+    rec.record_adaptive({"delay_ms": 5.0, "batch": 16, "adjustments": 0,
+                         "bound_saturations": 0, "saturated_at": None})
+    rec.record_slo({"name": "serve_p99", "threshold_ms": 25.0})
+    snap = rec.snapshot("manual", {"why": "schema"})
+    return {
+        "schema_version": flight.SNAPSHOT_SCHEMA,
+        "anomaly_kinds": sorted(flight.ANOMALY_KINDS),
+        "top_level_fields": sorted(snap),
+        "request_fields": sorted(snap["requests"][0]),
+        "flush_fields": sorted(snap["flushes"][0]),
+        "trace_fields": sorted(snap["traces"][0]),
+        "prediction_fields": sorted(snap["predictions"][0]),
+        "incident_file_pattern": "incident_<kind>_<seq>.json",
+    }
+
+
+def diff(expected: dict, got: dict) -> list[str]:
+    lines = []
+    for field in sorted(set(expected) | set(got)):
+        if expected.get(field) != got.get(field):
+            lines.append(
+                f"  {field}: {expected.get(field)!r} -> {got.get(field)!r}"
+            )
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    got = current_schema()
+    if "--update" in argv:
+        SCHEMA_PATH.write_text(json.dumps(got, indent=1) + "\n")
+        print(f"wrote {SCHEMA_PATH}")
+        return 0
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, got)
+    if lines:
+        print("flight-snapshot schema drifted from tests/flight_schema.json:",
+              file=sys.stderr)
+        print("\n".join(lines), file=sys.stderr)
+        print(
+            "\nIncident snapshots are a debugging contract (obsctl and "
+            "archived dumps outlive builds) — a deliberate change must "
+            "bump repro.obs.flight.SNAPSHOT_SCHEMA and regenerate:\n"
+            "  PYTHONPATH=src python tests/check_flight_schema.py --update\n"
+            "and commit the regenerated file with this change.",
+            file=sys.stderr,
+        )
+        return 1
+    print("flight-snapshot schema stable")
+    return 0
+
+
+def test_flight_schema_stable():
+    expected = json.loads(SCHEMA_PATH.read_text())
+    lines = diff(expected, current_schema())
+    assert not lines, (
+        "flight-snapshot schema drifted (format changes must bump "
+        "SNAPSHOT_SCHEMA and update tests/flight_schema.json deliberately "
+        "— run `python tests/check_flight_schema.py --update`):\n"
+        + "\n".join(lines)
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

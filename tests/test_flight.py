@@ -1,0 +1,391 @@
+"""Flight recorder + SLO layer (repro.obs.flight / repro.obs.slo):
+request-scoped trace ids and flush linkage through the serve tier,
+thread-safe rings, anomaly-triggered incident snapshots, SLO burn-rate
+accounting, and the adaptive controller's bound-saturation signal."""
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.splitters import SortConfig
+from repro.obs import flight, render_prometheus
+from repro.obs.slo import SLOConfig, SLOTracker
+from repro.serve import QueueFullError, SortServer
+from repro.tune.adapt import AdaptConfig, AdaptiveController
+
+CFG = SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(n_procs=4)
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_recorder():
+    """The recorder is process-wide; every test starts from empty rings
+    so linkage asserts see only their own traffic."""
+    flight.RECORDER.reset()
+    yield
+    flight.RECORDER.reset()
+
+
+def _server(**kw):
+    kw.setdefault("config", CFG)
+    kw.setdefault("limits", LIMITS)
+    return SortServer(**kw)
+
+
+def _paused_server(**kw):
+    return _server(max_batch=10_000, max_delay_ms=600_000, **kw)
+
+
+# ---------------------------------------------------- trace propagation
+
+
+def test_trace_ids_unique_and_linked_to_one_flush():
+    """N same-shape requests coalesce into ONE flush: every result must
+    carry a distinct trace_id, all sharing the flush_id of that flush,
+    and the recorder must hold the linkage both ways."""
+    arrays = [RNG.normal(0, 1, 128).astype(np.float32) for _ in range(6)]
+    with _paused_server() as srv:
+        futs = [srv.submit(a) for a in arrays]
+        srv.flush()
+        outs = [f.result(120) for f in futs]
+    ids = [o.meta.trace_id for o in outs]
+    assert all(ids) and len(set(ids)) == len(ids)
+    flush_ids = {o.meta.flush_id for o in outs}
+    assert len(flush_ids) == 1 and None not in flush_ids
+
+    snap = flight.RECORDER.snapshot()
+    reqs = {r["trace_id"]: r for r in snap["requests"]}
+    assert set(ids) <= set(reqs)
+    for tid in ids:
+        assert reqs[tid]["flush_id"] == outs[0].meta.flush_id
+        assert reqs[tid]["outcome"] == "completed"
+        assert reqs[tid]["coalesced"] == len(arrays)
+        assert reqs[tid]["total_ms"] >= 0
+    (fl,) = [f for f in snap["flushes"]
+             if f["flush_id"] == outs[0].meta.flush_id]
+    assert sorted(fl["requests"]) == sorted(ids)
+    assert set(fl["phases"]) == {"stage_ms", "sort_ms", "d2h_ms"}
+    # members inherit the flush's shared phase split
+    assert reqs[ids[0]]["phases"] == fl["phases"]
+
+
+def test_direct_dispatch_gets_trace_id_and_no_flush_link():
+    x = RNG.normal(0, 1, 512).astype(np.float32)
+    with _server(max_delay_ms=5.0) as srv:
+        out = srv.submit(x, want="order").result(120)
+    assert out.meta.trace_id
+    assert out.meta.flush_id is None
+    snap = flight.RECORDER.snapshot()
+    (rec,) = [r for r in snap["requests"]
+              if r["trace_id"] == out.meta.trace_id]
+    assert rec["kind"] == "direct" and rec["flush_id"] is None
+
+
+def test_plain_repro_sort_has_no_trace_id():
+    out = repro.sort(RNG.normal(0, 1, 256).astype(np.float32),
+                     where="sim", limits=LIMITS, config=CFG)
+    assert out.meta.trace_id is None and out.meta.flush_id is None
+
+
+def test_sync_service_links_trace_ids_too():
+    from repro.stream.service import SortService
+
+    arrays = [RNG.normal(0, 1, 64).astype(np.float32) for _ in range(4)]
+    svc = SortService(config=CFG, n_procs=4, max_batch=8)
+    for a in arrays:
+        svc.submit(a)
+    svc.flush()
+    snap = flight.RECORDER.snapshot()
+    linked = [r for r in snap["requests"] if r["flush_id"]]
+    assert len(linked) == len(arrays)
+    assert len({r["trace_id"] for r in linked}) == len(arrays)
+
+
+# ------------------------------------------------------- ring integrity
+
+
+def test_rings_are_bounded_and_threadsafe_under_snapshots():
+    """Hammer every record_* path from writer threads while a reader
+    snapshots concurrently: no exceptions, bounded rings, serializable
+    snapshots."""
+    rec = flight.FlightRecorder(capacity=32, flush_capacity=8,
+                                depth_capacity=16)
+    errors: list[Exception] = []
+    stop = threading.Event()
+
+    def writer(i):
+        try:
+            for k in range(400):
+                ctx = flight.RequestContext(0.0, kind="direct", n=k)
+                ctx.finish("completed", 0.001)
+                rec.record_request(ctx.summary())
+                rec.record_queue_depth(k)
+                if k % 10 == 0:
+                    fctx = flight.FlushContext(kind="plain", batch=2,
+                                               padded_batch=2, elems=64,
+                                               dtype="float32")
+                    rec.record_flush(fctx.summary())
+                rec.sample()
+                rec.record_rejection()
+        except Exception as e:  # pragma: no cover - the assert is the test
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                json.dumps(rec.snapshot())
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    r = threading.Thread(target=reader)
+    r.start()
+    for t in writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    r.join()
+    assert not errors
+    snap = rec.snapshot()
+    assert len(snap["requests"]) <= 32
+    assert len(snap["flushes"]) <= 8
+    assert len(snap["queue_depth"]) <= 16
+
+
+def test_trace_id_mint_unique_across_threads():
+    ids: list[str] = []
+    lock = threading.Lock()
+
+    def mint():
+        local = [flight.new_trace_id() for _ in range(500)]
+        with lock:
+            ids.extend(local)
+
+    threads = [threading.Thread(target=mint) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(ids)) == len(ids)
+
+
+def test_recorder_disable_is_total():
+    rec = flight.FlightRecorder()
+    rec.enabled = False
+    ctx = flight.RequestContext(0.0)
+    ctx.finish("completed")
+    rec.record_request(ctx.summary())
+    assert rec.anomaly("deadline_miss") is None
+    snap = rec.snapshot()
+    assert snap["requests"] == [] and snap["anomaly_counts"][
+        "deadline_miss"] == 0
+
+
+# --------------------------------------------------- incident snapshots
+
+
+def test_unknown_anomaly_kind_rejected():
+    with pytest.raises(KeyError):
+        flight.RECORDER.anomaly("dog_ate_the_sort")
+
+
+def test_terminal_overflow_dumps_incident(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path))
+    hopeless = dataclasses.replace(CFG, capacity_factor=1e-5)
+    lim = dataclasses.replace(LIMITS, max_doublings=1)
+    x = np.random.default_rng(9).uniform(0, 1, 4096).astype(np.float32)
+    with _server(config=hopeless, limits=lim, max_delay_ms=10) as srv:
+        fut = srv.submit(x, where="stream")
+        with pytest.raises(repro.SortOverflowError):
+            fut.result(300)
+    dumps = sorted(tmp_path.glob("incident_terminal_overflow_*.json"))
+    assert dumps, "terminal overflow left no incident snapshot"
+    snap = json.loads(dumps[0].read_text())
+    assert snap["schema"] == flight.SNAPSHOT_SCHEMA
+    assert snap["kind"] == "terminal_overflow"
+    assert snap["detail"]["trace_id"]
+    (rec,) = [r for r in snap["requests"]
+              if r["trace_id"] == snap["detail"]["trace_id"]]
+    assert rec["outcome"] == "failed"
+    assert "SortOverflowError" in rec["error"]
+    assert snap["anomaly_counts"]["terminal_overflow"] == 1
+
+
+def test_deadline_miss_dumps_incident(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path))
+    x = RNG.normal(0, 1, 128).astype(np.float32)
+    # a sub-microsecond miss threshold: any completed request trips it
+    with _server(max_delay_ms=1.0, deadline_miss_factor=1e-6) as srv:
+        srv.submit(x).result(120)
+    dumps = sorted(tmp_path.glob("incident_deadline_miss_*.json"))
+    assert dumps, "deadline miss left no incident snapshot"
+    snap = json.loads(dumps[0].read_text())
+    assert snap["kind"] == "deadline_miss"
+    assert snap["detail"]["total_ms"] > snap["detail"]["threshold_ms"]
+
+
+def test_queue_full_burst_dumps_incident(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path))
+    x = RNG.normal(0, 1, 64).astype(np.float32)
+    with _paused_server(max_queue=1) as srv:
+        fut = srv.submit(x)  # fills the queue; deadlines never fire
+        rejected = 0
+        for _ in range(12):
+            try:
+                srv.submit(x)
+            except QueueFullError:
+                rejected += 1
+        assert rejected == 12
+        srv.flush()
+        fut.result(120)
+    dumps = sorted(tmp_path.glob("incident_queue_full_burst_*.json"))
+    assert dumps, "rejection burst left no incident snapshot"
+    snap = json.loads(dumps[0].read_text())
+    assert snap["detail"]["max_queue"] == 1
+    assert snap["detail"]["retry_after_ms"] >= 0
+
+
+def test_dump_rate_limit_per_kind(tmp_path):
+    rec = flight.FlightRecorder(min_dump_interval_s=3600.0)
+    p1 = rec.anomaly("deadline_miss", flight_dir=str(tmp_path))
+    p2 = rec.anomaly("deadline_miss", flight_dir=str(tmp_path))
+    p3 = rec.anomaly("queue_full_burst", flight_dir=str(tmp_path))
+    assert p1 is not None and p3 is not None
+    assert p2 is None, "second dump of the same kind must be rate-limited"
+    # both anomalies still COUNTED even when the dump was suppressed
+    assert rec.snapshot()["anomaly_counts"]["deadline_miss"] == 2
+    assert len(rec.incidents) == 3
+
+
+def test_anomaly_without_flight_dir_stays_in_memory(monkeypatch):
+    monkeypatch.delenv("REPRO_FLIGHT_DIR", raising=False)
+    rec = flight.FlightRecorder()
+    assert rec.anomaly("deadline_miss") is None
+    assert len(rec.incidents) == 1
+    assert rec.incidents[0]["kind"] == "deadline_miss"
+
+
+# ------------------------------------------------- controller saturation
+
+
+def test_controller_counts_bound_saturation():
+    cfg = AdaptConfig(target_p99_ms=5.0, min_delay_ms=1.0, max_delay_ms=2.0,
+                      min_batch=2, max_batch=4, patience=1, min_samples=1)
+    ctrl = AdaptiveController(cfg, delay_ms=1.0, batch=2)
+    assert ctrl.bound_saturations == 0
+    # way over target with both knobs already at min: no move, saturated
+    assert ctrl.update(100.0, completed=10) is False
+    assert ctrl.bound_saturations == 1
+    assert ctrl.saturated_at == "min"
+    # relax direction moves (batch 2 -> up), clearing the pin
+    assert ctrl.update(0.1, completed=10) is True
+    assert ctrl.saturated_at is None
+    # push the relax direction until max bound pins it too
+    for _ in range(10):
+        ctrl.update(0.1, completed=10)
+    assert ctrl.saturated_at == "max"
+    assert ctrl.bound_saturations >= 2
+    text = render_prometheus()
+    assert 'repro_tune_serve_bound_saturation_total{bound="min"}' in text
+
+
+def test_server_surfaces_bound_saturation_in_stats():
+    cfg = AdaptConfig(target_p99_ms=5.0, min_delay_ms=1.0, max_delay_ms=2.0,
+                      min_batch=2, max_batch=4, patience=1, min_samples=1)
+    ctrl = AdaptiveController(cfg, delay_ms=1.0, batch=2)
+    ctrl.update(100.0, completed=10)
+    with _paused_server(adapt=ctrl) as srv:
+        stats = srv.stats()
+    assert stats["adaptive"] is True
+    assert stats["bound_saturations"] == 1
+
+
+# ------------------------------------------------------------- SLO layer
+
+
+def test_slo_tracker_burn_rate_math():
+    slo = SLOTracker(SLOConfig(name="t", threshold_ms=10.0,
+                               error_budget=0.1, window=10))
+    for _ in range(8):
+        assert slo.observe(5.0) is False
+    assert slo.observe(50.0) is True          # latency breach
+    assert slo.observe(5.0, error=True) is True   # errors always breach
+    assert slo.violation_ratio == pytest.approx(0.2)
+    assert slo.burn_rate == pytest.approx(2.0)  # 20% spend of a 10% budget
+    snap = slo.snapshot()
+    assert snap["observed"] == 10 and snap["breaches"] == 2
+    assert snap["budget_remaining"] == 0.0  # overspent budgets clamp at 0
+    # ring semantics: good samples push the old breaches out the window
+    for _ in range(10):
+        slo.observe(1.0)
+    assert slo.violation_ratio == 0.0 and slo.burn_rate == 0.0
+
+
+def test_slo_config_validation_and_from_adapt():
+    with pytest.raises(ValueError):
+        SLOConfig(threshold_ms=0.0)
+    with pytest.raises(ValueError):
+        SLOConfig(error_budget=1.5)
+    derived = SLOConfig.from_adapt(AdaptConfig(target_p99_ms=7.5))
+    assert derived.name == "serve_p99"
+    assert derived.threshold_ms == 7.5
+
+
+def test_server_slo_in_stats_and_prometheus():
+    x = RNG.normal(0, 1, 128).astype(np.float32)
+    slo = SLOConfig(name="unit_slo", threshold_ms=1e9)  # nothing breaches
+    with _server(max_delay_ms=2.0, slo=slo) as srv:
+        for _ in range(4):
+            srv.submit(x).result(120)
+        stats = srv.stats()
+    assert stats["slo"]["name"] == "unit_slo"
+    assert stats["slo"]["observed"] == 4
+    assert stats["slo"]["breaches"] == 0
+    assert stats["slo"]["burn_rate"] == 0.0
+    text = render_prometheus()
+    assert 'repro_slo_burn_rate{slo="unit_slo"}' in text
+    assert 'repro_slo_requests_total{slo="unit_slo",verdict="ok"}' in text
+
+
+def test_adaptive_server_derives_slo_from_objective():
+    cfg = AdaptConfig(target_p99_ms=12.5)
+    with _paused_server(adapt=cfg) as srv:
+        stats = srv.stats()
+    assert stats["slo"]["name"] == "serve_p99"
+    assert stats["slo"]["threshold_ms"] == 12.5
+
+
+def test_static_server_has_no_slo_key():
+    with _paused_server() as srv:
+        assert "slo" not in srv.stats()
+
+
+# ----------------------------------------------------- sampled tracing
+
+
+def test_direct_requests_get_rate_sampled_phase_traces():
+    """Every sample_every-th direct request runs with a full Trace;
+    its spans land in the recorder keyed by the request's trace_id."""
+    flight.RECORDER.sample_every = 2
+    try:
+        x = RNG.normal(0, 1, 256).astype(np.float32)
+        with _server(max_delay_ms=2.0) as srv:
+            outs = [srv.submit(x, want="order").result(120)
+                    for _ in range(4)]
+    finally:
+        flight.RECORDER.sample_every = 16
+    snap = flight.RECORDER.snapshot()
+    sampled = [r for r in snap["requests"] if r["sampled"]]
+    assert sampled, "no direct request was trace-sampled"
+    traced_ids = {t["trace_id"] for t in snap["traces"]}
+    assert {r["trace_id"] for r in sampled} <= traced_ids
+    (tr,) = [t for t in snap["traces"]
+             if t["trace_id"] == sampled[0]["trace_id"]]
+    assert tr["spans"] and all(s["t1"] >= s["t0"] for s in tr["spans"])
+    assert sampled[0]["phases"], "sampled request carries no phase split"
+    assert {o.meta.trace_id for o in outs} >= {r["trace_id"] for r in sampled}

@@ -1,0 +1,185 @@
+"""Operator CLI (repro.obsctl): bench regression comparison, Prometheus
+scrape parsing/diffing, and linked Chrome-trace export from flight
+snapshots — the consumers the trace_id/flush_id plumbing exists for."""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import obsctl
+from repro.core.splitters import SortConfig
+from repro.obs import flight
+from repro.serve import SortServer
+
+CFG = SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(n_procs=4)
+RNG = np.random.default_rng(0)
+
+
+def _rec(op, us, **extra):
+    return {"op": op, "us_per_call": us, "derived": "", "balance": None,
+            "size": extra.pop("size", None), "dtype": extra.pop("dtype", None),
+            "backend": extra.pop("backend", None), **extra}
+
+
+# ----------------------------------------------------------- bench diff
+
+
+def test_compare_bench_catches_2x_slowdown():
+    base = [_rec("api_dispatch_planner", 500.0)]
+    fresh = [_rec("api_dispatch_planner", 1000.0)]
+    lines, regs = obsctl.compare_bench(base, fresh)
+    assert len(regs) == 1
+    assert regs[0]["op"] == "api_dispatch_planner"
+    assert regs[0]["ratio"] == pytest.approx(2.0)
+    assert any("REGRESSED" in ln for ln in lines)
+
+
+def test_compare_bench_passes_unchanged_and_within_tolerance():
+    base = [_rec("api_dispatch_planner", 500.0),
+            _rec("serve_async_batched", 2000.0)]
+    fresh = [_rec("api_dispatch_planner", 500.0),
+            _rec("serve_async_batched", 2000.0 * 1.10)]  # under the 20% gate
+    _, regs = obsctl.compare_bench(base, fresh)
+    assert regs == []
+
+
+def test_compare_bench_ungated_ops_never_fatal():
+    base = [_rec("serve_sequential", 100.0)]
+    fresh = [_rec("serve_sequential", 100000.0)]
+    lines, regs = obsctl.compare_bench(base, fresh)
+    assert regs == []
+    assert any("[info]" in ln for ln in lines)
+
+
+def test_compare_bench_skips_smoke_mismatch_and_tiny_timings():
+    base = [_rec("api_dispatch_planner", 500.0, smoke=False),
+            _rec("serve_async_batched", 50.0, smoke=True)]
+    fresh = [_rec("api_dispatch_planner", 5000.0, smoke=True),  # mode changed
+             _rec("serve_async_batched", 99.0, smoke=True)]     # < min_us
+    lines, regs = obsctl.compare_bench(base, fresh, min_us=100.0)
+    assert regs == []
+    assert sum("[skipped]" in ln for ln in lines) == 2
+
+
+def test_compare_bench_matches_on_full_key():
+    """Same op at two sizes: only the regressed size is flagged."""
+    gates = {"api_sort": 0.15}
+    base = [_rec("api_sort", 500.0, size=1024), _rec("api_sort", 900.0, size=4096)]
+    fresh = [_rec("api_sort", 500.0, size=1024), _rec("api_sort", 2000.0, size=4096)]
+    _, regs = obsctl.compare_bench(base, fresh, gates=gates)
+    assert len(regs) == 1 and regs[0]["fresh_us"] == 2000.0
+
+
+def test_bench_diff_cli_exit_codes(tmp_path, capsys):
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(
+        {"suite": "api", "records": [_rec("api_dispatch_planner", 500.0)]}))
+    b.write_text(json.dumps(
+        {"suite": "api", "records": [_rec("api_dispatch_planner", 1500.0)]}))
+    assert obsctl.main(["bench-diff", str(a), str(a)]) == 0
+    assert obsctl.main(["bench-diff", str(a), str(b)]) == 1
+    assert "regression" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------- metrics
+
+
+def test_parse_and_diff_prometheus_text():
+    prev = obsctl.parse_prom(
+        "# HELP x_total things\n# TYPE x_total counter\n"
+        'x_total{k="a"} 3\nx_total{k="b"} 1\ny_gone 7\n')
+    curr = obsctl.parse_prom(
+        'x_total{k="a"} 5\nx_total{k="b"} 1\nz_new 2\n')
+    assert prev['x_total{k="a"}'] == 3.0
+    lines = obsctl.diff_metrics(prev, curr)
+    assert any('x_total{k="a"} 3 -> 5 (+2)' in ln for ln in lines)
+    assert any(ln.startswith("+ z_new") for ln in lines)
+    assert any(ln.startswith("- y_gone") for ln in lines)
+    assert not any('{k="b"}' in ln for ln in lines)  # unchanged: silent
+
+
+def test_scrape_cli_writes_exposition_and_snapshot(tmp_path):
+    out = tmp_path / "metrics.txt"
+    snap_path = tmp_path / "snap.json"
+    rc = obsctl.main(["scrape", "--out", str(out),
+                      "--snapshot", str(snap_path)])
+    assert rc == 0
+    assert "# TYPE" in out.read_text()
+    snap = json.loads(snap_path.read_text())
+    assert snap["schema"] == flight.SNAPSHOT_SCHEMA
+
+
+# ---------------------------------------------------------- trace export
+
+
+def _snapshot_from_live_server():
+    flight.RECORDER.reset()
+    arrays = [RNG.normal(0, 1, 128).astype(np.float32) for _ in range(4)]
+    with SortServer(max_batch=10_000, max_delay_ms=600_000, config=CFG,
+                    limits=LIMITS) as srv:
+        futs = [srv.submit(a) for a in arrays]
+        srv.flush()
+        outs = [f.result(120) for f in futs]
+    snap = flight.RECORDER.snapshot()
+    flight.RECORDER.reset()
+    return snap, outs
+
+
+def test_export_builds_linked_chrome_trace(tmp_path):
+    snap, outs = _snapshot_from_live_server()
+    events = obsctl.snapshot_to_chrome(snap)
+    assert all(e["ph"] in ("X", "M") for e in events)
+    slices = [e for e in events if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in slices)
+    names = {e["name"] for e in slices}
+    assert {"flush", "stage", "sort", "d2h", "queue_wait",
+            "execute"} <= names
+    # linkage: each request slice points at the flush row's id
+    flush_ids = {e["args"]["flush_id"] for e in slices
+                 if e["name"] == "flush"}
+    for e in slices:
+        if e["name"] in ("queue_wait", "execute"):
+            assert e["args"]["flush_id"] in flush_ids
+    # the CLI wraps the same events in a traceEvents doc
+    out = tmp_path / "trace.json"
+    snap_path = tmp_path / "snap.json"
+    snap_path.write_text(json.dumps(snap))
+    assert obsctl.main(["export", str(snap_path), "--out", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert len(doc["traceEvents"]) == len(events)
+
+
+def test_export_single_trace_filter():
+    snap, outs = _snapshot_from_live_server()
+    want = outs[0].meta.trace_id
+    events = obsctl.snapshot_to_chrome(snap, trace_id=want)
+    req_events = [e for e in events if e["ph"] == "X"
+                  and e["name"] in ("queue_wait", "execute")]
+    assert req_events
+    assert {e["args"]["trace_id"] for e in req_events} == {want}
+    # only the one linking flush row survives the filter
+    assert sum(1 for e in events if e["name"] == "flush") == 1
+
+
+def test_slow_cli_ranks_requests(tmp_path, capsys):
+    snap, outs = _snapshot_from_live_server()
+    snap_path = tmp_path / "snap.json"
+    snap_path.write_text(json.dumps(snap))
+    assert obsctl.main(["slow", str(snap_path), "-n", "2"]) == 0
+    text = capsys.readouterr().out
+    assert "trace_id" in text
+    # exactly 2 data rows (plus the header)
+    assert len(text.strip().splitlines()) == 3
+
+
+def test_slow_reads_newest_incident_from_dir(tmp_path, capsys):
+    snap, _ = _snapshot_from_live_server()
+    (tmp_path / "incident_deadline_miss_00001.json").write_text(
+        json.dumps({"schema": 1, "requests": []}))
+    (tmp_path / "incident_deadline_miss_00002.json").write_text(
+        json.dumps(snap))
+    assert obsctl.main(["slow", str(tmp_path)]) == 0
+    assert len(capsys.readouterr().out.strip().splitlines()) > 1
