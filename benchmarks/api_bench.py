@@ -11,7 +11,10 @@ host decode (``REPRO_API_SMOKE=1`` = CI correctness-only mode, tiny
 input, no wall-clock assert). ``multikey_pack`` is the packing gate: a
 2^20-element three-narrow-key sort must run >=2x faster fused into one
 packed int32 pass than as LSD stable passes (same smoke convention).
-``api_matrix`` records wall time and achieved balance of
+``x64_pack`` is the same gate one word up: under scoped x64 mode an
+(int64 timestamp, int32 shard) tuple — over the 31-bit budget, inside
+63 — must run >=2x faster fused into ONE packed int64 pass than as LSD
+stable passes. ``api_matrix`` records wall time and achieved balance of
 planner-dispatched sorts per backend/size/dtype for the cross-PR JSON
 trajectory. ``tune_dispatch`` is the cost-model gate: a calibrated
 ``repro.tune`` store must never steer the planner to a backend >1.25x
@@ -198,6 +201,67 @@ def multikey_pack():
     if not SMOKE:
         assert speedup >= 2.0, (
             f"packed multi-key speedup {speedup:.2f}x < 2x over LSD"
+        )
+
+
+def x64_pack():
+    """x64 packing gate: under x64 mode, an (int64 timestamp, int32
+    shard) tuple must run >=2x faster fused into ONE packed int64 pass
+    than as LSD stable passes on a 2^20 sort.
+
+    The tuple's 42 measured bits (a ~2^34 timestamp spread + an 8-bit
+    shard id) exceed the default 31-bit budget — in 32-bit mode this
+    workload is rejected at the door — but fit the 63-bit x64 budget,
+    so the planner packs it into a single non-negative int64 word. The
+    mode is entered with the SCOPED ``repro.x64_mode()`` (thread-local
+    jax trace context, restored on exit), so the rest of the suite
+    keeps running the 32-bit contract; ``SortLimits(x64=True)`` would
+    flip jax's global flag for the whole process. Smoke convention as
+    above: REPRO_API_SMOKE=1 gates correctness only, both strategies
+    against the np.lexsort oracle bit for bit.
+    """
+    n = (1 << 12) if SMOKE else (1 << 20)
+    rng = np.random.default_rng(23)
+    with repro.x64_mode():
+        keys = (
+            np.int64(1_700_000_000) + rng.integers(0, 1 << 34, n),  # 34 bits
+            rng.integers(0, 200, n).astype(np.int32),               # 8 bits
+        )
+        lim_packed = repro.SortLimits(multikey="packed",
+                                      stream_threshold=None)
+        lim_lsd = repro.SortLimits(multikey="lsd", stream_threshold=None)
+
+        # correctness first: the plan packs into an int64 word, and both
+        # strategies == np.lexsort, bit for bit
+        plan = repro.plan(keys, config=CFG, limits=lim_packed)
+        assert np.dtype(plan.packspec.pack_dtype) == np.dtype(np.int64)
+        assert plan.key_width == 64
+        expect = np.lexsort((keys[1], keys[0]))
+        out_p = repro.sort(keys, config=CFG, limits=lim_packed)
+        out_l = repro.sort(keys, config=CFG, limits=lim_lsd)
+        assert out_p.meta.multikey == "packed"
+        assert out_l.meta.multikey == "lsd"
+        for a, b, k in zip(out_p.keys, out_l.keys, keys):
+            np.testing.assert_array_equal(a, k[expect])
+            np.testing.assert_array_equal(a, b)
+
+        def run(limits):
+            o = repro.sort(keys, config=CFG, limits=limits)
+            return jax.block_until_ready([np.asarray(c) for c in o.keys])
+
+        iters = 3 if SMOKE else 7
+        us_packed, us_lsd = gate_ratio(lambda: run(lim_packed),
+                                       lambda: run(lim_lsd),
+                                       warmup=2, iters=iters)
+    speedup = us_lsd / us_packed
+    emit("api_x64_multikey_lsd", us_lsd, backend="sim", size=n,
+         dtype="int64+int32", smoke=SMOKE)
+    emit("api_x64_multikey_packed", us_packed,
+         f"speedup={speedup:.2f}x_vs_lsd", backend="sim", size=n,
+         dtype="int64+int32", speedup=round(speedup, 2), smoke=SMOKE)
+    if not SMOKE:
+        assert speedup >= 2.0, (
+            f"x64 packed multi-key speedup {speedup:.2f}x < 2x over LSD"
         )
 
 

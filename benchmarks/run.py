@@ -97,6 +97,9 @@ def main() -> None:
             "trace_overhead": api_bench.trace_overhead,
             "api_matrix": api_bench.api_matrix,
             "tune_dispatch": api_bench.tune_dispatch,
+            # LAST in the suite: enters scoped x64 mode — nothing after
+            # it should depend on a freshly 32-bit jit cache
+            "x64_pack": api_bench.x64_pack,
         },
         "serve": {
             "serve_throughput": serve_bench.serve_throughput,

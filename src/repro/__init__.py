@@ -37,11 +37,14 @@ from repro.core import (
     SortOutput,
     SortOverflowError,
     SortPlan,
+    enable_x64,
     explain,
     load_imbalance,
     plan,
     register_backend,
     sort,
+    x64_enabled,
+    x64_mode,
 )
 
 __all__ = [
@@ -49,4 +52,5 @@ __all__ = [
     "SortOutput", "SortMeta", "SortPlan", "SortLimits", "SortConfig",
     "OverflowPolicy", "SortOverflowError", "register_backend",
     "SortLibrary", "load_imbalance", "tune",
+    "enable_x64", "x64_enabled", "x64_mode",
 ]

@@ -21,6 +21,7 @@ from repro.core.splitters import (
     select_splitters,
 )
 from repro.core.sim import sample_sort_sim, sample_sort_sim_kv, SortResult, SortKVResult
+from repro.core.x64 import enable_x64, x64_enabled, x64_mode
 from repro.core.sample_sort import (
     distributed_sort,
     distributed_sort_kv,
@@ -38,4 +39,5 @@ __all__ = [
     "sample_sort_shard", "sample_sort_shard_kv",
     "investigator_bounds", "naive_bounds", "regular_sample", "select_splitters",
     "encode_provenance", "decode_provenance", "load_imbalance",
+    "enable_x64", "x64_enabled", "x64_mode",
 ]

@@ -30,11 +30,11 @@ Multi-key strategy (``plan.multikey``)
 A key tuple runs as ONE fused sort whenever it can: the planner
 measures each key's effective bit width (the bits of its monotone
 unsigned rank range — sign-xor for ints, the IEEE total-order bit trick
-for float32) plus the per-key order flips, and when the widths sum to
+for floats) plus the per-key order flips, and when the widths sum to
 <= 31 it packs the tuple into a single non-negative int32 key
 (``keyenc.pack_keys``) sorted ascending in one pass — the decision rule
 is ``plan.multikey == "packed"``, surfaced with its widths by
-``repro.explain``. Anything unpackable — total width over 31 bits
+``repro.explain``. Anything unpackable — total width over the budget
 (e.g. any full-range uint32/int32 column, a float column whose values
 cross zero), an unpackable dtype (bfloat16), NaN floats — falls back to
 ``"lsd"``: one stable argsort pass per key, with the fallback cause in
@@ -44,19 +44,58 @@ declares per-key widths (values promised in ``[0, 2**bits)``, validated
 at pack time) so the pack recipe — and therefore the async server's
 coalescing bucket — stays identical across requests instead of being
 re-measured per dataset. The 31-bit budget is a hard consequence of the
-32-bit mode below: the packed key must stay a non-negative int32, and
-64-bit keys remain rejected everywhere. Packed PAYLOAD sorts have one
-representability edge: a tuple saturating a full 31-bit pack lands on
-the int32 padding sentinel and raises a ``ValueError`` naming the
-packed value and its source columns (narrower packs cannot collide;
-packed keys-only sorts are unrestricted).
+default 32-bit mode below: the packed key must stay a non-negative
+int32. Opting into x64 mode widens the budget to 63 bits (a
+non-negative int64 word — see the x64 section); the narrow word is
+still used whenever the tuple fits 31 bits, so plans and programs are
+identical across modes for narrow tuples. Packed PAYLOAD sorts have
+one representability edge: a tuple saturating a full 31-bit pack (63
+under x64) lands on the pack word's padding sentinel — int32 max, or
+int64 max (9223372036854775807) for a wide pack — and raises a
+``ValueError`` naming the packed value and its source columns
+(narrower packs cannot collide; packed keys-only sorts are
+unrestricted).
+
+x64 mode (opt-in 64-bit keys and payloads)
+------------------------------------------
+The library defaults to jax's 32-bit mode: 64-bit dtypes are rejected
+at the door (below) because without ``jax_enable_x64`` they would be
+silently truncated on device. The x64 opt-in lifts that contract end
+to end, mirroring the ``jax_enable_x64`` config pattern
+(``repro.core.x64``):
+
+* ``REPRO_X64=1`` in the environment (read lazily, before the first
+  sort);
+* ``repro.enable_x64()`` process-wide (also flips jax's own flag —
+  required for 64-bit device arrays, and the only switch a
+  ``SortServer`` flush thread sees); ``repro.x64_mode()`` is the
+  scoped context-manager variant for tests/benchmarks;
+* ``SortLimits(x64=True)`` per request — and ``SortLimits(x64=False)``
+  pins a request to the 32-bit contract even when the ambient mode is
+  on (the differential escape hatch).
+
+With the mode on, int64/uint64/float64 keys and values are admitted on
+every backend (sentinels and staging are dtype-driven, so the widening
+is automatic), ``plan.key_width`` records the admitted lane width, and
+the multi-key pack budget becomes 63 bits: an (int64 timestamp, int32
+shard id) tuple — ~34 measured bits + 8 — fuses into ONE int64 sort
+instead of per-key LSD passes (the ``x64_pack`` bench gate holds the
+speedup). Caveats: a float64 column whose values cross zero measures a
+~64-bit rank range and will not pack (LSD fallback, same rule as
+float32 in narrow mode — packing needs a narrow exponent band or
+declared ``key_bits``); a tuple saturating exactly 63 bits reaches the
+int64 padding sentinel (payload-sort ``ValueError`` above). The
+default mode is UNCHANGED: with the mode off, 32-bit plans, programs,
+and outputs are bit-identical to previous releases, and 32/64-bit
+serve requests never share a coalescing bucket or cached program.
 
 Documented limitations
 ----------------------
-* jax runs in 32-bit mode here, so 64-bit key and value dtypes are
-  rejected at input checking with a ``TypeError`` (for iterator/stream
-  inputs, at the first staged chunk) rather than silently truncated on
-  device — cast to int32/uint32/float32 first. Note numpy defaults
+* In the default 32-bit mode, 64-bit key and value dtypes are rejected
+  at input checking with a ``TypeError`` (for iterator/stream inputs,
+  at each staged chunk — the earliest point their dtype is knowable)
+  rather than silently truncated on device; the error names the x64
+  opt-in and the nearest 32-bit dtype to cast to. Note numpy defaults
   Python ints to int64 (``np.arange(n)`` included).
 * sorts that carry a payload (``values`` or ``want="order"``) cannot
   contain the key that collides with the padding sentinel — the dtype
@@ -268,7 +307,8 @@ def encode_provenance(p: int, n_local: int) -> jnp.ndarray:
     Unique and increasing in (proc, idx) — makes every kv sort exactly
     stable and lets users recover ``(previous processor, location)`` the way
     the paper's library does. int32 bounds the sortable volume at 2^31
-    elements; production would widen to int64 (x64 mode) — documented.
+    elements; past that, opt into x64 mode (``repro.enable_x64()``) and
+    build the payload as int64 — the door check admits it.
     """
     return (jnp.arange(p * n_local, dtype=jnp.int32)).reshape(p, n_local)
 

@@ -18,16 +18,19 @@ re-implementing it:
                    (``plan.multikey``):
                    ``"packed"`` — when the tuple's effective bit widths
                    (measured from the data, or declared via
-                   ``SortLimits.key_bits``) sum to <= 31, the columns are
-                   fused into ONE non-negative int32 key (``pack_keys``):
+                   ``SortLimits.key_bits``) fit the pack budget — 31 bits
+                   in the default 32-bit mode, 63 under the x64 opt-in
+                   (``core.x64``) — the columns are fused into ONE
+                   non-negative integer key (``pack_keys``; int32 for
+                   packs <= 31 bits, int64 above — ``PackSpec.pack_dtype``):
                    each column becomes a bit field holding its monotone
                    unsigned rank (sign-xor for ints, the IEEE total-order
-                   bit trick for float32, minus the measured range
-                   offset), per-key descending flags reverse the field in
-                   place, and the single ascending int32 sort IS the
-                   lexicographic sort — one exchange pass instead of one
-                   stable pass per key, and (keys-only) coalescable by
-                   the serve flush engine.
+                   bit trick for float32/float64, minus the measured
+                   range offset), per-key descending flags reverse the
+                   field in place, and the single ascending integer sort
+                   IS the lexicographic sort — one exchange pass instead
+                   of one stable pass per key, and (keys-only)
+                   coalescable by the serve flush engine.
                    ``"lsd"`` — the fallback: stable argsort by the last
                    key, then by each earlier key over the gathered order
                    — the classic radix-over-columns construction on top
@@ -55,9 +58,10 @@ either direction: a sentinel-valued key is value-identical to a pad, so
 the decoded keys are still bit-exact. NaN keys are unsupported
 throughout (seed-era limitation: they sort past the padding sentinel).
 For PACKED multi-key payload sorts the restriction lives in the packed
-space: a tuple saturating a full 31-bit pack lands on the int32
-sentinel, and ``check_payload_keys`` names both the packed value and
-the source column values (packs under 31 total bits cannot collide at
+space: a tuple saturating a full-budget pack (exactly 31 bits into
+int32, or — under x64 mode — exactly 63 bits into int64) lands on the
+pack dtype's sentinel, and ``check_payload_keys`` names both the packed
+value and the source column values (narrower packs cannot collide at
 all, and packed keys-only sorts are unrestricted).
 """
 from __future__ import annotations
@@ -95,20 +99,41 @@ def decode_np(keys: np.ndarray, descending: bool) -> np.ndarray:
 # ------------------------------------------------- multi-key bit packing
 
 PACK_BUDGET_BITS = 31
-"""Packed keys are NON-NEGATIVE int32 fields: 31 usable bits. jax runs
-in 32-bit mode here (64-bit keys are rejected at the door), so a wider
-pack has nowhere to go; tuples whose widths exceed the budget fall back
-to the LSD stable passes. Staying non-negative also keeps the whole
-packed space below the int32 padding sentinel except for the single
-saturated value of an exactly-31-bit pack (see ``check_payload_keys``)."""
+"""Packed keys are NON-NEGATIVE integer fields. In the default 32-bit
+mode the pack is an int32: 31 usable bits — without jax x64 a wider
+pack has nowhere to go, and tuples whose widths exceed the budget fall
+back to the LSD stable passes. Staying non-negative also keeps the
+whole packed space below the padding sentinel except for the single
+saturated value of an exactly-full pack (see ``check_payload_keys``)."""
+
+PACK_BUDGET_BITS_X64 = 63
+"""The x64-mode budget (``core.x64`` opt-in): a non-negative int64 pack
+holds 63 usable bits, so (timestamp, shard)-style tuples that overflow
+the 31-bit budget fuse into ONE int64 sort instead of LSD passes.
+Packs that fit 31 bits still pack into int32 (``PackSpec.pack_dtype``)
+— the 32-bit path is bit-identical with the mode on or off."""
+
+
+def pack_budget_bits() -> int:
+    """The ambient pack budget: 63 when x64 mode is on, else 31."""
+    from repro.core import x64 as _x64
+
+    return PACK_BUDGET_BITS_X64 if _x64.x64_enabled() else PACK_BUDGET_BITS
+
 
 _PACK_KINDS = {
-    "uint8": "uint", "uint16": "uint", "uint32": "uint",
-    "int8": "int", "int16": "int", "int32": "int",
-    "float32": "float",
+    "uint8": "uint", "uint16": "uint", "uint32": "uint", "uint64": "uint",
+    "int8": "int", "int16": "int", "int32": "int", "int64": "int",
+    "float32": "float", "float64": "float",
 }
 
 _SIGN32 = 1 << 31
+_SIGN64 = 1 << 63
+
+
+def _rank_wide(dtype_name: str) -> bool:
+    """Does this column rank in uint64 space (8-byte dtype) or uint32?"""
+    return np.dtype(dtype_name).itemsize == 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,10 +162,14 @@ class KeyFieldSpec:
 
 @dataclasses.dataclass(frozen=True)
 class PackSpec:
-    """Complete recipe for fusing a key tuple into one int32 — hashable,
-    so it keys jit static arguments, compiled-program caches and the
-    serve flush buckets. MSB-first: field 0 (the primary key) occupies
-    the most significant bits."""
+    """Complete recipe for fusing a key tuple into one integer key —
+    hashable, so it keys jit static arguments, compiled-program caches
+    and the serve flush buckets. MSB-first: field 0 (the primary key)
+    occupies the most significant bits. The pack WIDTH is a derived
+    property, not stored state: packs that fit 31 bits are int32, wider
+    packs (x64 mode only) are int64 — so a narrow tuple planned under
+    x64 mode produces the same spec, program keys and packed bits as
+    the 32-bit mode would."""
 
     fields: tuple
 
@@ -148,13 +177,36 @@ class PackSpec:
     def total_bits(self) -> int:
         return sum(f.width for f in self.fields)
 
+    @property
+    def pack_bits(self) -> int:
+        """Usable bits of the pack word this spec occupies (31 or 63)."""
+        return (PACK_BUDGET_BITS if self.total_bits <= PACK_BUDGET_BITS
+                else PACK_BUDGET_BITS_X64)
+
+    @property
+    def pack_dtype(self):
+        """numpy dtype of the packed key: int32, or int64 for wide packs."""
+        return np.int32 if self.pack_bits == PACK_BUDGET_BITS else np.int64
+
     def describe(self) -> str:
         widths = "+".join(str(f.width) for f in self.fields)
-        return f"widths {widths}={self.total_bits}/{PACK_BUDGET_BITS} bits"
+        return f"widths {widths}={self.total_bits}/{self.pack_bits} bits"
 
 
-def _rank_np(col: np.ndarray, kind: str) -> np.ndarray:
-    """Monotone map of a column into uint32 rank space (host side)."""
+def _rank_np(col: np.ndarray, kind: str, *, wide: bool = False) -> np.ndarray:
+    """Monotone map of a column into unsigned rank space (host side):
+    uint32 for <=4-byte dtypes, uint64 for the x64-mode 8-byte ones."""
+    if wide:
+        if kind == "float":
+            b = np.ascontiguousarray(col, np.float64).view(np.uint64)
+            mask = np.where(b >> np.uint64(63),
+                            np.uint64(0xFFFFFFFFFFFFFFFF), np.uint64(_SIGN64))
+            return b ^ mask
+        if kind == "int":
+            # sign-bit xor == add 2^63 mod 2^64: the int64 order as uint64
+            return np.ascontiguousarray(col, np.int64).view(np.uint64) \
+                ^ np.uint64(_SIGN64)
+        return col.astype(np.uint64)
     if kind == "float":
         b = np.ascontiguousarray(col, np.float32).view(np.uint32)
         # IEEE-754 total-order trick: flip all bits of negatives, only
@@ -168,6 +220,14 @@ def _rank_np(col: np.ndarray, kind: str) -> np.ndarray:
 
 
 def _unrank_np(rank: np.ndarray, f: KeyFieldSpec) -> np.ndarray:
+    if _rank_wide(f.dtype):
+        if f.kind == "float":
+            mask = np.where(rank >> np.uint64(63), np.uint64(_SIGN64),
+                            np.uint64(0xFFFFFFFFFFFFFFFF))
+            return (rank ^ mask).view(np.float64)
+        if f.kind == "int":
+            return (rank ^ np.uint64(_SIGN64)).view(np.int64)
+        return rank.astype(f.dtype)
     if f.kind == "float":
         mask = np.where(rank >> np.uint32(31), np.uint32(0x80000000),
                         np.uint32(0xFFFFFFFF))
@@ -177,24 +237,29 @@ def _unrank_np(rank: np.ndarray, f: KeyFieldSpec) -> np.ndarray:
     return rank.astype(f.dtype)
 
 
-def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None):
-    """Decide whether a key tuple can fuse into one packed int32 sort.
+def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None,
+              budget: int | None = None):
+    """Decide whether a key tuple can fuse into one packed integer sort.
 
     Measures each column's effective width (rank-range bits) unless
     ``key_bits`` declares it — a declared width ``w`` promises the
     column's values lie in ``[0, 2**w)`` (ints only; float widths are
     always measured, since a bit budget over the IEEE rank space is not
     a meaningful caller contract) and is validated at pack time. Returns
-    ``(PackSpec, reason)`` when the widths fit ``PACK_BUDGET_BITS``,
-    else ``(None, reason)`` — the planner records either way.
+    ``(PackSpec, reason)`` when the widths fit ``budget`` — the
+    planner passes its mode-resolved budget (31, or 63 under x64 mode);
+    None reads the ambient ``pack_budget_bits()`` — else
+    ``(None, reason)``; the planner records either way.
 
     ``ranks``: optional dict the caller passes to capture the measured
-    uint32 rank array per column index, so ``pack_keys(..., ranks=...)``
+    unsigned rank array per column index, so ``pack_keys(..., ranks=...)``
     does not recompute the O(n) monotone transform the measurement
     already paid for (PackSpec itself must stay a small hashable recipe
     — it keys jit static args and serve buckets — so the arrays ride
     this side channel instead).
     """
+    if budget is None:
+        budget = pack_budget_bits()
     if key_bits is not None:
         if not isinstance(key_bits, tuple):
             raise ValueError(
@@ -212,22 +277,24 @@ def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None):
         kind = _PACK_KINDS.get(name)
         if kind is None:
             return None, f"key {i} dtype {name} is not packable"
+        wide = _rank_wide(name)
         declared = key_bits[i] if key_bits is not None else None
         if declared is not None:
             if kind == "float":
                 raise ValueError(
                     f"SortLimits.key_bits[{i}]: declared widths are "
-                    f"unsupported for float32 keys — float field widths "
+                    f"unsupported for {name} keys — float field widths "
                     f"are measured from the monotone rank range (pass "
                     f"None for this key)"
                 )
             declared = int(declared)
-            if not 0 <= declared <= 32:
+            bits_max = 8 * np.dtype(name).itemsize
+            if not 0 <= declared <= bits_max:
                 raise ValueError(
                     f"SortLimits.key_bits[{i}]={declared} out of range "
-                    f"[0, 32]"
+                    f"[0, {bits_max}]"
                 )
-            lo = _SIGN32 if kind == "int" else 0
+            lo = (_SIGN64 if wide else _SIGN32) if kind == "int" else 0
             fields.append(KeyFieldSpec(name, kind, lo, declared,
                                        bool(desc), declared=True))
             continue
@@ -240,41 +307,53 @@ def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None):
         if col.size == 0:
             lo, width = 0, 0
         else:
-            r = _rank_np(col, kind)
+            r = _rank_np(col, kind, wide=wide)
             if ranks is not None:
                 ranks[i] = r
             lo = int(r.min())
             width = int(int(r.max()) - lo).bit_length()
         fields.append(KeyFieldSpec(name, kind, lo, width, bool(desc)))
     spec = PackSpec(tuple(fields))
-    if spec.total_bits > PACK_BUDGET_BITS:
+    if spec.total_bits > budget:
+        widths = "+".join(str(f.width) for f in spec.fields)
+        hint = ""
+        if (budget == PACK_BUDGET_BITS
+                and spec.total_bits <= PACK_BUDGET_BITS_X64):
+            hint = (
+                " (would fit the 63-bit x64 budget: opt in with "
+                "repro.enable_x64() / REPRO_X64=1 / SortLimits(x64=True))"
+            )
         return None, (
-            f"total width {spec.describe().split(' ', 1)[1]} exceeds the "
-            f"{PACK_BUDGET_BITS}-bit pack budget"
+            f"total width {widths}={spec.total_bits} bits exceeds the "
+            f"{budget}-bit pack budget{hint}"
         )
     return spec, spec.describe()
 
 
 def pack_keys(klist, spec: PackSpec, ranks: dict | None = None) -> np.ndarray:
-    """Fuse the key tuple into the packed non-negative int32 array.
+    """Fuse the key tuple into the packed non-negative integer array
+    (int32 for <=31-bit specs, int64 above — ``spec.pack_dtype``).
 
     Host-side numpy (multi-key inputs are host arrays after request
-    normalization): per column, monotone uint32 rank minus the spec
+    normalization): per column, monotone unsigned rank minus the spec
     offset, order-reversed within the field for descending keys, then
-    accumulated MSB-first. Declared (``key_bits``) widths are validated
-    here — a value outside the promised range raises instead of packing
-    a corrupt key. ``ranks``: per-column rank arrays already computed by
-    ``plan_pack`` measurement (skips recomputing the monotone
-    transform)."""
-    acc = np.zeros(np.asarray(klist[0]).reshape(-1).shape[0], np.int64)
+    accumulated MSB-first into a uint64 word (explicit casts throughout:
+    numpy would otherwise promote mixed int64/uint64 column math to
+    float64 and corrupt high bits). Declared (``key_bits``) widths are
+    validated here — a value outside the promised range raises instead
+    of packing a corrupt key. ``ranks``: per-column rank arrays already
+    computed by ``plan_pack`` measurement (skips recomputing the
+    monotone transform)."""
+    acc = np.zeros(np.asarray(klist[0]).reshape(-1).shape[0], np.uint64)
     for i, (col, f) in enumerate(zip(klist, spec.fields)):
         col = np.asarray(col).reshape(-1)
         r = ranks.get(i) if ranks is not None else None
         if r is None:
-            r = _rank_np(col, f.kind)
-        field = (r - np.uint32(f.lo)).astype(np.uint32)
-        if f.declared and f.width < 32:
-            over = field >> np.uint32(f.width)
+            r = _rank_np(col, f.kind, wide=_rank_wide(f.dtype))
+        rt = r.dtype.type  # np.uint32 | np.uint64 — stay in rank space
+        field = (r - rt(f.lo)).astype(r.dtype)
+        if f.declared and f.width < 8 * r.dtype.itemsize:
+            over = field >> rt(f.width)
             if bool(over.any()):
                 j = int(np.argmax(over != 0))
                 raise ValueError(
@@ -284,45 +363,65 @@ def pack_keys(klist, spec: PackSpec, ranks: dict | None = None) -> np.ndarray:
                     f"declaration or pass None to measure this key"
                 )
         if f.descending:
-            field = np.uint32((1 << f.width) - 1) - field
-        acc = (acc << np.int64(f.width)) | field.astype(np.int64)
-    return acc.astype(np.int32)
+            field = rt((1 << f.width) - 1) - field
+        acc = (acc << np.uint64(f.width)) | field.astype(np.uint64)
+    return acc.astype(spec.pack_dtype)
 
 
 def unpack_np(packed: np.ndarray, spec: PackSpec) -> tuple:
     """Host-side inverse of ``pack_keys`` — the ``decode="host"`` /
     stream-backend twin of the device ``unpack_fields``."""
-    u = np.asarray(packed).astype(np.int64)
+    u = np.asarray(packed).astype(np.uint64)
     cols = []
     shift = spec.total_bits
     for f in spec.fields:
         shift -= f.width
         mask = (1 << f.width) - 1
-        field = ((u >> shift) & mask).astype(np.uint32)
+        rt = np.uint64 if _rank_wide(f.dtype) else np.uint32
+        field = ((u >> np.uint64(shift)) & np.uint64(mask)).astype(rt)
         if f.descending:
-            field = np.uint32(mask) - field
-        cols.append(_unrank_np(field + np.uint32(f.lo), f))
+            field = rt(mask) - field
+        cols.append(_unrank_np(field + rt(f.lo), f))
     return tuple(cols)
 
 
 def unpack_fields(packed: jnp.ndarray, spec: PackSpec) -> tuple:
-    """Device-side unpack: packed int32 -> the original tuple columns.
+    """Device-side unpack: packed int32/int64 -> the original columns.
 
     Pure elementwise bit surgery (shift/mask, the field reversal for
     descending keys, and the inverse rank transforms), so it fuses into
     whatever jitted program holds the packed result — ``decode_grid``
     for ``repro.sort`` materialization, ``sim.sample_sort_sim_flat``
-    for coalesced serve flushes. ``spec`` is a static (hashable) arg."""
-    u = packed.astype(jnp.uint32)
+    for coalesced serve flushes. ``spec`` is a static (hashable) arg.
+    Wide (int64) packs require jax x64 mode in the tracing context —
+    guaranteed by construction, since producing an int64 pack required
+    it; an int64 column whose measured range fits a 31-bit int32 pack
+    still ranks in uint64 space here."""
+    wide_word = spec.total_bits > PACK_BUDGET_BITS
+    word = jnp.uint64 if wide_word else jnp.uint32
+    u = packed.astype(word)
     cols = []
     shift = spec.total_bits
     for f in spec.fields:
         shift -= f.width
-        mask = jnp.uint32((1 << f.width) - 1)
+        mask = word((1 << f.width) - 1)
         field = (u >> shift) & mask if f.width else jnp.zeros_like(u)
         if f.descending:
             field = mask - field
-        rank = field + jnp.uint32(f.lo)
+        if _rank_wide(f.dtype):
+            rank = field.astype(jnp.uint64) + jnp.uint64(f.lo)
+            if f.kind == "float":
+                m = jnp.where(rank >> 63 != 0, jnp.uint64(_SIGN64),
+                              jnp.uint64(0xFFFFFFFFFFFFFFFF))
+                cols.append(
+                    jax.lax.bitcast_convert_type(rank ^ m, jnp.float64))
+            elif f.kind == "int":
+                cols.append(jax.lax.bitcast_convert_type(
+                    rank ^ jnp.uint64(_SIGN64), jnp.int64))
+            else:
+                cols.append(rank.astype(f.dtype))
+            continue
+        rank = field.astype(jnp.uint32) + jnp.uint32(f.lo)
         if f.kind == "float":
             m = jnp.where(rank >> 31 != 0, jnp.uint32(0x80000000),
                           jnp.uint32(0xFFFFFFFF))
@@ -348,7 +447,7 @@ def unpack_chunk(packed: np.ndarray, spec: PackSpec) -> tuple:
 
     The per-chunk twin of the fused unpack ``decode_grid`` runs for
     sim/mesh materialization: the stream backend's sorted output arrives
-    as host chunks of the packed int32 key, and this pushes each chunk
+    as host chunks of the packed integer key, and this pushes each chunk
     back through ``unpack_fields`` on device (padded to the next power
     of two for program reuse, sliced back after D2H) so packed
     multi-key results stream via ``SortOutput.chunks()`` without a host
@@ -388,27 +487,29 @@ def check_payload_keys(keys, descending: bool, *, packspec=None) -> None:
     bit-exact.
 
     ``packspec``: set when ``keys`` is a PACKED multi-key array — only
-    an exactly-31-bit pack can reach the int32 sentinel (every narrower
+    an exactly-full pack (31 bits into int32, or 63 bits into the
+    x64-mode int64) can reach its pack dtype's sentinel (every narrower
     pack tops out below it), and the error then names the packed value
     AND the source column values it decodes to, so the caller can see
     which tuple saturated the budget.
     """
     if packspec is not None:
-        if packspec.total_bits < PACK_BUDGET_BITS:
-            return  # packed space tops out below the int32 sentinel
-        bad = np.int32(np.iinfo(np.int32).max)
+        if packspec.total_bits < packspec.pack_bits:
+            return  # packed space tops out below the pack-dtype sentinel
+        pdt = np.dtype(packspec.pack_dtype)
+        bad = pdt.type(np.iinfo(pdt).max)
         hits = np.asarray(keys) == bad
         if not bool(hits.any()):
             return
         row = int(np.argmax(hits))
-        src = unpack_np(np.asarray([bad], np.int32), packspec)
+        src = unpack_np(np.asarray([bad], pdt), packspec)
         cols = ", ".join(
             f"key {i} ({f.dtype})={c[0]!r}"
             for i, (c, f) in enumerate(zip(src, packspec.fields))
         )
         raise ValueError(
             f"multi-key sort with a payload cannot represent the packed "
-            f"key {int(bad)} (it is the int32 padding sentinel: this "
+            f"key {int(bad)} (it is the {pdt.name} padding sentinel: this "
             f"tuple saturates the full {packspec.total_bits}-bit pack, "
             f"first at row {row}) — source columns: {cols}. Shift or "
             f"drop those rows, force the LSD fallback with "

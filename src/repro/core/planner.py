@@ -56,25 +56,55 @@ _SORTS_TOTAL = obs_metrics.counter(
 )
 
 
-def check_key_dtype(dt, what: str = "keys") -> None:
-    """Reject 64-bit dtypes at the door with an actionable message.
+# the cast remedy named in the 64-bit rejection, per offending dtype
+_NEAREST_NARROW = {"int64": "int32", "uint64": "uint32", "float64": "float32"}
 
-    jax runs in 32-bit mode here: the device sort would silently truncate
-    64-bit keys/payloads, and the int64 padding sentinel overflows deep in
-    the kernel with an opaque error. Applied to key arrays and value
+
+def check_key_dtype(dt, what: str = "keys", *, x64: bool | None = None) -> None:
+    """Reject 64-bit dtypes at the door — unless x64 mode admits them.
+
+    In the default 32-bit mode the device sort would silently truncate
+    64-bit keys/payloads, and the int64 padding sentinel overflows deep
+    in the kernel with an opaque error — so the rejection happens here,
+    with the remedy spelled out: the x64 opt-in (``repro.enable_x64()``
+    / ``REPRO_X64=1`` / ``SortLimits(x64=True)``, see ``core.x64``) or a
+    cast to the nearest 32-bit dtype. Applied to key arrays and value
     payloads at ``repro.sort`` input checking, and to every staged chunk
     of iterator (stream) inputs — the earliest point their dtype is
-    knowable. Documented limitation; x64-mode support is a ROADMAP item.
+    knowable. ``x64=None`` reads the ambient mode; the planner passes
+    the request's resolved mode so ``SortLimits(x64=...)`` wins.
     """
     if str(dt) == "bfloat16":
         return  # sorted as f32 on device — supported
-    if np.dtype(str(dt)).itemsize > 4:
-        raise TypeError(
-            f"64-bit {what} ({dt}) need jax x64 mode, which this library "
-            f"runs without: the device sort would truncate to 32 bits and "
-            f"the padding sentinel overflows. Cast to int32/uint32/float32 "
-            f"first (note np defaults Python ints to int64)."
-        )
+    if np.dtype(str(dt)).itemsize <= 4:
+        return
+    if x64 is None:
+        from repro.core import x64 as _x64
+
+        x64 = _x64.x64_enabled()
+    if x64:
+        return
+    narrow = _NEAREST_NARROW.get(str(dt), "a 32-bit dtype")
+    raise TypeError(
+        f"64-bit {what} ({dt}) need x64 mode, which is off: without jax "
+        f"x64 the device sort would truncate to 32 bits and the padding "
+        f"sentinel overflows. Opt in with repro.enable_x64(), REPRO_X64=1, "
+        f"or SortLimits(x64=True) — or cast to {narrow} first (note np "
+        f"defaults Python ints to int64)."
+    )
+
+
+def _effective_x64(limits) -> bool:
+    """Resolve a request's x64 mode: ``SortLimits.x64`` wins, else the
+    ambient switch. A per-request ``x64=True`` also flips jax's own
+    x64 flag — 64-bit device arrays are impossible without it."""
+    from repro.core import x64 as _x64
+
+    if limits is not None and limits.x64 is not None:
+        if limits.x64:
+            _x64.ensure_jax_x64()
+        return bool(limits.x64)
+    return _x64.x64_enabled()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +133,9 @@ class SortLimits:
       decode — per-row unpad+concat, host flip, host tie fix — for
       differential testing and the decode benchmark baseline.
     multikey: multi-key strategy. ``"auto"`` (default) fuses the tuple
-      into ONE packed int32 sort when the per-key effective bit widths
-      fit ``keyenc.PACK_BUDGET_BITS`` (31 — jax runs in 32-bit mode),
+      into ONE packed integer sort when the per-key effective bit widths
+      fit the pack budget (``keyenc.PACK_BUDGET_BITS`` = 31 in the
+      default 32-bit mode; 63 under x64 mode, packing into int64),
       else falls back to the LSD stable passes; ``"packed"`` requires
       packing (raises with the fallback reason when the tuple cannot
       pack); ``"lsd"`` always runs the stable passes (the differential-
@@ -127,6 +158,14 @@ class SortLimits:
       is real wall time per phase, not dispatch time. Default False:
       the untraced hot path is unchanged. An ambient ``obs.trace()``
       block traces regardless of this flag.
+    x64: per-request x64-mode override (see ``core.x64``). None
+      (default) follows the ambient switch (``repro.enable_x64()`` /
+      ``REPRO_X64=1``); True admits 64-bit keys/values for THIS request
+      (and ensures jax's own x64 flag, so device arrays really are
+      64-bit); False pins the request to the 32-bit contract even when
+      the ambient mode is on — the differential-testing escape hatch.
+      With the mode off (resolved False) plans and outputs are
+      bit-identical to the 32-bit-only library.
     """
 
     n_procs: int = 8
@@ -140,6 +179,7 @@ class SortLimits:
     multikey: str = "auto"
     key_bits: tuple | None = None
     trace: bool = False
+    x64: bool | None = None
 
     def policy(self) -> OverflowPolicy:
         return OverflowPolicy(
@@ -168,6 +208,11 @@ class SortPlan:
     cost_predicted: Any = None   # {backend: {"us", "confidence"}} — the
     #                              model's per-candidate predictions, kept
     #                              even when below the confidence bar
+    key_width: int = 32          # key lane width in bits (64 only under
+    #                              x64 mode; iterator inputs record the
+    #                              widest admissible width)
+    x64: bool = False            # the request's RESOLVED x64 mode
+    #                              (SortLimits.x64 or the ambient switch)
 
     def explain(self) -> str:
         lines = [f"repro.sort plan: backend={self.backend!r}"]
@@ -191,6 +236,7 @@ class SortPlan:
         lines.append(
             f"  n_procs={self.n_procs} chunk_elems={self.chunk_elems} "
             f"decode={self.decode} "
+            f"key_width={self.key_width}{' (x64 mode)' if self.x64 else ''} "
             f"overflow: up to {self.limits.max_doublings} capacity bumps "
             f"(x{self.limits.growth})"
         )
@@ -244,7 +290,8 @@ class _Req:
         return self.want == "order" or self.values is not None
 
 
-def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
+def _normalize(keys, values, *, order, want, config, investigator,
+               x64: bool | None = None) -> _Req:
     if want not in ("values", "order"):
         raise ValueError(f"want must be 'values' or 'order', got {want!r}")
     if want == "order" and values is not None:
@@ -281,7 +328,7 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
         # payload is a corrupted result, not a slow one — same door check
         if not hasattr(values, "dtype"):
             values = np.asarray(values)
-        check_key_dtype(values.dtype, what="values payload")
+        check_key_dtype(values.dtype, what="values payload", x64=x64)
 
     is_iterator = not multikey and not hasattr(keys, "dtype")
     if isinstance(keys, list) and keys and not hasattr(keys[0], "dtype"):
@@ -298,9 +345,9 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
         keys = klist
         dtype = klist[0].dtype
         for k in klist:
-            check_key_dtype(k.dtype)
+            check_key_dtype(k.dtype, x64=x64)
     elif not is_iterator:
-        check_key_dtype(keys.dtype)
+        check_key_dtype(keys.dtype, x64=x64)
         dtype = np.dtype(str(keys.dtype)) if keys.dtype != "bfloat16" else keys.dtype
         if getattr(keys, "ndim", 1) == 2:
             n_local = int(keys.shape[1])
@@ -320,8 +367,19 @@ def _normalize(keys, values, *, order, want, config, investigator) -> _Req:
     )
 
 
-def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
+def _dtype_width(dt) -> int:
+    """Key-lane width in bits (bfloat16 has no numpy dtype string)."""
+    if dt is None:
+        return 32
+    if str(dt) == "bfloat16":
+        return 16
+    return 8 * np.dtype(str(dt)).itemsize
+
+
+def _make_plan(req: _Req, where, limits: SortLimits | None,
+               x64: bool | None = None) -> SortPlan:
     limits = limits or SortLimits()
+    eff_x64 = _effective_x64(limits) if x64 is None else bool(x64)
     if limits.decode not in ("device", "host"):
         raise ValueError(
             f'SortLimits.decode must be "device" or "host", got '
@@ -380,7 +438,8 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     multikey_decision = None
     packspec = None
     if req.multikey:
-        multikey_decision, packspec = _decide_multikey(req, limits, reasons)
+        multikey_decision, packspec = _decide_multikey(req, limits, reasons,
+                                                       x64=eff_x64)
     if req.want == "order":
         reasons.append("argsort: provenance-index payload over the kv sort")
 
@@ -402,11 +461,25 @@ def _make_plan(req: _Req, where, limits: SortLimits | None) -> SortPlan:
     chunk_elems = limits.chunk_elems
     if choice == "stream":
         chunk_elems = _pick_chunk_elems(req, limits.chunk_elems, reasons)
+    if req.is_iterator:
+        # chunk dtypes are unknowable until staging; record the widest
+        # width the mode admits (runs.py checks each chunk against it)
+        key_width = 64 if eff_x64 else 32
+    elif req.multikey:
+        key_width = max(_dtype_width(k.dtype) for k in req.keys)
+    else:
+        key_width = _dtype_width(req.dtype)
+    if eff_x64 and key_width > 32:
+        reasons.append(
+            f"x64 mode: {key_width}-bit key lane admitted "
+            f"(sentinels/staging widen per dtype)"
+        )
     return SortPlan(
         backend=choice, n_procs=n_procs, chunk_elems=chunk_elems,
         limits=limits, reasons=tuple(reasons), mesh=mesh, axis_name=axis_name,
         decode=limits.decode, multikey=multikey_decision, packspec=packspec,
         cost_source=cost_source, cost_predicted=cost_predicted,
+        key_width=key_width, x64=eff_x64,
     )
 
 
@@ -483,14 +556,15 @@ def _pick_chunk_elems(req: _Req, base: int, reasons: list) -> int:
     return best
 
 
-def _decide_multikey(req: _Req, limits: SortLimits, reasons: list):
+def _decide_multikey(req: _Req, limits: SortLimits, reasons: list,
+                     x64: bool = False):
     """Pack-vs-LSD decision for a multi-key request, with its reason.
 
     ``"auto"`` packs whenever the tuple's (measured or declared) bit
-    widths fit the 31-bit budget — one ascending int32 exchange pass
-    instead of one stable pass per key; anything unpackable (wide
-    tuples, unpackable dtypes, NaN floats) records why and falls back
-    to the LSD construction."""
+    widths fit the mode's pack budget (31 bits; 63 under x64 mode) —
+    one ascending integer exchange pass instead of one stable pass per
+    key; anything unpackable (wide tuples, unpackable dtypes, NaN
+    floats) records why and falls back to the LSD construction."""
     k = len(req.keys)
     if limits.multikey not in ("auto", "packed", "lsd"):
         raise ValueError(
@@ -504,14 +578,17 @@ def _decide_multikey(req: _Req, limits: SortLimits, reasons: list):
         )
         return "lsd", None
     ranks: dict = {}
+    budget = (keyenc.PACK_BUDGET_BITS_X64 if x64
+              else keyenc.PACK_BUDGET_BITS)
     spec, why = keyenc.plan_pack(req.keys, req.descending, limits.key_bits,
-                                 ranks=ranks)
+                                 ranks=ranks, budget=budget)
     if spec is not None:
         # hand the measured rank arrays to the execution path: packing
         # reuses them instead of redoing the O(n * n_keys) transforms
         req.pack_ranks = ranks
+        word = np.dtype(spec.pack_dtype).name
         reasons.append(
-            f"{k}-key lexicographic: packed into ONE int32 sort ({why})"
+            f"{k}-key lexicographic: packed into ONE {word} sort ({why})"
         )
         return "packed", spec
     if limits.multikey == "packed":
@@ -886,6 +963,10 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
         sort=req.config,
         max_doublings=plan.limits.max_doublings,
         growth=plan.limits.growth,
+        # the request's resolved mode rides into per-chunk staging: 64-bit
+        # iterator chunks are admitted (or rejected, naming the opt-in)
+        # by the same door check, at the earliest point their dtype exists
+        x64=plan.x64,
     )
     # device decode pushes the order-flip INTO the stream pipeline: every
     # chunk is flip-encoded on device right after H2D and flip-decoded on
@@ -987,7 +1068,8 @@ def _meta(req: _Req, plan: SortPlan, backend: str, cfg, retries: int) -> SortMet
 def _exec_packed_multikey(req: _Req, plan: SortPlan) -> SortOutput:
     """Lexicographic sort as ONE packed single-key pass.
 
-    The tuple is fused into a non-negative int32 key (``keyenc.pack_keys``
+    The tuple is fused into a non-negative integer key — int32, or int64
+    for x64-mode wide packs (``keyenc.pack_keys``
     — per-key order flips and monotone transforms live inside the bit
     fields), so the plain ascending single-key machinery of whichever
     backend the planner chose does the whole job in one exchange pass;
@@ -1006,7 +1088,7 @@ def _exec_packed_multikey(req: _Req, plan: SortPlan) -> SortOutput:
     sub = _Req(
         keys=packed, values=None, want=sub_want, descending=(False,),
         config=req.config, investigator=req.investigator, n=req.n,
-        n_local=None, dtype=np.dtype(np.int32), is_iterator=False,
+        n_local=None, dtype=np.dtype(spec.pack_dtype), is_iterator=False,
         multikey=False, packspec=spec, trace=req.trace,
     )
     out = BACKENDS[plan.backend].execute(sub, plan)
@@ -1125,9 +1207,10 @@ register_backend("stream", _exec_stream, "out-of-core runs/partition/merge")
 
 def make_plan(keys, values=None, *, order="asc", want="values", where=None,
               limits=None, config=None, investigator=True) -> SortPlan:
+    eff_x64 = _effective_x64(limits)
     req = _normalize(keys, values, order=order, want=want, config=config,
-                     investigator=investigator)
-    return _make_plan(req, where, limits)
+                     investigator=investigator, x64=eff_x64)
+    return _make_plan(req, where, limits, x64=eff_x64)
 
 
 def execute_request(req: _Req, plan: SortPlan, ctx=None) -> SortOutput:
@@ -1199,9 +1282,10 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
     multi-key, (p, n_local) global views, stream-/mesh-bound requests)
     must dispatch through ``execute_request`` individually — still
     planner-routed, just not vmap-coalesced."""
+    eff_x64 = _effective_x64(limits)
     req = _normalize(keys, values, order=order, want=want, config=config,
-                     investigator=investigator)
-    plan = _make_plan(req, where, limits)
+                     investigator=investigator, x64=eff_x64)
+    plan = _make_plan(req, where, limits, x64=eff_x64)
     batchable = (
         plan.backend == "sim"
         and (not req.multikey or plan.multikey == "packed")
@@ -1216,6 +1300,7 @@ def serve_profile(keys, values=None, *, order="asc", want="values",
 def execute(keys, values=None, *, order="asc", want="values", where=None,
             limits=None, config=None, investigator=True) -> SortOutput:
     lim = limits or SortLimits()
+    eff_x64 = _effective_x64(lim)
     # an ambient obs.trace() block wins; else SortLimits(trace=True)
     # builds a per-sort trace that freezes when the output materializes
     tr = obs_tracing.current_trace()
@@ -1223,8 +1308,8 @@ def execute(keys, values=None, *, order="asc", want="values", where=None,
         tr = obs_tracing.Trace()
     with _span(tr, "plan"):
         req = _normalize(keys, values, order=order, want=want, config=config,
-                         investigator=investigator)
-        plan = _make_plan(req, where, lim)
+                         investigator=investigator, x64=eff_x64)
+        plan = _make_plan(req, where, lim, x64=eff_x64)
     if tr is not None:
         tr.labels.setdefault("backend", plan.backend)
         req.trace = tr

@@ -16,9 +16,10 @@ continue without waiting" front end for sort traffic:
   single-key ascending AND descending (the order-flip decode is fused
   into the vmapped program, ``sim.sample_sort_sim_flat``), and PACKED
   multi-key tuples (``plan.multikey == "packed"``: the admission path
-  packs the tuple into one ascending int32 array and the in-program
-  decode unpacks the columns) — coalesce into ONE program per
-  (shape, order, packspec) bucket (the ``stream.service.FlushEngine``
+  packs the tuple into one ascending integer array — int32, or int64
+  for x64-mode wide packs — and the in-program decode unpacks the
+  columns) — coalesce into ONE program per (shape, order, width,
+  packspec) bucket (the ``stream.service.FlushEngine``
   shared with the sync service). Declare ``SortLimits.key_bits`` for
   served multi-key traffic: measured pack specs vary with each
   request's data and would split the buckets. Everything else — kv
@@ -331,7 +332,8 @@ class SortServer:
         data = None
         if batchable:
             if req.multikey:
-                # packed multi-key: stage the fused ascending int32 key
+                # packed multi-key: stage the fused ascending integer key
+                # — spec.pack_dtype, so 32/64-bit packs bucket apart —
                 # (per-key order flips live inside the bit fields; the
                 # rank arrays measured at plan time are reused)
                 data = keyenc.pack_keys(req.keys, plan.packspec,

@@ -54,6 +54,13 @@ class StreamConfig:
       i.e. each bucket targets one device-sized merge.
     out_chunk_elems: granularity of the sorted output stream; None =
       chunk_elems.
+    x64: the request's resolved x64 mode, threaded from the planner
+      (``SortPlan.x64``): iterator chunk dtypes are only knowable at
+      staging time, so the 64-bit door check
+      (``planner.check_key_dtype``) runs per chunk against THIS flag —
+      None falls back to the ambient ``core.x64`` switch (direct
+      ``repro.stream`` users). Staging sentinels are width-correct
+      either way (``kernels.ops.sentinel_for`` is dtype-driven).
     """
 
     chunk_elems: int = 1 << 16
@@ -63,6 +70,7 @@ class StreamConfig:
     growth: float = 2.0
     n_buckets: int | None = None
     out_chunk_elems: int | None = None
+    x64: bool | None = None
 
 
 @dataclasses.dataclass
@@ -182,7 +190,8 @@ def generate_runs(
 
     for chunk in key_chunks:
         m = int(chunk.shape[0])
-        planner_grid.check_key_dtype(chunk.dtype, what="stream chunk keys")
+        planner_grid.check_key_dtype(chunk.dtype, what="stream chunk keys",
+                                     x64=cfg.x64)
         kfill = np.asarray(kops.sentinel_for(jnp.dtype(chunk.dtype)))
         if descending:
             # pads must sort to the tail in the ENCODED space: stage the
@@ -199,7 +208,9 @@ def generate_runs(
                 vchunk = next(val_chunks, None)
                 if vchunk is None or vchunk.shape[0] != m:
                     raise ValueError("values must chunk identically to keys")
-                planner_grid.check_key_dtype(vchunk.dtype, what="stream chunk values")
+                planner_grid.check_key_dtype(vchunk.dtype,
+                                             what="stream chunk values",
+                                             x64=cfg.x64)
                 vfill = np.asarray(kops.sentinel_for(jnp.dtype(vchunk.dtype)))
                 dev_v = jax.device_put(_pad_chunk(vchunk, p, per, vfill))
         if inflight is not None:

@@ -80,8 +80,11 @@ _M_COALESCE_SIZE = obs_metrics.histogram(
 
 class ProgramCache:
     """Compiled vmapped sample-sort programs, keyed by
-    (batch, p, per, dtype, config, investigator, flat, descending,
-    packspec). Shared between the SortService flush path and
+    (batch, p, per, dtype, key_width, config, investigator, flat,
+    descending, packspec) — the explicit key WIDTH rides in the key so
+    32- and 64-bit (x64-mode) requests can never coalesce into one
+    program even if a dtype ever aliases across widths. Shared between
+    the SortService flush path and
     ``SortLibrary.sort_many``. ``flat=True`` programs fuse the device
     decode (``sim.sample_sort_sim_flat``): the compaction gather — and,
     for descending buckets, the order-flip encode/decode — runs inside
@@ -100,7 +103,8 @@ class ProgramCache:
     def get(self, batch: int, p: int, per: int, dtype,
             config: SortConfig, investigator: bool, *,
             flat: bool = False, descending: bool = False, packspec=None):
-        key = (batch, p, per, np.dtype(str(dtype)).str, config, investigator,
+        dt = np.dtype(dtype)
+        key = (batch, p, per, dt.str, 8 * dt.itemsize, config, investigator,
                flat, descending, packspec)
         fn = self.programs.get(key)
         if fn is None:
@@ -177,8 +181,13 @@ class FlushEngine:
         return _next_pow2(max(n, self.n_procs))
 
     def bucket_key(self, data: np.ndarray) -> tuple:
-        """Requests with equal bucket keys may share one vmapped program."""
-        return (self.bucket_elems(data.shape[0]), data.dtype.str)
+        """Requests with equal bucket keys may share one vmapped program.
+
+        The key width is explicit so 32- and 64-bit (x64-mode) traffic
+        buckets apart — an int64 request must never be stacked into an
+        int32 program's flush, whatever the dtype string says."""
+        return (self.bucket_elems(data.shape[0]), data.dtype.str,
+                8 * data.dtype.itemsize)
 
     def _fill(self, dtype, descending: bool):
         """Staging sentinel: pads must sort to the tail of the ENCODED

@@ -4,7 +4,8 @@ Dependency-free (no hypothesis — unavailable in this environment): a
 plain ``np.random.default_rng(seed)`` generator drives everything, so
 every failure is one integer. Each case draws a duplicate-heavy /
 skewed / adversarial-bitwidth key tuple (mixed int8/int16/uint32/
-float32, per-key asc/desc, ties everywhere), picks a backend round-robin
+float32 — plus int64/uint64/float64 when x64 mode is on,
+per-key asc/desc, ties everywhere), picks a backend round-robin
 from {sim, mesh, stream} and a decode path ({device, host}, alternating
 per seed so the full strategy x decode x backend matrix is covered
 across any real budget), and asserts that the PACKED path (when the
@@ -42,7 +43,16 @@ Generator contract notes:
   exactly-31-bit pack whose data saturates every field reaches the int32
   sentinel, and packed payload sorts must then refuse loudly (the
   documented representability restriction); the LSD twin still runs and
-  must match the oracle.
+  must match the oracle. Under x64 the same edge exists one width up
+  (63-bit pack -> int64 sentinel) and is asserted the same way.
+* x64 mode (``REPRO_X64=1 ... python -m tests.fuzz_harness``) widens the
+  dtype pool with int64/uint64/float64 and adds an "edge" generator per
+  64-bit column: near-2^63 magnitudes, sign crossings around +-0.0, huge
+  float64 exponents, and NaN (folded by the sentinel clamp — NaN keys
+  are unsupported throughout). Full-range 64-bit columns measure >63-bit
+  rank widths, so the LSD fallback stays exercised; small-range 64-bit
+  columns pack, covering the wide-word (int64) pack path. Mixed 32/64
+  tuples fall out of the per-column dtype draw for free.
 """
 from __future__ import annotations
 
@@ -53,11 +63,15 @@ import numpy as np
 
 import repro
 from repro.core import keyenc
+from repro.core.x64 import x64_enabled
 
 CFG = repro.SortConfig(use_pallas=False, capacity_factor=2.0)
 SIZES = (1, 64, 97, 256)
 BACKENDS = ("sim", "mesh", "stream")
 DTYPES = (np.int8, np.int16, np.uint32, np.float32)
+# 64-bit lanes join the draw only when x64 mode is on (the 32-bit
+# default mode rejects them at the planner door — covered by test_x64)
+DTYPES_X64 = DTYPES + (np.int64, np.uint64, np.float64)
 
 _MESH = None
 
@@ -74,10 +88,11 @@ def _mesh():
 def _clamp_sentinel(col: np.ndarray, desc: bool) -> np.ndarray:
     """Pull the column off its order-maximal value (see module doc)."""
     if np.issubdtype(col.dtype, np.floating):
-        bad = np.float32(-np.inf if desc else np.inf)
-        repl = np.float32(np.finfo(np.float32).min if desc
-                          else np.finfo(np.float32).max)
-        col = np.where(np.isnan(col), np.float32(0), col).astype(col.dtype)
+        ft = col.dtype.type
+        bad = ft(-np.inf if desc else np.inf)
+        fi = np.finfo(col.dtype)
+        repl = ft(fi.min if desc else fi.max)
+        col = np.where(np.isnan(col), ft(0), col).astype(col.dtype)
         col[col == 0.0] = 0.0  # fold -0.0 into +0.0 (oracle-ambiguous tie)
     else:
         info = np.iinfo(col.dtype)
@@ -87,12 +102,39 @@ def _clamp_sentinel(col: np.ndarray, desc: bool) -> np.ndarray:
     return col
 
 
+def _edge_pool_64(dtype) -> np.ndarray:
+    """Adversarial fixed values for 64-bit columns: near-2^63 magnitudes,
+    sign crossings, +-0.0, huge exponents, NaN (the sentinel clamp folds
+    NaN to 0 — NaN keys are unsupported throughout). No subnormals: XLA
+    CPU flushes denormals, so they compare equal to 0.0 on device while
+    np.lexsort distinguishes them — oracle-ambiguous by construction,
+    same as the -0.0 fold."""
+    dt = np.dtype(dtype)
+    if np.issubdtype(dt, np.floating):
+        return np.array(
+            [-1e300, -1.0, -0.0, 0.0, 1.0, 1e300, np.nan], np.float64)
+    info = np.iinfo(dt)
+    vals = [int(info.min), int(info.min) + 1, int(info.min) + 2,
+            0, 1, 2, int(info.max) - 2, int(info.max) - 1, int(info.max)]
+    if info.min < 0:
+        vals += [-2, -1]  # sign crossing around zero
+    return np.array(vals, dt)
+
+
 def _gen_column(rng: np.random.Generator, dtype, n: int, desc: bool):
     """One key column: duplicate-heavy, skewed, adversarially wide, or
-    constant — ties everywhere by construction."""
-    kind = rng.choice(("dup", "skew", "wide", "const"),
-                      p=(0.4, 0.25, 0.25, 0.1))
-    floating = np.issubdtype(np.dtype(dtype), np.floating)
+    constant — ties everywhere by construction. 64-bit dtypes add an
+    "edge" kind drawing from the fixed adversarial pool above."""
+    dt = np.dtype(dtype)
+    floating = np.issubdtype(dt, np.floating)
+    wide64 = dt.itemsize == 8
+    if wide64:
+        kind = rng.choice(("dup", "skew", "wide", "const", "edge"),
+                          p=(0.3, 0.2, 0.2, 0.1, 0.2))
+    else:
+        kind = rng.choice(("dup", "skew", "wide", "const"),
+                          p=(0.4, 0.25, 0.25, 0.1))
+    exact = False  # col already carries the target dtype (64-bit draws)
     if kind == "const":
         info_v = rng.integers(-3, 100)
         col = np.full(n, float(info_v) if floating else info_v)
@@ -103,18 +145,34 @@ def _gen_column(rng: np.random.Generator, dtype, n: int, desc: bool):
     elif kind == "skew":
         # zipf-like heavy head: most mass on tiny values, long tail
         col = np.minimum(rng.zipf(1.7, n), 1 << 20)
+    elif kind == "edge":
+        pool = _edge_pool_64(dt)
+        col = pool[rng.integers(0, pool.size, n)]
+        exact = True
     else:  # wide: span the dtype (adversarial bit widths)
         if floating:
             col = rng.normal(0, 1e10, n)
+        elif wide64:
+            # draw in the target dtype directly — an int64 intermediate
+            # cannot hold uint64's upper half
+            info = np.iinfo(dt)
+            col = rng.integers(info.min, info.max, n, dtype=dt)
+            exact = True
         else:
             info = np.iinfo(dtype)
             col = rng.integers(int(info.min), int(info.max), n,
                                dtype=np.int64)
-    if floating:
-        col = np.asarray(col, np.float32)
+    if exact:
+        col = np.asarray(col, dt)
+    elif floating:
+        col = np.asarray(col, dt)
     else:
+        # small-magnitude draws above fit int64; clamp into the target
+        # range (for uint64 that means clipping negatives to 0)
         info = np.iinfo(dtype)
-        col = np.clip(np.asarray(col, np.int64), info.min, info.max)
+        lo_c = max(int(info.min), np.iinfo(np.int64).min)
+        hi_c = min(int(info.max), np.iinfo(np.int64).max)
+        col = np.clip(np.asarray(col, np.int64), lo_c, hi_c)
         col = col.astype(dtype)
     if n > 3 and rng.random() < 0.5:
         # resample from a half-sized pool: guarantees duplicates even
@@ -132,10 +190,11 @@ def make_case(seed: int) -> dict:
         # warms after the first few seeds — sim/stream carry the full
         # shape/dtype diversity, mesh covers the backend path itself
         n = 64
-        dtype_pool = (np.int16, np.float32)
+        dtype_pool = ((np.int16, np.float32, np.int64) if x64_enabled()
+                      else (np.int16, np.float32))
     else:
         n = int(rng.choice(SIZES, p=(0.1, 0.4, 0.3, 0.2)))
-        dtype_pool = DTYPES
+        dtype_pool = DTYPES_X64 if x64_enabled() else DTYPES
     n_keys = int(rng.choice((2, 3, 4), p=(0.5, 0.35, 0.15)))
     descending = tuple(bool(rng.integers(0, 2)) for _ in range(n_keys))
     dtypes = [dtype_pool[int(rng.integers(0, len(dtype_pool)))]
@@ -218,11 +277,12 @@ def check_case(seed: int, stats: Counter | None = None) -> None:
                         and "padding sentinel" in str(e)):
                     # documented representability edge the generator can
                     # legitimately hit: a measured exactly-31-bit pack
-                    # whose data saturates every field lands on the
-                    # int32 sentinel, and payload sorts must refuse
-                    # LOUDLY (naming the packed value) — the LSD twin
-                    # still runs below and must match the oracle
-                    assert "2147483647" in str(e), str(e)
+                    # (63-bit under x64) whose data saturates every field
+                    # lands on the pack-word sentinel, and payload sorts
+                    # must refuse LOUDLY (naming the packed value) — the
+                    # LSD twin still runs below and must match the oracle
+                    assert ("2147483647" in str(e)
+                            or "9223372036854775807" in str(e)), str(e)
                     if stats is not None:
                         stats["saturated"] += 1
                     continue

@@ -1,0 +1,381 @@
+"""x64 mode: the opt-in 64-bit key/payload contract end to end.
+
+Covers the three layers the opt-in threads through:
+
+* the planner door — 64-bit dtypes rejected by default with the remedy
+  spelled out, at all three call sites (keys, values payload, stream
+  chunk staging); ``SortLimits(x64=...)`` wins over the ambient switch
+  in both directions;
+* the 32-bit default path — bit-identical with the mode off or on
+  (plans, pack words, outputs) for narrow inputs: width is a threaded
+  parameter, not an ambient assumption;
+* the widened path — int64/uint64/float64 single keys across
+  {sim, mesh, stream} x {device, host decode} against numpy oracles,
+  the 63-bit pack budget fusing an (int64 timestamp, int32 shard)
+  tuple into ONE int64 sort, the saturated-63 sentinel collision, and
+  the width-keyed serve/tune surfaces (32/64-bit requests never
+  coalesce; int64 cost curves never blend into int32 bins).
+
+Scoped ``repro.x64_mode()`` drives the in-process tests (it restores
+both the library switch and jax's thread-local trace context on exit).
+The serve test flips the GLOBAL ``repro.enable_x64`` switch instead —
+a ``SortServer``'s flush loop runs on its own thread, which only
+observes the process-wide jax flag, never a main-thread context.
+Every test pins its mode explicitly, so this file passes under plain
+tier-1 (ambient off) AND the CI x64 leg (``REPRO_X64=1``).
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core.splitters import SortConfig
+from repro.core.x64 import x64_enabled, x64_mode
+
+CFG = SortConfig(use_pallas=False, capacity_factor=2.0)
+RNG = np.random.default_rng(42)
+
+_MESH = None
+
+
+def _mesh():
+    global _MESH
+    if _MESH is None:
+        import jax
+
+        _MESH = jax.make_mesh((1,), ("data",))
+    return _MESH
+
+
+def _where(backend):
+    return (_mesh(), "data") if backend == "mesh" else backend
+
+
+def _limits(**kw) -> repro.SortLimits:
+    kw.setdefault("chunk_elems", 1 << 12)
+    kw.setdefault("n_procs", 4)
+    kw.setdefault("stream_threshold", None)
+    return repro.SortLimits(**kw)
+
+
+# ------------------------------------------------- the door (mode off)
+
+
+def test_reject_int64_keys_names_remedy():
+    with x64_mode(False):
+        with pytest.raises(TypeError) as ei:
+            repro.sort(np.arange(64, dtype=np.int64), want="values",
+                       where="sim", limits=_limits(), config=CFG)
+    msg = str(ei.value)
+    assert "64-bit keys" in msg and "x64 mode" in msg
+    # every opt-in path AND the nearest narrow dtype are spelled out
+    for remedy in ("repro.enable_x64()", "REPRO_X64=1",
+                   "SortLimits(x64=True)", "int32"):
+        assert remedy in msg, f"remedy {remedy!r} missing from: {msg}"
+
+
+def test_reject_float64_values_payload_names_float32():
+    with x64_mode(False):
+        with pytest.raises(TypeError) as ei:
+            repro.sort(np.arange(64, dtype=np.int32),
+                       np.linspace(0, 1, 64, dtype=np.float64),
+                       want="values", where="sim", limits=_limits(),
+                       config=CFG)
+    msg = str(ei.value)
+    assert "64-bit values" in msg and "float32" in msg
+
+
+def test_stream_chunk_staging_rejects_wide_chunks():
+    # iterator inputs: dtype is only knowable at staging time, so the
+    # door check runs per chunk inside the stream pipeline — which is
+    # lazy, so the rejection surfaces when the output is consumed
+    with x64_mode(False):
+        gen = (np.arange(64, dtype=np.int64) for _ in range(2))
+        with pytest.raises(TypeError) as ei:
+            out = repro.sort(gen, want="values", limits=_limits(),
+                             config=CFG)
+            list(out.keys)
+    msg = str(ei.value)
+    assert "stream chunk keys" in msg and "SortLimits(x64=True)" in msg
+
+
+def test_limits_x64_false_pins_32bit_even_when_ambient_on():
+    # the differential escape hatch: a request pinned to the 32-bit
+    # contract keeps rejecting wide dtypes under an ambient opt-in
+    with x64_mode(True):
+        with pytest.raises(TypeError, match="64-bit"):
+            repro.sort(np.arange(64, dtype=np.int64), want="values",
+                       where="sim", limits=_limits(x64=False), config=CFG)
+
+
+def test_limits_x64_true_admits_per_request():
+    import jax
+
+    prev = jax.config.jax_enable_x64
+    try:
+        k = np.arange(128, dtype=np.int64)[::-1].copy()
+        out = repro.sort(k, want="values", where="sim",
+                         limits=_limits(x64=True), config=CFG)
+        assert out.keys.dtype == np.int64
+        np.testing.assert_array_equal(out.keys,
+                                      np.arange(128, dtype=np.int64))
+    finally:
+        # SortLimits(x64=True) flips jax's global flag (documented);
+        # restore it so the rest of the suite sees the prior contract
+        if not prev and jax.config.jax_enable_x64:
+            jax.config.update("jax_enable_x64", False)
+
+
+# ------------------------------- 32-bit default path: bit-identical
+
+
+def test_narrow_path_bit_identical_across_modes():
+    """Width is threaded, not ambient: narrow inputs produce the same
+    plan (same pack word, same strategy) and bit-identical outputs with
+    the mode off or on."""
+    k = RNG.integers(-1000, 1000, 257).astype(np.int32)
+    t = (RNG.integers(0, 1 << 10, 257).astype(np.int16),
+         RNG.integers(-50, 50, 257).astype(np.int8))
+    got = {}
+    for mode in (False, True):
+        with x64_mode(mode):
+            o1 = repro.sort(k, want="values", where="sim",
+                            limits=_limits(), config=CFG)
+            o2 = repro.sort(t, order=("asc", "desc"), want="values",
+                            where="sim", limits=_limits(), config=CFG)
+            p2 = repro.plan(t, order=("asc", "desc"), limits=_limits(),
+                            config=CFG)
+            got[mode] = (np.asarray(o1.keys),
+                         tuple(np.asarray(x) for x in o2.keys), p2)
+    off, on = got[False], got[True]
+    assert off[0].dtype == on[0].dtype == np.int32
+    np.testing.assert_array_equal(off[0], on[0])
+    for a, b in zip(off[1], on[1]):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    for p in (off[2], on[2]):
+        # a <=31-bit tuple packs into the SAME int32 word in either mode
+        assert p.multikey == "packed"
+        assert np.dtype(p.packspec.pack_dtype) == np.dtype(np.int32)
+        assert any("ONE int32 sort" in r for r in p.reasons)
+    assert off[2].key_width == on[2].key_width
+
+
+# ----------------------------------------- wide single keys (mode on)
+
+
+def _wide_column(dtype, n):
+    """Near-2^63 magnitudes and sign crossings (huge exponents for
+    float64), clamped off the padding sentinel so payload variants of
+    the same data stay legal."""
+    rng = np.random.default_rng(7)
+    if dtype is np.float64:
+        col = rng.normal(0.0, 1e200, n).astype(np.float64)
+        col[0], col[1], col[2] = 0.0, -1e300, 1e300
+        return col
+    info = np.iinfo(dtype)
+    col = rng.integers(info.min, info.max, n, dtype=dtype)
+    col[0] = info.min if info.min < 0 else 0
+    col[1] = info.max - 1
+    col[col == info.max] = info.max - 1
+    return col
+
+
+@pytest.mark.parametrize(
+    "dtype,backend,decode",
+    [
+        (np.int64, "sim", "device"),
+        (np.int64, "sim", "host"),
+        (np.int64, "stream", "device"),
+        (np.int64, "mesh", "device"),
+        (np.uint64, "sim", "device"),
+        (np.uint64, "stream", "host"),
+        (np.float64, "sim", "host"),
+        (np.float64, "stream", "device"),
+    ],
+)
+def test_wide_single_key_matrix(dtype, backend, decode):
+    with x64_mode():
+        n = 64 if backend == "mesh" else 97
+        col = _wide_column(dtype, n)
+        out = repro.sort(col, want="values", where=_where(backend),
+                         limits=_limits(decode=decode), config=CFG)
+        assert out.keys.dtype == np.dtype(dtype)
+        np.testing.assert_array_equal(out.keys, np.sort(col))
+
+
+def test_wide_descending_and_kv():
+    with x64_mode():
+        base = np.int64(3) << 60
+        k = base + RNG.permutation(129).astype(np.int64)  # unique keys
+        v = RNG.integers(0, 1 << 20, 129).astype(np.int32)
+        down = repro.sort(k, order="desc", want="values", where="sim",
+                          limits=_limits(), config=CFG)
+        np.testing.assert_array_equal(down.keys, np.sort(k)[::-1])
+        kv = repro.sort(k, v, want="values", where="sim",
+                        limits=_limits(), config=CFG)
+        perm = np.argsort(k)
+        np.testing.assert_array_equal(kv.keys, k[perm])
+        np.testing.assert_array_equal(kv.values, v[perm])
+
+
+# ------------------------------------- the 63-bit pack budget (mode on)
+
+
+def _ts_shard_tuple(n=192):
+    """The motivating workload: an epoch-seconds int64 timestamp column
+    (~34-bit measured SPREAD — the epoch offset is absorbed into the
+    field's ``lo``) and a small int32 shard id — 42 bits total, far
+    over the 31-bit budget, comfortably inside 63."""
+    step = np.int64((1 << 34) // n)
+    ts = (np.int64(17 * 10**8)
+          + RNG.permutation(n).astype(np.int64) * step)
+    shard = RNG.integers(0, 200, n).astype(np.int32)
+    return ts, shard
+
+
+def test_timestamp_shard_tuple_packs_into_one_int64_sort():
+    with x64_mode():
+        ts, shard = _ts_shard_tuple()
+        plan = repro.plan((ts, shard), order=("asc", "asc"),
+                          limits=_limits(), config=CFG)
+        assert plan.multikey == "packed"
+        assert np.dtype(plan.packspec.pack_dtype) == np.dtype(np.int64)
+        assert plan.key_width == 64 and plan.x64
+        assert any("ONE int64 sort" in r for r in plan.reasons)
+        text = plan.explain()
+        assert "key_width=64" in text and "(x64 mode)" in text
+
+
+@pytest.mark.parametrize("backend", ["sim", "mesh", "stream"])
+def test_packed_tuple_round_trips_vs_lexsort(backend):
+    with x64_mode():
+        n = 64 if backend == "mesh" else 192
+        ts, shard = _ts_shard_tuple(n)
+        perm = np.lexsort((shard, ts))
+        out = repro.sort((ts, shard), want="order",
+                         where=_where(backend), limits=_limits(),
+                         config=CFG)
+        assert out.meta.multikey == "packed"
+        np.testing.assert_array_equal(out.order(), perm)
+        np.testing.assert_array_equal(out.keys[0], ts[perm])
+        np.testing.assert_array_equal(out.keys[1], shard[perm])
+
+
+def test_over_budget_tuple_falls_back_to_lsd_naming_63():
+    with x64_mode():
+        wide = _wide_column(np.int64, 128)  # full 64-bit measured range
+        shard = RNG.integers(0, 200, 128).astype(np.int32)
+        plan = repro.plan((wide, shard), order=("asc", "asc"),
+                          limits=_limits(), config=CFG)
+        assert plan.multikey == "lsd"
+        assert any("63-bit pack budget" in r for r in plan.reasons)
+        # and the fallback still matches the oracle end to end
+        out = repro.sort((wide, shard), want="values", where="sim",
+                         limits=_limits(), config=CFG)
+        perm = np.lexsort((shard, wide))
+        np.testing.assert_array_equal(out.keys[0], wide[perm])
+        np.testing.assert_array_equal(out.keys[1], shard[perm])
+
+
+# ------------------------------- saturated-63 pack sentinel collision
+
+
+def _saturated_63_tuple():
+    """A measured exactly-63-bit pack whose first element saturates
+    every field: packs to int64 max — the padding sentinel."""
+    c0 = np.zeros(64, np.uint64)
+    c0[0], c0[1] = np.uint64(2**32 - 1), np.uint64(1)  # 32-bit range
+    c1 = np.zeros(64, np.uint32)
+    c1[0], c1[1] = np.uint32(2**31 - 1), np.uint32(1)  # 31-bit range
+    return c0, c1
+
+
+@pytest.mark.parametrize("kind", ["values", "order"])
+def test_saturated_63bit_pack_payload_raises_loudly(kind):
+    with x64_mode():
+        c0, c1 = _saturated_63_tuple()
+        plan = repro.plan((c0, c1), limits=_limits(), config=CFG)
+        assert plan.multikey == "packed"
+        assert plan.packspec.total_bits == 63
+        kw = (dict(want="order") if kind == "order" else
+              dict(want="values"))
+        vals = (np.arange(64, dtype=np.int32)
+                if kind == "values" else None)
+        with pytest.raises(ValueError) as ei:
+            repro.sort((c0, c1), vals, where="sim", limits=_limits(),
+                       config=CFG, **kw)
+        msg = str(ei.value)
+        # the error names the packed sentinel value AND the source
+        # column values it decodes to
+        assert "9223372036854775807" in msg
+        assert "uint64" in msg and "uint32" in msg
+
+
+def test_saturated_63bit_pack_keys_only_succeeds():
+    # keys-only sorts are sentinel-exempt (pad and key value-identical)
+    with x64_mode():
+        c0, c1 = _saturated_63_tuple()
+        out = repro.sort((c0, c1), want="values", where="sim",
+                         limits=_limits(), config=CFG)
+        assert out.meta.multikey == "packed"
+        perm = np.lexsort((c1, c0))
+        np.testing.assert_array_equal(out.keys[0], c0[perm])
+        np.testing.assert_array_equal(out.keys[1], c1[perm])
+
+
+# --------------------------------------------- serve / cache / tune
+
+
+def test_serve_width_buckets_never_coalesce():
+    """32- and 64-bit requests of the same length must compile distinct
+    programs (width is part of the bucket and cache keys). Global
+    switch, not a context: the flush loop runs on its own thread."""
+    from repro.serve import SortServer
+
+    prev = x64_enabled()
+    repro.enable_x64(True)
+    try:
+        with SortServer(max_batch=10_000, max_delay_ms=600_000,
+                        config=CFG,
+                        limits=repro.SortLimits(n_procs=4)) as srv:
+            a32 = RNG.integers(0, 1 << 20, 256).astype(np.int32)
+            a64 = (np.int64(5) << 40) + np.arange(256, dtype=np.int64)[::-1]
+            f32, f64 = srv.submit(a32), srv.submit(a64)
+            srv.flush(120)
+            r32, r64 = f32.result(120), f64.result(120)
+            assert r32.keys.dtype == np.int32
+            assert r64.keys.dtype == np.int64
+            np.testing.assert_array_equal(r32.keys, np.sort(a32))
+            np.testing.assert_array_equal(r64.keys, np.sort(a64))
+            assert srv.stats()["programs"] == 2
+    finally:
+        repro.enable_x64(prev)
+
+
+def test_program_cache_width_keyed():
+    from repro.stream.service import ProgramCache
+
+    cache = ProgramCache()
+    p32 = cache.get(1, 4, 64, np.int32, CFG, True)
+    p64 = cache.get(1, 4, 64, np.int64, CFG, True)
+    assert cache.stats["programs"] == 2 and p32 is not p64
+    assert cache.get(1, 4, 64, np.int32, CFG, True) is p32
+    assert cache.stats["hits"] == 1
+
+
+def test_tune_store_bins_int64_separately_from_int32():
+    """int64 observations must never EWMA into the int32 curve — the
+    cost model would otherwise blend two different memory widths."""
+    from repro.tune.store import TuneStore
+
+    st = TuneStore()
+    st.observe("sort", "sim", "int32", 4096, 100.0)
+    st.observe("sort", "sim", "int64", 4096, 900.0)
+    assert len(st.keys) == 2
+    (s32,) = st.samples("sort", "sim", "int32")
+    (s64,) = st.samples("sort", "sim", "int64")
+    assert s32[2] == s64[2] == 1
+    assert s32[1] != s64[1]  # curves independent
+    # feeding more int64 never touches the int32 cell
+    st.observe("sort", "sim", "int64", 4096, 950.0)
+    assert st.samples("sort", "sim", "int32") == [s32]
