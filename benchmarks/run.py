@@ -107,6 +107,7 @@ def main() -> None:
             "serve_pad_retries": serve_bench.serve_pad_retries,
             "serve_adaptive": serve_bench.serve_adaptive,
             "serve_flight": serve_bench.serve_flight,
+            "serve_fairness": serve_bench.serve_fairness,
         },
     }
     selected = list(suites) if args.suite == "all" else [args.suite]

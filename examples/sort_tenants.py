@@ -1,0 +1,96 @@
+"""Multi-tenant fair serving demo: weighted-fair queues, priorities,
+cost-based admission, and the sort-adjacent request types.
+
+A flooding "batch" tenant dumps a backlog of sorts on the server while
+an interactive "dash" tenant submits a trickle — weighted-fair dispatch
+lets the trickle ride the next flush out instead of queuing behind the
+flood. Then the same flush buckets serve topk / searchsorted /
+percentile requests (bit-identical to sort-then-slice), a priority-
+classed request jumps a backlog, and a warmed cost model turns
+admission rejections into model-derived retry-after hints.
+
+    PYTHONPATH=src python examples/sort_tenants.py
+"""
+import numpy as np
+
+import repro
+from repro import tune
+from repro.serve import QueueFullError, SortServer
+
+
+def main():
+    cfg = repro.SortConfig(use_pallas=False)
+    limits = repro.SortLimits(n_procs=8)
+    rng = np.random.default_rng(0)
+
+    # -- weighted-fair tenants: the flood owns at most its share
+    with SortServer(max_batch=8, max_delay_ms=5.0, config=cfg,
+                    limits=limits,
+                    tenants={"batch": 1.0, "dash": 4.0}) as server:
+        flood = [server.submit(rng.normal(0, 1, 2048).astype(np.float32),
+                               tenant="batch")
+                 for _ in range(64)]
+        probe = server.submit(rng.normal(0, 1, 2048).astype(np.float32),
+                              tenant="dash")
+        probe.result()  # resolves long before the flood drains
+        drained = sum(f.done() for f in flood)
+        print(f"dash request served with {64 - drained} of 64 flood "
+              f"requests still queued")
+        for f in flood:
+            f.result()
+        t = server.stats()["tenants"]
+        print("tenants:", {k: v["completed"] for k, v in t.items()})
+
+    # -- sort-adjacent request types coalesce with plain sort traffic
+    with SortServer(max_batch=8, max_delay_ms=5.0, config=cfg,
+                    limits=limits) as server:
+        x = rng.normal(0, 1, 4096).astype(np.float32)
+        futs = [server.submit(rng.normal(0, 1, 4096).astype(np.float32))
+                for _ in range(4)]
+        top = server.submit_topk(x, 5)
+        ranks = server.submit_searchsorted(x, [-1.0, 0.0, 1.0])
+        p99 = server.submit_percentile(x, 99.0)
+        oracle = repro.sort(x, config=cfg, limits=limits)
+        assert np.array_equal(top.result().keys, oracle.topk(5))
+        assert np.array_equal(ranks.result().keys,
+                              oracle.searchsorted([-1.0, 0.0, 1.0]))
+        print(f"topk coalesced with {top.result().meta.coalesced} requests "
+              f"in its flush; p99 = {float(p99.result().keys):.3f}")
+        for f in futs:
+            f.result()
+
+    # -- priority classes: lower dispatches first within the fair order
+    with SortServer(max_batch=4, max_delay_ms=50.0, config=cfg,
+                    limits=limits) as server:
+        backlog = [server.submit(rng.normal(0, 1, 1024).astype(np.float32))
+                   for _ in range(16)]
+        urgent = server.submit(rng.normal(0, 1, 1024).astype(np.float32),
+                               priority=-1)
+        urgent.result()
+        print(f"priority -1 request done with "
+              f"{sum(not f.done() for f in backlog)} backlog requests "
+              f"still queued")
+        for f in backlog:
+            f.result()
+
+    # -- cost-based admission: a warmed model prices every request and
+    #    rejects over-budget work with a drain-time retry hint
+    store = tune.TuneStore()
+    for n in (1 << 12, 1 << 14, 1 << 16):
+        store.observe("sort", "sim", "float32", n, 100.0 * n / (1 << 12),
+                      weight=2.0)
+    with tune.active(store):
+        with SortServer(max_batch=64, max_delay_ms=100.0, config=cfg,
+                        limits=limits, max_queue_cost_us=300.0) as server:
+            first = server.submit(np.zeros(1 << 12, np.float32))
+            try:
+                server.submit(np.zeros(1 << 16, np.float32))
+            except QueueFullError as e:
+                print(f"admission: {e} -> retry after "
+                      f"{e.retry_after_ms:.1f}ms")
+            first.result()
+            print("admission verdicts:", server.stats()["admission"])
+
+
+if __name__ == "__main__":
+    main()

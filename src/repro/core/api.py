@@ -128,6 +128,49 @@ mutate). ``SortLimits(decode="host")`` selects the legacy numpy decode
     Same signature; returns the ``SortPlan`` (backend + reasons) the
     planner would execute / its human-readable rendering.
 
+Serving (``repro.serve``)
+-------------------------
+``SortServer`` is the async front end: ``submit(...)`` takes
+``repro.sort``'s keyword surface, returns a ``SortFuture`` immediately,
+and a background flush loop coalesces same-shape keys-only requests
+into ONE vmapped program per bucket (everything else dispatches
+individually on a worker pool). Three layers sit on top:
+
+Tenants & priorities: ``submit(..., tenant="analytics", priority=0)``
+tags each request; dispatch is start-time weighted fair queuing over
+per-tenant virtual clocks (``SortServer(tenants={name: weight})`` or
+``set_tenant``; undeclared tenants get weight 1.0). Each flush takes
+the ``max_batch`` best requests by ``(priority, virtual finish tag,
+arrival)`` — lower priority values first — so one flooding tenant owns
+at most its weighted share of every flush and a light tenant's traffic
+overtakes the flood's backlog instead of queuing behind it (the
+paper's balanced-workload argument applied to the request plane).
+``stats()["tenants"]`` reports per-tenant state; the
+``repro_tenant_*`` metrics track it process-wide.
+
+Admission control: the queue is depth-bounded (``max_queue``), and
+with an ambient ``repro.tune`` model also COST-bounded
+(``max_queue_cost_us``): each submit is priced by the cost model and
+rejected when the queued work's predicted microseconds would blow the
+budget. Rejections (``QueueFullError``) carry ``retry_after_ms`` —
+model-derived (predicted drain of queued work + the request's own
+price, monotone in request size) when the model is warm, the static
+next-deadline guess when cold. ``sortd_admission_total{verdict}``
+counts admitted/queue_depth/queue_cost verdicts.
+
+Sort-adjacent request types: ``submit_topk(keys, k)``,
+``submit_searchsorted(keys, queries)`` and
+``submit_percentile(keys, q)`` serve cheaper-than-sort answers. All
+three plan as ordinary keys-only sorts, so they coalesce into the same
+flush buckets as plain sort traffic (``meta.coalesced`` proves it) and
+resolve to a ``SortOutput`` whose ``.keys`` is the answer — computed
+by the same ``core.topk`` helpers behind ``SortOutput.topk`` /
+``.searchsorted``, hence bit-identical to sort-then-slice. For
+out-of-core results, ``submit(..., where="stream",
+stream_chunks=True)`` resolves to a lazy output whose ``.chunks()``
+yields sorted chunks in bounded memory. Runnable tour:
+``examples/sort_tenants.py``.
+
 Observability (``repro.obs``)
 -----------------------------
 Phase-level tracing: ``repro.sort(x, limits=SortLimits(trace=True))``
@@ -266,7 +309,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import planner, sim, topk
+from repro.core import keyenc, planner, sim, topk
 from repro.core.overflow import OverflowPolicy, SortOverflowError
 from repro.core.planner import SortLimits, SortPlan
 from repro.core.result import SortMeta, SortOutput
@@ -302,15 +345,19 @@ def explain(keys, values=None, **kwargs) -> str:
 
 
 def encode_provenance(p: int, n_local: int) -> jnp.ndarray:
-    """(p, n) int32 payload: global position = proc * n_local + local index.
+    """(p, n) index payload: global position = proc * n_local + local index.
 
     Unique and increasing in (proc, idx) — makes every kv sort exactly
     stable and lets users recover ``(previous processor, location)`` the way
     the paper's library does. int32 bounds the sortable volume at 2^31
-    elements; past that, opt into x64 mode (``repro.enable_x64()``) and
-    build the payload as int64 — the door check admits it.
+    elements; past that the payload widens to int64, which requires x64
+    mode (``repro.enable_x64()``) — without it this raises rather than
+    silently overflowing the index (``keyenc.provenance_dtype``).
     """
-    return (jnp.arange(p * n_local, dtype=jnp.int32)).reshape(p, n_local)
+    from repro.core.x64 import x64_enabled
+
+    dt = keyenc.provenance_dtype(p * n_local, x64=x64_enabled())
+    return (jnp.arange(p * n_local, dtype=dt)).reshape(p, n_local)
 
 
 def decode_provenance(payload: jnp.ndarray, n_local: int):

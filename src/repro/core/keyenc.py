@@ -96,6 +96,34 @@ def decode_np(keys: np.ndarray, descending: bool) -> np.ndarray:
     return flip_np(keys) if descending else keys
 
 
+# ----------------------------------------------------- provenance payload
+
+PROVENANCE_INT32_CAP = 1 << 31
+"""Largest element count an int32 provenance payload can index (global
+positions 0..n-1 fit int32 iff n <= 2^31). Module-level so boundary
+tests can shrink it instead of allocating 2 GiB arrays."""
+
+
+def provenance_dtype(n: int, *, x64: bool = False):
+    """The index dtype of an n-element provenance payload.
+
+    int32 up to ``PROVENANCE_INT32_CAP`` elements; past that the payload
+    MUST widen to int64, which only the x64 mode can carry on device —
+    without the mode a silently truncated int32 iota would wrap negative
+    and corrupt every ``want="order"`` permutation past 2^31, so the
+    overflow is rejected loudly at the door instead."""
+    if n <= PROVENANCE_INT32_CAP:
+        return np.int32
+    if not x64:
+        raise TypeError(
+            f"provenance payload for n={n} elements overflows int32 "
+            f"(more than 2^31 global positions): the index payload must "
+            f"be int64, which needs x64 mode. Opt in with "
+            f"repro.enable_x64(), REPRO_X64=1, or SortLimits(x64=True)."
+        )
+    return np.int64
+
+
 # ------------------------------------------------- multi-key bit packing
 
 PACK_BUDGET_BITS = 31
@@ -326,8 +354,42 @@ def plan_pack(klist, descending, key_bits=None, ranks: dict | None = None,
         return None, (
             f"total width {widths}={spec.total_bits} bits exceeds the "
             f"{budget}-bit pack budget{hint}"
+            f"{_float_band_hint(klist, spec)}"
         )
     return spec, spec.describe()
+
+
+def _float_band_hint(klist, spec: PackSpec) -> str:
+    """Why did a float column measure wide? Its IEEE rank range spans
+    the full exponent band of its values — name that band (and a zero
+    crossing, which forces the rank range across the sign boundary) in
+    the pack-fallback reason so ``repro.explain()`` says WHY the budget
+    broke instead of just that it did. Only measured float fields can
+    be at fault (int widths are exact, and declared widths raise their
+    own errors), so the hint is empty for everything else."""
+    notes = []
+    for i, f in enumerate(spec.fields):
+        if f.kind != "float" or f.width == 0:
+            continue
+        col = np.asarray(klist[i]).reshape(-1).astype(np.float64)
+        finite = col[np.isfinite(col) & (col != 0.0)]
+        if finite.size == 0:
+            continue
+        _, exp = np.frexp(np.abs(finite))
+        lo, hi = int(exp.min()) - 1, int(exp.max()) - 1
+        crosses = bool((col > 0).any() and (col < 0).any())
+        notes.append(
+            f"key {i} ({f.dtype}) measured {f.width} rank bits from the "
+            f"exponent band [2^{lo}, 2^{hi}]"
+            + (" crossing zero" if crosses else "")
+        )
+    if not notes:
+        return ""
+    return (
+        "; " + "; ".join(notes)
+        + " — packing floats needs a narrow exponent band on one side "
+        "of zero"
+    )
 
 
 def pack_keys(klist, spec: PackSpec, ranks: dict | None = None) -> np.ndarray:

@@ -679,6 +679,45 @@ def _stable_order_fix(ks: np.ndarray, idx: np.ndarray) -> np.ndarray:
     return idx[np.lexsort((idx, seg))]
 
 
+def _stitch_bucket_ties(ks: np.ndarray, vs: np.ndarray, bucket_sizes,
+                        descending: bool = False) -> np.ndarray:
+    """Boundary stitch for the stream backend's DEVICE tie fix.
+
+    With ``segment_stable=True`` the per-bucket segment-stable pass runs
+    on device inside each bucket merge (``external_merge_kv``), so the
+    payload is already exactly stable WITHIN every bucket. The one case
+    the per-bucket pass cannot see is a run of equal keys split ACROSS
+    bucket boundaries (the investigator splits tied ranges to balance
+    load, paper Fig. 3c). At each cumulative bucket offset whose
+    neighbors tie, expand to the full equal-key run and sort the payload
+    ascending — within an equal-key run of a provenance (iota) payload,
+    exact stability IS ascending payload order, and each side arrives
+    already ascending, so the sort merely interleaves the two sides.
+    O(crossing runs) host work instead of the legacy whole-array pass.
+    """
+    if not bucket_sizes or len(bucket_sizes) <= 1 or ks.size <= 1:
+        return vs
+    n = ks.shape[0]
+    rev = ks[::-1] if descending else None
+    out = None
+    off = 0
+    for s in bucket_sizes[:-1]:
+        off += int(s)
+        if off <= 0 or off >= n or ks[off - 1] != ks[off]:
+            continue
+        v = ks[off]
+        if descending:
+            lo = n - int(np.searchsorted(rev, v, side="right"))
+            hi = n - int(np.searchsorted(rev, v, side="left"))
+        else:
+            lo = int(np.searchsorted(ks, v, side="left"))
+            hi = int(np.searchsorted(ks, v, side="right"))
+        if out is None:
+            out = np.array(vs)  # the D2H buffer may be read-only
+        out[lo:hi] = np.sort(out[lo:hi])
+    return vs if out is None else out
+
+
 def _sentinel(dtype) -> np.ndarray:
     from repro.kernels import ops as kops
     import jax.numpy as jnp
@@ -686,7 +725,7 @@ def _sentinel(dtype) -> np.ndarray:
     return np.asarray(kops.sentinel_for(jnp.dtype(dtype)))
 
 
-def _prep_single(req: _Req, *, raw: bool = False):
+def _prep_single(req: _Req, *, raw: bool = False, x64: bool = False):
     """Encode the key array + build the payload for a single-key sort.
 
     Returns (enc_keys flat-or-grid np/jnp, payload or None, descending,
@@ -696,6 +735,9 @@ def _prep_single(req: _Req, *, raw: bool = False):
     check and payload construction still run): the stream backend's
     device-decode path flips each chunk on device after H2D, so a
     whole-array host flip here would be allocated and thrown away.
+    ``x64``: the request's resolved mode — past 2^31 elements the
+    provenance payload must widen to int64, which only the mode admits
+    (``keyenc.provenance_dtype`` raises the opt-in TypeError otherwise).
     """
     descending = req.descending[0]
     keys = req.keys
@@ -709,7 +751,9 @@ def _prep_single(req: _Req, *, raw: bool = False):
         keyenc.check_payload_keys(keys, descending, packspec=req.packspec)
         enc = keys if (raw or not descending) else keyenc.encode(keys, True)
         if req.want == "order":
-            payload = np.arange(req.n, dtype=np.int32)
+            payload = np.arange(
+                req.n, dtype=keyenc.provenance_dtype(req.n, x64=x64)
+            )
             if req.n_local is not None:
                 payload = payload.reshape(keys.shape)
         else:
@@ -809,7 +853,7 @@ def _exec_sim(req: _Req, plan: SortPlan) -> SortOutput:
 
     tr = req.trace
     with _span(tr, "encode"):
-        enc, payload, descending, reverse = _prep_single(req)
+        enc, payload, descending, reverse = _prep_single(req, x64=plan.x64)
     p = plan.n_procs
     m = req.n
     with _span(tr, "stage") as sp:
@@ -880,7 +924,7 @@ def _exec_mesh(req: _Req, plan: SortPlan) -> SortOutput:
 
     tr = req.trace
     with _span(tr, "encode"):
-        enc, payload, descending, reverse = _prep_single(req)
+        enc, payload, descending, reverse = _prep_single(req, x64=plan.x64)
     axes = plan.axis_name if isinstance(plan.axis_name, tuple) else (plan.axis_name,)
     p = 1
     for a in axes:
@@ -980,7 +1024,8 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
     device_decode = plan.decode == "device"
     tr = req.trace
     with _span(tr, "encode"):
-        enc, payload, descending, reverse = _prep_single(req, raw=device_decode)
+        enc, payload, descending, reverse = _prep_single(
+            req, raw=device_decode, x64=plan.x64)
     stream_desc = device_decode and descending
     if stream_desc:
         reverse = False  # enc is already raw; the pipeline encodes on device
@@ -1025,18 +1070,26 @@ def _exec_stream(req: _Req, plan: SortPlan) -> SortOutput:
         return SortOutput(meta, chunks=gen)
 
     vflat = np.asarray(payload).reshape(-1)
+    # want="order" under the default device decode runs the segment-
+    # stable tie fix ON DEVICE, per bucket, inside each bucket merge
+    # (bounded memory: the device pass sees one O(bucket) working set at
+    # a time); only equal-key runs that the investigator split ACROSS
+    # buckets need the host boundary stitch below. decode="host" keeps
+    # the legacy whole-array host pass as the differential baseline.
+    seg_stable = device_decode and req.want == "order"
 
     def materialize():
         ks, vs = sort_external_kv(enc, vflat, scfg,
                                   investigator=req.investigator, stats=stats,
-                                  descending=stream_desc, trace=tr)
+                                  descending=stream_desc, trace=tr,
+                                  segment_stable=seg_stable)
         _account()
         if req.want == "order":
-            # stream tie fix stays on host: the whole out-of-core output
-            # can exceed device capacity, and the investigator may split
-            # a tied range across *buckets*, so the segment-stable pass
-            # must span the materialized array (sim/mesh fix on device)
-            vs = _stable_order_fix(ks, vs)
+            if seg_stable:
+                vs = _stitch_bucket_ties(ks, vs, stats.get("bucket_sizes"),
+                                         descending=stream_desc)
+            else:
+                vs = _stable_order_fix(ks, vs)
         if descending and not stream_desc:
             ks = keyenc.decode_np(ks, True)
         return ks, vs

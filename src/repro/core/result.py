@@ -250,26 +250,29 @@ class SortOutput:
 
     def searchsorted(self, queries, side: str = "left") -> np.ndarray:
         """Global insertion ranks of ``queries`` (np.searchsorted
-        semantics, aware of descending results)."""
+        semantics, aware of descending results). Shares its
+        implementation with the serve tier's ``searchsorted`` requests
+        (``core.topk.searchsorted_sorted``) — served answers are
+        bit-identical to this view."""
         keys = self.keys
         if isinstance(keys, tuple):
             raise ValueError("searchsorted is single-key only")
-        q = np.asarray(queries)
-        if self.meta.order == "desc":
-            other = {"left": "right", "right": "left"}[side]
-            return keys.shape[0] - np.searchsorted(keys[::-1], q, side=other)
-        return np.searchsorted(keys, q, side=side)
+        from repro.core.topk import searchsorted_sorted
+
+        return searchsorted_sorted(keys, queries, side=side,
+                                   descending=self.meta.order == "desc")
 
     def topk(self, k: int, largest: bool = True) -> np.ndarray:
-        """Top-k keys, best first, straight off the sorted result."""
+        """Top-k keys, best first, straight off the sorted result.
+        Shares its implementation with the serve tier's ``topk``
+        requests (``core.topk.topk_sorted``)."""
         keys = self.keys
         if isinstance(keys, tuple):
             raise ValueError("topk is single-key only")
-        k = min(k, keys.shape[0])
-        descending = self.meta.order == "desc"
-        if largest:
-            return keys[:k] if descending else keys[-k:][::-1]
-        return keys[-k:][::-1] if descending else keys[:k]
+        from repro.core.topk import topk_sorted
+
+        return topk_sorted(keys, k, largest=largest,
+                           descending=self.meta.order == "desc")
 
     def __len__(self) -> int:
         return self.meta.n

@@ -1,11 +1,19 @@
 """Distributed top-k / binary-search APIs on sorted data (paper §III/IV:
 "retrieving top values from their graph data or implementing binary search
 on the sorted data").
+
+The ``*_sorted`` host helpers at the bottom are the single definition of
+the sort-then-slice semantics for the sort-adjacent request types: both
+``SortOutput.topk``/``.searchsorted`` and the serve tier's ``topk`` /
+``searchsorted`` / ``percentile`` requests (``repro.serve.sortd``) call
+them, which is what makes a served answer bit-identical to slicing a
+plain ``repro.sort`` result yourself.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
@@ -44,3 +52,38 @@ def searchsorted_in_result(values: jnp.ndarray, counts: jnp.ndarray, queries: jn
     starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
     proc = jnp.clip(jnp.searchsorted(jnp.cumsum(counts), ranks, side="right"), 0, p - 1)
     return proc, ranks - starts[proc]
+
+
+# --------------------------------------------------------------- host views
+# Sort-then-slice oracles over an already-sorted host array. These are
+# deliberately trivial: the whole point is that the serve tier and the
+# SortOutput convenience views share ONE implementation, so a served
+# topk/searchsorted/percentile answer is bit-identical to computing the
+# same view on a repro.sort() result.
+
+def topk_sorted(keys: np.ndarray, k: int, *, largest: bool = True,
+                descending: bool = False) -> np.ndarray:
+    """Top-k of a sorted array, best first. ``descending`` names the
+    array's own order, not the output's."""
+    k = min(int(k), keys.shape[0])
+    if largest:
+        return keys[:k] if descending else keys[-k:][::-1]
+    return keys[-k:][::-1] if descending else keys[:k]
+
+
+def searchsorted_sorted(keys: np.ndarray, queries, *, side: str = "left",
+                        descending: bool = False) -> np.ndarray:
+    """Global insertion ranks (np.searchsorted semantics) into a sorted
+    array, aware of descending order."""
+    q = np.asarray(queries)
+    if descending:
+        other = {"left": "right", "right": "left"}[side]
+        return keys.shape[0] - np.searchsorted(keys[::-1], q, side=other)
+    return np.searchsorted(keys, q, side=side)
+
+
+def percentile_sorted(keys: np.ndarray, q, *, descending: bool = False) -> np.ndarray:
+    """Percentile(s) of the sorted data (numpy linear interpolation —
+    exactly ``np.percentile`` of the unsorted input)."""
+    ks = keys[::-1] if descending else keys
+    return np.percentile(np.asarray(ks, np.float64), q)

@@ -36,6 +36,33 @@ continue without waiting" front end for sort traffic:
   back off instead of hammering), and single requests above
   ``SortLimits.max_request_elems`` are rejected at admission
   (``RequestTooLargeError``) before they can monopolize the flush loop.
+  With an ambient ``repro.tune`` tuner the hint is model-derived — the
+  predicted drain time of the queued work plus the rejected request —
+  and ``max_queue_cost_us`` adds COST-based admission on top of the
+  depth bound: each request is priced by the cost model and rejected
+  when the queued work's predicted microseconds would exceed the budget.
+* Multi-tenant fairness: ``submit(..., tenant=..., priority=...)`` tags
+  requests with a client identity and a priority class. Dispatch order
+  is start-time weighted fair queuing — each tenant carries a virtual
+  clock advanced by ``cost / weight`` per request (cost from the tune
+  model when warmed, element count otherwise), and every flush takes
+  the ``max_batch`` best requests by ``(priority, virtual finish tag,
+  arrival)`` instead of strict FIFO. A flooding tenant therefore owns
+  at most its weighted share of each flush and a light tenant's
+  requests overtake the flood's queued backlog (the paper's
+  balanced-workload argument applied to the request plane). Lower
+  priority values dispatch first; weights are set via the ``tenants=``
+  constructor map or ``set_tenant``; unknown tenants get weight 1.0.
+* Sort-adjacent request types: ``submit_topk`` / ``submit_searchsorted``
+  / ``submit_percentile`` serve cheaper-than-sort answers computed from
+  the same keys-only sorted result (``core.topk`` host helpers — the
+  exact code behind ``SortOutput.topk``/``.searchsorted``, so served
+  answers are bit-identical to sort-then-slice). They plan as ordinary
+  keys-only sorts and therefore coalesce into the same flush buckets as
+  plain sort traffic (``meta.coalesced`` proves it). ``submit(...,
+  stream_chunks=True)`` serves an out-of-core result as a lazy chunk
+  stream: the future resolves to a ``SortOutput`` whose ``.chunks()``
+  yields sorted chunks in bounded memory instead of materializing.
 * ``stats()`` exposes queue depth, p50/p99 request latency, mean batch
   occupancy, compiled-program cache hits, and overflow-ladder retries —
   the telemetry surface ``benchmarks/serve_bench.py`` and autoscalers
@@ -56,7 +83,9 @@ from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 
+from repro import tune as _tune
 from repro.core import keyenc, planner
+from repro.core import topk as topk_lib
 from repro.core.overflow import SortOverflowError, bump_capacity
 from repro.core.result import SortMeta, SortOutput
 from repro.core.splitters import SortConfig
@@ -108,6 +137,22 @@ _M_FLUSH_TRIGGER = obs_metrics.counter(
     "expired, explicit flush(), or server close/drain.",
     labels=("trigger",),  # slots|deadline|forced|close
 )
+_M_ADMISSION = obs_metrics.counter(
+    "sortd_admission_total",
+    "Admission-control verdicts: admitted, rejected on queue depth, or "
+    "rejected on the cost-model budget (max_queue_cost_us).",
+    labels=("verdict",),  # admitted|queue_depth|queue_cost
+)
+_M_TENANT_REQUESTS = obs_metrics.counter(
+    "repro_tenant_requests_total",
+    "Per-tenant request outcomes on the sort server.",
+    labels=("tenant", "outcome"),  # submitted|completed|failed|rejected
+)
+_M_TENANT_DEPTH = obs_metrics.gauge(
+    "repro_tenant_queue_depth",
+    "Pending requests per tenant across all buckets.",
+    labels=("tenant",),
+)
 
 
 class QueueFullError(RuntimeError):
@@ -136,7 +181,8 @@ class _Pending:
     """One admitted request waiting in a bucket."""
 
     __slots__ = ("fut", "req", "plan", "data", "t_submit", "t_dispatch",
-                 "ctx")
+                 "ctx", "post", "tenant", "priority", "vtag", "cost",
+                 "stream_chunks")
 
     def __init__(self, fut, req, plan, data, t_submit, ctx):
         self.fut = fut
@@ -149,6 +195,53 @@ class _Pending:
         #                         (direct requests: pool queue time counts
         #                         as queue-wait — it IS backpressure)
         self.ctx = ctx          # obs.flight.RequestContext (trace_id etc.)
+        self.post = None        # sort-adjacent request types: host view
+        #                         applied to the sorted result at resolve
+        self.tenant = "default"
+        self.priority = 0       # lower dispatches first
+        self.vtag = 0.0         # WFQ virtual finish tag (start + cost/w)
+        self.cost = None        # model-priced cost (us); None when the
+        #                         tune model is cold (depth bound only)
+        self.stream_chunks = False
+
+
+class _Tenant:
+    """Per-tenant fair-queuing state (guarded by the server lock)."""
+
+    __slots__ = ("name", "weight", "vtime", "submitted", "completed",
+                 "failed", "rejected", "depth")
+
+    def __init__(self, name: str, weight: float = 1.0):
+        self.name = name
+        self.weight = float(weight)
+        self.vtime = 0.0        # virtual clock: finish tag of the
+        #                         tenant's most recent submission
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.depth = 0
+
+
+def _rough_n(keys) -> int:
+    """Pre-planning element-count estimate (cost pre-check only)."""
+    try:
+        if isinstance(keys, (tuple, list)) and keys:
+            keys = keys[0]
+        return int(np.size(keys))
+    except Exception:  # noqa: BLE001 — iterators etc.: planner decides later
+        return 0
+
+
+def _rough_dtype(keys):
+    if isinstance(keys, (tuple, list)) and keys:
+        keys = keys[0]
+    return getattr(keys, "dtype", None)
+
+
+def _single_key(keys, what: str) -> None:
+    if isinstance(keys, (tuple, list)):
+        raise ValueError(f"{what} requests are single-key only")
 
 
 class SortServer:
@@ -191,6 +284,19 @@ class SortServer:
     deadline_miss_factor: flight-recorder anomaly threshold — a request
       whose end-to-end latency exceeds ``factor * max_delay_ms`` dumps
       a ``deadline_miss`` incident snapshot (see ``repro.obs.flight``).
+    tenants: optional ``{name: weight}`` map declaring tenant weights
+      for weighted-fair dispatch (see the module docstring). Tenants
+      not declared here are created on first use with weight 1.0;
+      ``set_tenant`` adjusts weights live.
+    max_queue_cost_us: optional cost-model admission budget. When an
+      ambient ``repro.tune`` tuner prices requests confidently, a
+      submit whose predicted cost would push the queued total past
+      this many microseconds is rejected (``QueueFullError``,
+      ``sortd_admission_total{verdict="queue_cost"}``) with a
+      model-derived ``retry_after_ms``. Unpriced requests (cold model)
+      are bounded by ``max_queue`` depth only, and an over-budget
+      request arriving at an EMPTY queue is admitted rather than
+      rejected forever. Default None: depth-only admission.
 
     Every request is minted a ``trace_id`` at submit and its timeline
     (queue-wait -> flush/dispatch -> resolve, with the linking
@@ -208,10 +314,23 @@ class SortServer:
                  direct_workers: int = 2, latency_window: int = 2048,
                  adapt: AdaptConfig | AdaptiveController | None = None,
                  slo: SLOConfig | SLOTracker | None = None,
-                 deadline_miss_factor: float = 8.0):
+                 deadline_miss_factor: float = 8.0,
+                 tenants: dict[str, float] | None = None,
+                 max_queue_cost_us: float | None = None):
         self.max_batch = int(max_batch)
         self.max_delay = float(max_delay_ms) / 1e3
         self.max_queue = int(max_queue)
+        self.max_queue_cost_us = (
+            float(max_queue_cost_us) if max_queue_cost_us is not None else None
+        )
+        # WFQ state: per-tenant virtual clocks plus the server-wide
+        # virtual clock (advanced to the max dispatched finish tag, so
+        # an idle tenant cannot bank credit while away)
+        self._tenants: dict[str, _Tenant] = {
+            name: _Tenant(name, w) for name, w in (tenants or {}).items()
+        }
+        self._vclock = 0.0
+        self._queued_cost_us = 0.0  # model-priced pending work
         self.limits = limits if limits is not None else planner.SortLimits()
         self.config = config if config is not None else SortConfig()
         self.investigator = investigator
@@ -276,31 +395,54 @@ class SortServer:
 
     # ------------------------------------------------------------ client
     def submit(self, keys, values=None, *, order="asc", want="values",
-               where=None, limits=None, config=None,
-               investigator=None) -> SortFuture:
+               where=None, limits=None, config=None, investigator=None,
+               tenant: str | None = None, priority: int = 0,
+               stream_chunks: bool = False) -> SortFuture:
         """Plan + enqueue one sort request; returns immediately.
 
         Accepts ``repro.sort``'s keyword surface; per-request overrides
         fall back to the server defaults. Raises ``TypeError`` /
         ``ValueError`` for invalid requests, ``RequestTooLargeError`` and
         ``QueueFullError`` for admission failures — all synchronously at
-        submit, never on the future."""
+        submit, never on the future.
+
+        ``tenant`` names the submitting client for weighted-fair
+        dispatch (None = the shared ``"default"`` tenant); ``priority``
+        is the request's class — lower values dispatch first within the
+        fair order. ``stream_chunks=True`` (keys-only, stream backend)
+        resolves the future to a LAZY ``SortOutput``: consume
+        ``.chunks()`` for sorted chunks in bounded memory."""
+        return self._submit(keys, values, order=order, want=want,
+                            where=where, limits=limits, config=config,
+                            investigator=investigator, tenant=tenant,
+                            priority=priority, stream_chunks=stream_chunks)
+
+    def _submit(self, keys, values=None, *, order="asc", want="values",
+                where=None, limits=None, config=None, investigator=None,
+                tenant=None, priority=0, stream_chunks=False,
+                post=None) -> SortFuture:
+        tname = str(tenant) if tenant is not None else "default"
         # cheap admission pre-check BEFORE planning: serve_profile
         # measures multi-key pack widths (O(n * n_keys) host rank work)
         # and packing costs the same again, so a saturated queue must
         # reject without paying either — retry-hammering clients under
         # backpressure would otherwise burn that host CPU on every
         # doomed submit. The check at enqueue below remains the atomic,
-        # authoritative one (the queue can fill during planning).
+        # authoritative one (the queue can fill during planning). The
+        # cost pre-check prices the request from the raw input (size and
+        # dtype are knowable without planning).
+        est = self._price(_rough_n(keys), _rough_dtype(keys))
         with self._cond:
             if self._closed:
                 raise RuntimeError("SortServer is closed")
-            retry_ms = None
-            if self._depth >= self.max_queue:
-                self._stats["rejected"] += 1
-                retry_ms = self._retry_after_ms(time.monotonic())
+            retry_ms = reason = None
+            verdict = self._admission_verdict(est)
+            if verdict is not None:
+                reason = self._count_rejection(tname, verdict)
+                retry_ms = self._retry_after_ms(time.monotonic(),
+                                                cost_us=est)
         if retry_ms is not None:
-            self._reject(retry_ms)
+            self._reject(retry_ms, reason)
         cfg = config if config is not None else self.config
         inv = self.investigator if investigator is None else investigator
         lim = limits if limits is not None else self.limits
@@ -315,6 +457,19 @@ class SortServer:
                 f"SortLimits.max_request_elems={cap}; split it or sort it "
                 f"directly with repro.sort"
             )
+        if stream_chunks:
+            if values is not None or want != "values":
+                raise ValueError(
+                    "stream_chunks=True serves keys-only sorted chunks "
+                    "(no values/argsort payload)"
+                )
+            if plan.backend != "stream":
+                raise ValueError(
+                    "stream_chunks=True needs the out-of-core backend "
+                    f"(planned backend={plan.backend!r}); pass "
+                    "where='stream' or submit past stream_threshold"
+                )
+            batchable = False  # chunk responses dispatch individually
         # a request may only join a vmapped batch when it would both
         # compile against the engine's exact program (config / grid /
         # investigator) AND walk the engine's exact overflow ladder — a
@@ -351,16 +506,39 @@ class SortServer:
             n=req.n or 0, dtype=req.dtype, backend=plan.backend,
         )
         pend = _Pending(fut, req, plan, data, now, ctx)
-        retry_ms = None
+        pend.post = post
+        pend.tenant = tname
+        pend.priority = int(priority)
+        pend.stream_chunks = stream_chunks
+        # authoritative price, from the planned request (the pre-check
+        # estimated from the raw input)
+        pend.cost = self._price(req.n or 0, req.dtype, plan.backend)
+        retry_ms = reason = None
         with self._cond:
             if self._closed:
                 raise RuntimeError("SortServer is closed")
-            if self._depth >= self.max_queue:
+            verdict = self._admission_verdict(pend.cost)
+            if verdict is not None:
                 # the queue filled during planning: reject below, outside
                 # the lock (the burst trigger may write a snapshot file)
-                self._stats["rejected"] += 1
-                retry_ms = self._retry_after_ms(now)
+                reason = self._count_rejection(tname, verdict)
+                retry_ms = self._retry_after_ms(now, cost_us=pend.cost)
             else:
+                ten = self._tenant(tname)
+                # start-time fair queuing: virtual start = max(server
+                # clock, tenant clock); finish tag = start + cost/weight.
+                # The model's price is the cost when it predicts
+                # confidently; the element count is the cold-model proxy
+                # (fairness only needs costs consistent across tenants).
+                cost_proxy = (pend.cost if pend.cost is not None
+                              else float(req.n or 1))
+                ten.vtime = (max(self._vclock, ten.vtime)
+                             + cost_proxy / ten.weight)
+                pend.vtag = ten.vtime
+                if pend.cost is not None:
+                    self._queued_cost_us += pend.cost
+                ten.submitted += 1
+                ten.depth += 1
                 if batchable:
                     # descending requests bucket separately (same shapes,
                     # different fused program: in-program flip decode),
@@ -377,13 +555,79 @@ class SortServer:
                 self._depth += 1
                 self._stats["submitted"] += 1
                 _M_REQUESTS.labels(outcome="submitted").inc()
+                _M_ADMISSION.labels(verdict="admitted").inc()
+                _M_TENANT_REQUESTS.labels(
+                    tenant=tname, outcome="submitted").inc()
+                _M_TENANT_DEPTH.labels(tenant=tname).set(ten.depth)
                 _M_QUEUE_DEPTH.set(self._depth)
                 self._cond.notify()
         if retry_ms is not None:
-            self._reject(retry_ms)
+            self._reject(retry_ms, reason)
         return fut
 
-    def _reject(self, retry_after_ms: float) -> None:
+    # ------------------------------------------------- admission / tenants
+    def _admission_verdict(self, cost_us: float | None) -> str | None:
+        """Called under the lock: None = admit, else the rejection
+        verdict. The cost budget only binds when the model priced the
+        request (cold model -> depth bound only) and the queue is
+        nonempty (an over-budget request must not starve forever)."""
+        if self._depth >= self.max_queue:
+            return "queue_depth"
+        if (self.max_queue_cost_us is not None and cost_us is not None
+                and self._depth > 0
+                and self._queued_cost_us + cost_us > self.max_queue_cost_us):
+            return "queue_cost"
+        return None
+
+    def _count_rejection(self, tname: str, verdict: str) -> str:
+        """Called under the lock: account a rejection, return the
+        client-facing reason string."""
+        self._stats["rejected"] += 1
+        ten = self._tenant(tname)
+        ten.rejected += 1
+        _M_ADMISSION.labels(verdict=verdict).inc()
+        _M_TENANT_REQUESTS.labels(tenant=tname, outcome="rejected").inc()
+        if verdict == "queue_cost":
+            return (
+                f"sort queue over cost budget (~{self._queued_cost_us:.0f}us "
+                f"of queued work, max_queue_cost_us={self.max_queue_cost_us:.0f})"
+            )
+        return f"sort queue full ({self.max_queue} pending requests)"
+
+    def _price(self, n, dtype, backend: str = "sim") -> float | None:
+        """Cost-model price of one request in microseconds; None when no
+        ambient ``repro.tune`` tuner predicts confidently (cold model).
+        Cold behavior is therefore bit-identical to the unpriced server:
+        depth-only admission and element-count fair tags."""
+        tuner = _tune.current()
+        if tuner is None or not n or dtype is None:
+            return None
+        try:
+            pred = tuner.model.predict(
+                "sort", backend, str(np.dtype(dtype)), int(n))
+        except Exception:  # noqa: BLE001 — pricing must never block admission
+            return None
+        if pred is None or pred.confidence < tuner.min_confidence:
+            return None
+        return float(pred.us)
+
+    def _tenant(self, name: str) -> _Tenant:
+        """Called under the lock: get-or-create (weight 1.0) a tenant."""
+        ten = self._tenants.get(name)
+        if ten is None:
+            ten = self._tenants[name] = _Tenant(name)
+        return ten
+
+    def set_tenant(self, name: str, weight: float = 1.0) -> None:
+        """Declare or re-weight a tenant (live: affects the fair tags of
+        future submits; queued requests keep the tags they were admitted
+        with)."""
+        if weight <= 0:
+            raise ValueError("tenant weight must be positive")
+        with self._cond:
+            self._tenant(name).weight = float(weight)
+
+    def _reject(self, retry_after_ms: float, reason: str | None = None) -> None:
         """Admission rejection (stats already counted under the lock):
         feed the flight recorder's burst detector and raise. A burst —
         ``burst_threshold`` rejections inside ``burst_window_s`` — dumps
@@ -395,7 +639,7 @@ class SortServer:
                 "retry_after_ms": retry_after_ms,
             })
         raise QueueFullError(
-            f"sort queue full ({self.max_queue} pending requests)",
+            reason or f"sort queue full ({self.max_queue} pending requests)",
             retry_after_ms=retry_after_ms,
         )
 
@@ -423,6 +667,84 @@ class SortServer:
         behind a synchronous signature (the async ``sort_many``)."""
         futs = [self.submit(a, **sort_kwargs) for a in arrays]
         return [f.result() for f in futs]
+
+    # ------------------------------------------- sort-adjacent requests
+    # All three plan as ordinary keys-only sorts, so they coalesce into
+    # the same flush buckets as plain sort traffic; the answer is a host
+    # view over the sorted keys (core.topk *_sorted helpers — the exact
+    # code behind SortOutput.topk/.searchsorted, hence bit-identical to
+    # sort-then-slice), applied at resolve time on the dispatch thread.
+    # The resolved SortOutput reuses the sort's meta (meta.want names
+    # the request kind; meta.coalesced proves batch membership) and its
+    # .keys hold the answer.
+
+    def submit_topk(self, keys, k: int, *, largest: bool = True,
+                    order="asc", where=None, limits=None, config=None,
+                    investigator=None, tenant: str | None = None,
+                    priority: int = 0) -> SortFuture:
+        """Serve the top-``k`` keys, best first (``largest=False`` for
+        the bottom-k). Resolves to a ``SortOutput`` whose ``.keys`` is
+        the k-vector — bit-identical to
+        ``repro.sort(keys, ...).topk(k, largest)``."""
+        _single_key(keys, "topk")
+        k = int(k)
+
+        def post(out: SortOutput) -> SortOutput:
+            ans = topk_lib.topk_sorted(
+                np.asarray(out.keys), k, largest=largest,
+                descending=out.meta.order == "desc")
+            return self._view_output(out, "topk", ans)
+
+        return self._submit(keys, order=order, where=where, limits=limits,
+                            config=config, investigator=investigator,
+                            tenant=tenant, priority=priority, post=post)
+
+    def submit_searchsorted(self, keys, queries, *, side: str = "left",
+                            order="asc", where=None, limits=None,
+                            config=None, investigator=None,
+                            tenant: str | None = None,
+                            priority: int = 0) -> SortFuture:
+        """Serve the global insertion ranks of ``queries`` into the
+        sorted keys (np.searchsorted semantics, descending-aware) —
+        bit-identical to ``repro.sort(keys, ...).searchsorted(q, side)``."""
+        _single_key(keys, "searchsorted")
+        q = np.asarray(queries)
+
+        def post(out: SortOutput) -> SortOutput:
+            ans = topk_lib.searchsorted_sorted(
+                np.asarray(out.keys), q, side=side,
+                descending=out.meta.order == "desc")
+            return self._view_output(out, "searchsorted", ans)
+
+        return self._submit(keys, order=order, where=where, limits=limits,
+                            config=config, investigator=investigator,
+                            tenant=tenant, priority=priority, post=post)
+
+    def submit_percentile(self, keys, q, *, order="asc", where=None,
+                          limits=None, config=None, investigator=None,
+                          tenant: str | None = None,
+                          priority: int = 0) -> SortFuture:
+        """Serve percentile(s) of the keys (numpy linear interpolation,
+        exactly ``np.percentile``)."""
+        _single_key(keys, "percentile")
+        q = np.asarray(q, np.float64)
+
+        def post(out: SortOutput) -> SortOutput:
+            ans = topk_lib.percentile_sorted(
+                np.asarray(out.keys), q,
+                descending=out.meta.order == "desc")
+            return self._view_output(out, "percentile", ans)
+
+        return self._submit(keys, order=order, where=where, limits=limits,
+                            config=config, investigator=investigator,
+                            tenant=tenant, priority=priority, post=post)
+
+    @staticmethod
+    def _view_output(out: SortOutput, kind: str, ans) -> SortOutput:
+        # reuse the sort's meta so coalesced/trace_id/flush_id survive
+        # on the served view; want names the request kind
+        out.meta.want = kind
+        return SortOutput(out.meta, keys=ans)
 
     def flush(self, timeout: float | None = None) -> None:
         """Force-flush everything queued now and block until it resolves
@@ -456,6 +778,14 @@ class SortServer:
             lat_ms = np.asarray(self._lat, np.float64) * 1e3
             queue_ms = np.asarray(self._lat_queue, np.float64) * 1e3
             exec_ms = np.asarray(self._lat_exec, np.float64) * 1e3
+            tenants = {
+                name: {"weight": t.weight, "vtime": t.vtime,
+                       "submitted": t.submitted, "completed": t.completed,
+                       "failed": t.failed, "rejected": t.rejected,
+                       "depth": t.depth}
+                for name, t in self._tenants.items()
+            }
+            queued_cost = self._queued_cost_us
         flushes = s["flushes"]
 
         def _pct(arr, q):
@@ -481,6 +811,15 @@ class SortServer:
                 adaptations=self._adapt.adjustments,
                 bound_saturations=self._adapt.bound_saturations,
             )
+        if tenants:
+            # per-tenant fair-queuing state (only tenants actually seen;
+            # an all-default workload reports the one "default" entry)
+            s["tenants"] = tenants
+        s["admission"] = {
+            "max_queue": self.max_queue,
+            "max_queue_cost_us": self.max_queue_cost_us,
+            "queued_cost_us": queued_cost,
+        }
         if self._slo is not None:
             # declared objective + live burn rate (see repro.obs.slo);
             # the same numbers scrape as the repro_slo_* gauges
@@ -509,8 +848,17 @@ class SortServer:
         delay = self.max_delay if key[0] == "batch" else 0.0
         return pends[0].t_submit + delay
 
-    def _retry_after_ms(self, now: float) -> float:
-        """Called under the lock: time until the next flush frees slots."""
+    def _retry_after_ms(self, now: float, cost_us: float | None = None) -> float:
+        """Called under the lock: backoff hint for a rejected submit.
+
+        When the cost model priced the rejected request (``cost_us``),
+        the hint is the predicted DRAIN time — the queued work's priced
+        microseconds plus the rejected request's own price — which is
+        monotone in request size (bigger rejected sorts are told to back
+        off longer). Cold model: the static guess, time until the next
+        flush deadline frees slots."""
+        if cost_us is not None:
+            return (self._queued_cost_us + cost_us) / 1e3
         deadlines = [
             self._deadline(k, p) for k, p in self._buckets.items() if p
         ]
@@ -556,10 +904,33 @@ class SortServer:
                     if self._closed:
                         return
                     self._cond.wait(self._wait_timeout(now))
-                # force selects every nonempty bucket, so it is spent here
-                self._force = False
-                work = [(k, self._buckets.pop(k)) for k in ready]
+                # force stays set until the queue fully drains (the wait
+                # loop clears it when nothing is ready): an oversized
+                # bucket dispatches max_batch per pass, and a forced
+                # flush must also sweep the sub-max_batch remainder
+                # whose deadline may be far out — flush() promises
+                # "everything queued now", not "one dispatch group"
+                work = [(k, self._take(k)) for k in ready]
+                # groups dispatch in fair order too — the group whose
+                # best member has the lowest fair key goes first, so
+                # priority classes order the direct pool's queue as well
+                work.sort(key=lambda kp: self._fair_key(kp[1][0]))
                 self._depth -= sum(len(p) for _, p in work)
+                for _, pends in work:
+                    for p in pends:
+                        if p.cost is not None:
+                            self._queued_cost_us -= p.cost
+                        ten = self._tenants.get(p.tenant)
+                        if ten is not None:
+                            ten.depth -= 1
+                            _M_TENANT_DEPTH.labels(
+                                tenant=p.tenant).set(ten.depth)
+                        # the server's virtual clock chases the highest
+                        # dispatched finish tag: a tenant returning from
+                        # idle starts at the current clock, not at zero
+                        if p.vtag > self._vclock:
+                            self._vclock = p.vtag
+                self._queued_cost_us = max(self._queued_cost_us, 0.0)
                 _M_QUEUE_DEPTH.set(self._depth)
                 # queue-depth history for incident snapshots (leaf-lock
                 # deque append — never blocks on I/O)
@@ -567,6 +938,37 @@ class SortServer:
             for key, pends in work:
                 self._flush_group(key, pends)
             self._maybe_adapt()
+
+    @staticmethod
+    def _fair_key(p: _Pending) -> tuple:
+        return (p.priority, p.vtag, p.t_submit)
+
+    def _take(self, key: tuple) -> list[_Pending]:
+        """Pop one dispatch group from a ready bucket (under the lock).
+
+        A batch bucket dispatches at most ``max_batch`` requests per
+        flush, chosen in weighted-fair order ``(priority, vtag,
+        arrival)``; the remainder stays queued IN ARRIVAL ORDER (the
+        bucket deadline keys off its oldest member). The remainder's
+        deadline is already due, so the loop re-selects the bucket on
+        its next pass — but anything submitted in between competes on
+        fair tags, not arrival order, which is exactly how a light
+        tenant's request overtakes a flooding tenant's queued backlog.
+        """
+        pends = self._buckets[key]
+        if key[0] != "batch":
+            del self._buckets[key]
+            return pends
+        if len(pends) <= self.max_batch:
+            del self._buckets[key]
+            return sorted(pends, key=self._fair_key)
+        order = sorted(range(len(pends)),
+                       key=lambda i: self._fair_key(pends[i]))
+        chosen = set(order[: self.max_batch])
+        self._buckets[key] = [
+            p for i, p in enumerate(pends) if i not in chosen
+        ]
+        return [pends[i] for i in order[: self.max_batch]]
 
     def _maybe_adapt(self) -> None:
         """Adaptive-serve evaluation point, called from the flush loop
@@ -684,6 +1086,14 @@ class SortServer:
             p.ctx.sampled = True
         try:
             out = planner.execute_request(p.req, p.plan, ctx=p.ctx)
+            if p.stream_chunks:
+                # chunk-stream response: resolve the LAZY output — the
+                # sort runs in bounded memory as the client consumes
+                # .chunks(). Materializing here would defeat the point;
+                # ladder accounting happens when the stream actually runs
+                self._record_sampled(p, tr)
+                self._resolve(p, out)
+                return
             # materialize HERE so terminal errors land on the future (not
             # in the caller's .keys access) and the stream backend's
             # ladder accounting is complete
@@ -744,11 +1154,24 @@ class SortServer:
         _M_EXECUTE.observe(execute * 1e3)
 
     def _resolve(self, p: _Pending, out: SortOutput) -> None:
+        if p.post is not None:
+            # sort-adjacent request types: derive the served view from
+            # the sorted keys here on the dispatch thread, so a failing
+            # view lands on the future rather than in the client
+            try:
+                out = p.post(out)
+            except Exception as e:  # noqa: BLE001 — future owns it
+                self._fail(p, e)
+                return
         now = time.monotonic()
         with self._cond:
             self._record_latency(p, now)
             self._stats["completed"] += 1
+            ten = self._tenants.get(p.tenant)
+            if ten is not None:
+                ten.completed += 1
         _M_REQUESTS.labels(outcome="completed").inc()
+        _M_TENANT_REQUESTS.labels(tenant=p.tenant, outcome="completed").inc()
         p.ctx.finish("completed", now)
         self._observe_flight(p, error=False)
         p.fut.set_result(out)
@@ -758,7 +1181,11 @@ class SortServer:
         with self._cond:
             self._record_latency(p, now)
             self._stats["failed"] += 1
+            ten = self._tenants.get(p.tenant)
+            if ten is not None:
+                ten.failed += 1
         _M_REQUESTS.labels(outcome="failed").inc()
+        _M_TENANT_REQUESTS.labels(tenant=p.tenant, outcome="failed").inc()
         p.ctx.finish("failed", now, error=e)
         self._observe_flight(p, error=True)
         if isinstance(e, SortOverflowError):

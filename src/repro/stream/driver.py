@@ -59,6 +59,11 @@ def _pipeline(
     with _span(trace, "splitter") as sp:
         part = partition_runs(runs, cfg, investigator=investigator)
         sp.counts(list(part.bucket_sizes))
+    if stats is not None:
+        # bucket layout of the output stream: the planner's cross-bucket
+        # tie stitch needs the boundaries to find equal-key runs that
+        # span adjacent buckets
+        stats["bucket_sizes"] = [int(b) for b in part.bucket_sizes]
     return part
 
 
@@ -123,9 +128,15 @@ def sort_external_kv(
     stats: dict | None = None,
     descending: bool = False,
     trace=None,
+    segment_stable: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Out-of-core key/value sort (the payload — e.g. provenance indices —
-    rides every pass: run generation, partitioning and the final merge)."""
+    rides every pass: run generation, partitioning and the final merge).
+
+    ``segment_stable=True`` runs the equal-key tie fix on device inside
+    each bucket's merge program; only ties crossing bucket boundaries
+    remain for the caller (boundaries are in ``stats["bucket_sizes"]``).
+    """
     part = _pipeline(keys, cfg, values, investigator=investigator,
                      stats=stats, descending=descending, trace=trace)
     if part is None:
@@ -134,7 +145,7 @@ def sort_external_kv(
     ks, vs = [], []
     for mk, mv in external_merge_kv(
         part, use_pallas=cfg.sort.use_pallas, out_chunk=out_chunk,
-        descending=descending, trace=trace,
+        descending=descending, trace=trace, segment_stable=segment_stable,
     ):
         ks.append(mk)
         vs.append(mv)

@@ -63,24 +63,68 @@ def merge_segments(
     return np.asarray(merged)[:total]
 
 
+def _segment_stable_single(ks: np.ndarray, vs: np.ndarray) -> np.ndarray:
+    """Device segment-stable pass for a single-segment bucket.
+
+    One run is still segment-interleaved within its equal-key runs (the
+    chunk sort's investigator splits tied ranges too), so the tie fix
+    must run here as well. The segment is padded to the next power of
+    two with the key sentinel — the pad tail forms one trailing tie
+    segment whose values sort among themselves and are sliced off — so
+    a steady stream of ragged buckets reuses O(log) compiled programs.
+    """
+    from repro.core.local_sort import segment_stable_kv
+
+    n = ks.shape[0]
+    if n <= 1:
+        return vs
+    m = _next_pow2(n)
+    kfill = np.asarray(kops.sentinel_for(jnp.dtype(ks.dtype)))
+    vfill = np.asarray(kops.sentinel_for(jnp.dtype(vs.dtype)))
+    kb = np.full(m, kfill, ks.dtype)
+    kb[:n] = ks
+    vb = np.full(m, vfill, vs.dtype)
+    vb[:n] = vs
+    mv = segment_stable_kv(jnp.asarray(kb), jnp.asarray(vb))
+    return np.asarray(mv)[:n]
+
+
 def merge_segments_kv(
     key_segments: list[np.ndarray],
     value_segments: list[np.ndarray],
     *,
     use_pallas: bool = True,
     descending: bool = False,
+    segment_stable: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
+    """kv twin of ``merge_segments``. ``segment_stable=True`` fuses the
+    stable-argsort tie fix (``local_sort.segment_stable_kv``) into the
+    bucket's device program, right after the merge and before the D2H
+    copy — the stream side of the device tie fix the sim/mesh decode
+    already runs. Ties are flip-invariant, so the pass runs on the
+    encoded keys regardless of ``descending``; only equal-key runs
+    crossing BUCKET boundaries remain for the caller's host stitch
+    (``planner._stitch_bucket_ties``)."""
     if not key_segments:
         return np.empty(0), np.empty(0)
     if len(key_segments) == 1:
-        ks = key_segments[0]
-        return (keyenc.flip_np(ks) if descending else ks), value_segments[0]
+        ks, vs = key_segments[0], value_segments[0]
+        if segment_stable:
+            vs = _segment_stable_single(ks, vs)
+        return (keyenc.flip_np(ks) if descending else ks), vs
     total = sum(s.shape[0] for s in key_segments)
     kfill = np.asarray(kops.sentinel_for(jnp.dtype(key_segments[0].dtype)))
     vfill = np.asarray(kops.sentinel_for(jnp.dtype(value_segments[0].dtype)))
     ks = jnp.asarray(_stack_padded(key_segments, kfill))
     vs = jnp.asarray(_stack_padded(value_segments, vfill))
     mk, mv = merge_lib.merge_padded_runs_kv(ks, vs, use_pallas=use_pallas)
+    if segment_stable:
+        # pads carry the key sentinel: they form one trailing tie
+        # segment past every real key (kv sorts reject sentinel-valued
+        # keys at the planner door), reordered harmlessly and sliced off
+        from repro.core.local_sort import segment_stable_kv
+
+        mv = segment_stable_kv(mk, mv)
     if descending:
         mk = keyenc.flip(mk)  # device decode before the D2H copy
     return np.asarray(mk)[:total], np.asarray(mv)[:total]
@@ -117,7 +161,7 @@ def external_merge(
 
 def external_merge_kv(
     part: Partition, *, use_pallas: bool = True, out_chunk: int | None = None,
-    descending: bool = False, trace=None
+    descending: bool = False, trace=None, segment_stable: bool = False
 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
     assert part.value_segments is not None, "partition carries no values"
     for b, (segs, vsegs) in enumerate(
@@ -126,6 +170,7 @@ def external_merge_kv(
         with _span(trace, "merge", bucket=b) as sp:
             sp.counts([s.shape[0] for s in segs])
             mk, mv = merge_segments_kv(segs, vsegs, use_pallas=use_pallas,
-                                       descending=descending)
+                                       descending=descending,
+                                       segment_stable=segment_stable)
         for lo, hi in _chunk_slices(mk.shape[0], out_chunk):
             yield mk[lo:hi], mv[lo:hi]

@@ -212,7 +212,13 @@ class FlushEngine:
         trace_ids, stamps its coarse phase breakdown (stage / sort /
         d2h) onto every member context, and records ONE flush summary
         in the flight recorder — the "one flush span, N request spans"
-        linkage the trace export reconstructs."""
+        linkage the trace export reconstructs.
+
+        Ordering contract: entries run in LIST ORDER, sliced into
+        ``max_batch``-sized vmapped programs front to back. Any
+        scheduling policy (e.g. ``serve.sortd``'s weighted-fair tenant
+        queues) must therefore order ``datas`` BEFORE calling — the
+        engine itself is policy-free."""
         elems = self.bucket_elems(datas[0].shape[0])
         out: list = []
         for i in range(0, len(datas), self.max_batch):

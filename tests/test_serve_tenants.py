@@ -1,0 +1,322 @@
+"""Multi-tenant fair serving (repro.serve.sortd): weighted-fair queues,
+priority classes, cost-based admission with model-derived retry hints,
+and the sort-adjacent request types (topk / searchsorted / percentile /
+stream_chunks) that coalesce into the shared flush buckets."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro import obs, tune
+from repro.core.splitters import SortConfig
+from repro.serve import QueueFullError, SortServer
+
+CFG = SortConfig(use_pallas=False, capacity_factor=2.0)
+LIMITS = repro.SortLimits(n_procs=4)
+RNG = np.random.default_rng(0)
+
+
+def _server(**kw):
+    kw.setdefault("config", CFG)
+    kw.setdefault("limits", LIMITS)
+    return SortServer(**kw)
+
+
+def _paused_server(**kw):
+    """Deadline/slot targets never fire on their own: requests sit
+    queued until an explicit flush(), so dispatch order and queue
+    contents are deterministic."""
+    kw.setdefault("max_batch", 10_000)
+    return _server(max_delay_ms=600_000, **kw)
+
+
+def _seeded_store():
+    """A warm cost model: ~100us per 4096 float32 elements on sim."""
+    store = tune.TuneStore()
+    for n in (1 << 12, 1 << 14, 1 << 16):
+        store.observe("sort", "sim", "float32", n, 100.0 * n / (1 << 12),
+                      weight=2.0)
+    return store
+
+
+def _track(order, lock, fut, tag):
+    def _done(_):
+        with lock:
+            order.append(tag)
+
+    fut.add_done_callback(_done)
+    return fut
+
+
+# ---------------------------------------------------------- fairness
+
+
+def test_light_tenant_progresses_under_flood():
+    """20 heavy requests queued ahead of 2 light ones; with max_batch=4
+    weighted-fair dispatch must serve the light tenant within the first
+    two flushes instead of draining the flood first (strict FIFO would
+    resolve it 21st)."""
+    order: list = []
+    lock = threading.Lock()
+    with _paused_server(max_batch=4,
+                        tenants={"heavy": 1.0, "light": 1.0}) as srv:
+        heavy = [
+            _track(order, lock,
+                   srv.submit(RNG.normal(0, 1, 512).astype(np.float32),
+                              tenant="heavy"), ("heavy", i))
+            for i in range(20)
+        ]
+        light = [
+            _track(order, lock,
+                   srv.submit(RNG.normal(0, 1, 512).astype(np.float32),
+                              tenant="light"), ("light", i))
+            for i in range(2)
+        ]
+        srv.flush(timeout=120)
+        for f in heavy + light:
+            f.result(120)
+    tenants_in_first_8 = [t for t, _ in order[:8]]
+    assert "light" in tenants_in_first_8, order[:8]
+
+    # and the requests themselves stay correct under reordering
+    for f in heavy + light:
+        out = f.result(0)
+        assert np.all(np.diff(out.keys) >= 0)
+
+
+def test_weights_bias_dispatch_share():
+    """A 4x-weighted tenant's virtual clock advances 4x slower, so its
+    requests sort ahead of an equal-cost 1x tenant's backlog. Fully
+    paused server + one forced flush: the group resolves in fair order,
+    so the resolution sequence IS the dispatch order."""
+    order: list = []
+    lock = threading.Lock()
+    with _paused_server(tenants={"slow": 1.0, "fast": 4.0}) as srv:
+        futs = []
+        for i in range(8):
+            futs.append(_track(
+                order, lock,
+                srv.submit(RNG.normal(0, 1, 256).astype(np.float32),
+                           tenant="slow"), ("slow", i)))
+        for i in range(8):
+            futs.append(_track(
+                order, lock,
+                srv.submit(RNG.normal(0, 1, 256).astype(np.float32),
+                           tenant="fast"), ("fast", i)))
+        srv.flush(timeout=120)
+        for f in futs:
+            f.result(120)
+    # among the first half of resolutions the 4x tenant must hold the
+    # majority despite submitting second
+    first_half = [t for t, _ in order[:8]]
+    assert first_half.count("fast") > first_half.count("slow"), order
+
+
+def test_priority_class_jumps_backlog():
+    """priority=-1 sorts ahead of every priority-0 request regardless of
+    fair tags: submitted LAST behind a 12-deep backlog, the urgent
+    request must resolve FIRST (fully paused server, one forced flush,
+    group resolves in fair order)."""
+    order: list = []
+    lock = threading.Lock()
+    with _paused_server() as srv:
+        backlog = [
+            _track(order, lock,
+                   srv.submit(RNG.normal(0, 1, 512).astype(np.float32)),
+                   ("norm", i))
+            for i in range(12)
+        ]
+        urgent = _track(
+            order, lock,
+            srv.submit(RNG.normal(0, 1, 512).astype(np.float32),
+                       priority=-1), ("urgent", 0))
+        srv.flush(timeout=120)
+        for f in backlog:
+            f.result(120)
+        urgent.result(120)
+    assert order[0] == ("urgent", 0), order[:4]
+
+
+def test_forced_flush_drains_oversized_bucket():
+    """flush() must drain a bucket deeper than max_batch completely —
+    including the sub-max_batch remainder whose deadline is far out
+    (the paused-server stranding regression)."""
+    with _paused_server(max_batch=4) as srv:
+        futs = [srv.submit(RNG.normal(0, 1, 256).astype(np.float32))
+                for _ in range(13)]
+        srv.flush(timeout=120)
+        for f in futs:
+            out = f.result(5)
+            assert np.all(np.diff(out.keys) >= 0)
+        assert srv.stats()["queue_depth"] == 0
+
+
+def test_set_tenant_and_stats_surface():
+    with _paused_server(tenants={"a": 2.0}) as srv:
+        srv.set_tenant("b", weight=3.0)
+        with pytest.raises(ValueError):
+            srv.set_tenant("c", weight=0.0)
+        f = srv.submit(RNG.normal(0, 1, 128).astype(np.float32), tenant="a")
+        g = srv.submit(RNG.normal(0, 1, 128).astype(np.float32), tenant="b")
+        s = srv.stats()
+        assert s["tenants"]["a"]["depth"] == 1
+        assert s["tenants"]["b"]["weight"] == 3.0
+        srv.flush(timeout=120)
+        f.result(120)
+        g.result(120)
+        s = srv.stats()
+        assert s["tenants"]["a"]["completed"] == 1
+        assert s["tenants"]["a"]["depth"] == 0
+        assert s["tenants"]["b"]["submitted"] == 1
+        # unknown tenants auto-create at weight 1.0
+        assert s["admission"]["max_queue"] == srv.max_queue
+
+
+# ---------------------------------------------------------- admission
+
+
+def test_retry_after_hint_monotone_in_request_size():
+    """With a warm cost model the retry hint is the model-predicted
+    drain time, so a bigger rejected request gets a bigger hint."""
+    with tune.active(_seeded_store()):
+        with _paused_server(max_queue=1) as srv:
+            first = srv.submit(np.zeros(1 << 12, np.float32))
+            hints = []
+            for n in (1 << 12, 1 << 14, 1 << 16):
+                with pytest.raises(QueueFullError) as ei:
+                    srv.submit(np.zeros(n, np.float32))
+                hints.append(ei.value.retry_after_ms)
+            srv.flush(timeout=120)
+            first.result(120)
+    assert hints[0] < hints[1] < hints[2], hints
+    s = obs.render_prometheus()
+    assert 'sortd_admission_total{verdict="queue_depth"}' in s
+
+
+def test_queue_cost_budget_rejects_with_model_price():
+    """max_queue_cost_us binds only when the model priced the request
+    and work is already queued; the rejection names the budget."""
+    with tune.active(_seeded_store()):
+        with _paused_server(max_queue_cost_us=300.0) as srv:
+            # over-budget on an EMPTY queue still admits (no deadlock)
+            big = srv.submit(np.zeros(1 << 16, np.float32))
+            with pytest.raises(QueueFullError) as ei:
+                srv.submit(np.zeros(1 << 14, np.float32))
+            assert "cost budget" in str(ei.value)
+            assert ei.value.retry_after_ms > 0
+            s = srv.stats()
+            assert s["admission"]["max_queue_cost_us"] == 300.0
+            assert s["admission"]["queued_cost_us"] > 0
+            srv.flush(timeout=120)
+            big.result(120)
+    assert 'sortd_admission_total{verdict="queue_cost"}' in (
+        obs.render_prometheus())
+
+
+def test_cold_model_means_no_cost_admission():
+    """Without a tuner the budget can never bind: behavior is the
+    pre-PR depth-only admission, bit for bit."""
+    with _paused_server(max_queue_cost_us=1e-6) as srv:
+        futs = [srv.submit(np.zeros(1 << 14, np.float32))
+                for _ in range(4)]
+        srv.flush(timeout=120)
+        for f in futs:
+            f.result(120)
+        assert srv.stats()["admission"]["queued_cost_us"] == 0.0
+
+
+def test_rejected_tenant_counted():
+    with _paused_server(max_queue=1, tenants={"t": 1.0}) as srv:
+        f = srv.submit(np.zeros(256, np.float32), tenant="t")
+        with pytest.raises(QueueFullError):
+            srv.submit(np.zeros(256, np.float32), tenant="t")
+        assert srv.stats()["tenants"]["t"]["rejected"] == 1
+        srv.flush(timeout=120)
+        f.result(120)
+    s = obs.render_prometheus()
+    assert 'repro_tenant_requests_total{outcome="rejected",tenant="t"}' in s \
+        or 'repro_tenant_requests_total{tenant="t",outcome="rejected"}' in s
+
+
+# ---------------------------------------------------- request types
+
+
+def test_topk_searchsorted_percentile_coalesce_and_match_oracle():
+    """The sort-adjacent types plan as ordinary keys-only sorts, share
+    flush buckets with plain sort traffic (meta.coalesced), and answer
+    bit-identically to sort-then-slice."""
+    x = RNG.normal(0, 1, 4096).astype(np.float32)
+    with _paused_server(max_batch=8) as srv:
+        futs = [srv.submit(RNG.normal(0, 1, 4096).astype(np.float32))
+                for _ in range(4)]
+        top = srv.submit_topk(x, 7)
+        bot = srv.submit_topk(x, 7, largest=False)
+        ranks = srv.submit_searchsorted(x, [-1.0, 0.0, 1.0])
+        p99 = srv.submit_percentile(x, 99.0)
+        srv.flush(timeout=120)
+        for f in futs:
+            f.result(120)
+        top, bot = top.result(120), bot.result(120)
+        ranks, p99 = ranks.result(120), p99.result(120)
+
+    oracle = repro.sort(x, config=CFG, limits=LIMITS)
+    np.testing.assert_array_equal(top.keys, oracle.topk(7))
+    np.testing.assert_array_equal(bot.keys, oracle.topk(7, largest=False))
+    np.testing.assert_array_equal(
+        ranks.keys, oracle.searchsorted([-1.0, 0.0, 1.0]))
+    assert float(p99.keys) == float(
+        np.percentile(np.asarray(oracle.keys, np.float64), 99.0))
+    # all shared one 8-deep flush with the plain sorts
+    for out in (top, bot, ranks, p99):
+        assert out.meta.coalesced == 8
+        assert out.meta.want in ("topk", "searchsorted", "percentile")
+
+
+def test_request_types_direct_dispatch_matches_oracle():
+    """decode='host' forces the non-coalescable direct path; answers
+    must still be bit-identical (same core.topk helpers both ways)."""
+    x = RNG.normal(0, 1, 2048).astype(np.float32)
+    limits = dataclasses.replace(LIMITS, decode="host")
+    with _server(max_batch=8, max_delay_ms=5.0, limits=limits) as srv:
+        top = srv.submit_topk(x, 5).result(120)
+        ranks = srv.submit_searchsorted(x, [0.0], side="right").result(120)
+    oracle = repro.sort(x, config=CFG, limits=limits)
+    np.testing.assert_array_equal(top.keys, oracle.topk(5))
+    np.testing.assert_array_equal(
+        ranks.keys, oracle.searchsorted([0.0], side="right"))
+    assert top.meta.coalesced is None
+
+
+def test_descending_topk_served():
+    x = RNG.normal(0, 1, 1024).astype(np.float32)
+    with _server(max_batch=4, max_delay_ms=5.0) as srv:
+        top = srv.submit_topk(x, 5, order="desc").result(120)
+    oracle = repro.sort(x, order="desc", config=CFG, limits=LIMITS)
+    np.testing.assert_array_equal(top.keys, oracle.topk(5))
+
+
+def test_request_types_reject_multikey():
+    with _paused_server() as srv:
+        with pytest.raises(ValueError, match="single-key"):
+            srv.submit_topk((np.zeros(8, np.float32),
+                             np.zeros(8, np.int32)), 3)
+
+
+def test_stream_chunks_served_lazily():
+    """stream_chunks=True defers materialization to the client: the
+    future resolves to a result whose chunks() concatenate to np.sort."""
+    x = RNG.normal(0, 1, 50_000).astype(np.float32)
+    limits = dataclasses.replace(LIMITS, chunk_elems=4096)
+    with _server(max_batch=4, max_delay_ms=5.0, limits=limits) as srv:
+        out = srv.submit(x, where="stream", stream_chunks=True).result(120)
+        parts = list(out.chunks())
+    assert len(parts) > 1
+    np.testing.assert_array_equal(np.concatenate(parts), np.sort(x))
+
+
+def test_stream_chunks_requires_stream_backend():
+    with _paused_server() as srv:
+        with pytest.raises(ValueError, match="stream"):
+            srv.submit(np.zeros(256, np.float32), stream_chunks=True)

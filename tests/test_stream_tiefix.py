@@ -1,0 +1,122 @@
+"""Stream ``want="order"`` tie stability: the device-side per-bucket
+segmented stable pass (``stream.external_merge.segment_stable_kv``)
+plus the host boundary stitch (``planner._stitch_bucket_ties``) must
+reproduce ``np.argsort(kind="stable")`` exactly on duplicate-heavy
+input — and must do it WITHOUT the legacy whole-array host fix-up.
+
+The regression half monkeypatches ``planner._stable_order_fix`` to
+raise: the pre-PR device-decode path called it on every materialize
+(host argsort over the full output — the bug: O(n log n) host work and
+a full extra host copy per sort); post-PR only the legacy
+``decode="host"`` path may touch it."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import planner
+
+CFG = repro.SortConfig(use_pallas=False, capacity_factor=2.0)
+# few distinct keys over many elements: almost every element is a tie,
+# and ties straddle both chunk and merge-bucket boundaries
+LIMITS = repro.SortLimits(n_procs=4, chunk_elems=4096)
+N = 50_000
+
+
+def _dup_keys(seed=0, n=N, distinct=8):
+    rng = np.random.default_rng(seed)
+    pool = rng.normal(0, 1, distinct).astype(np.float32)
+    return pool[rng.integers(0, distinct, n)]
+
+
+def _stable_oracle(keys, descending=False):
+    if descending:
+        # stable descending: sort on the negated rank, ties keep arrival
+        return np.argsort(-keys, kind="stable")
+    return np.argsort(keys, kind="stable")
+
+
+@pytest.mark.parametrize("order", ["asc", "desc"])
+def test_device_order_matches_stable_argsort(order):
+    keys = _dup_keys()
+    out = repro.sort(keys, order=order, want="order", where="stream",
+                     config=CFG, limits=LIMITS)
+    assert out.meta.backend == "stream"
+    oracle = _stable_oracle(keys, descending=order == "desc")
+    np.testing.assert_array_equal(out.order(), oracle)
+    np.testing.assert_array_equal(out.keys, keys[oracle])
+
+
+def test_host_decode_differential_baseline():
+    """decode="host" keeps the legacy whole-array host fix — both paths
+    must agree bit for bit (the differential test of the device pass)."""
+    keys = _dup_keys(seed=3)
+    host_limits = dataclasses.replace(LIMITS, decode="host")
+    dev = repro.sort(keys, want="order", where="stream",
+                     config=CFG, limits=LIMITS)
+    host = repro.sort(keys, want="order", where="stream",
+                      config=CFG, limits=host_limits)
+    np.testing.assert_array_equal(dev.order(), host.order())
+    np.testing.assert_array_equal(dev.keys, host.keys)
+
+
+def test_device_path_never_calls_host_tie_fix(monkeypatch):
+    """The regression gate: fails on pre-PR code, where device decode
+    routed every want="order" stream result through the host
+    ``_stable_order_fix``."""
+
+    def boom(ks, idx):
+        raise AssertionError(
+            "device-decode stream order hit the host tie fix")
+
+    monkeypatch.setattr(planner, "_stable_order_fix", boom)
+    keys = _dup_keys(seed=5)
+    out = repro.sort(keys, want="order", where="stream",
+                     config=CFG, limits=LIMITS)
+    np.testing.assert_array_equal(out.order(), _stable_oracle(keys))
+
+    # the legacy host path still depends on it — the monkeypatch must
+    # blow up there, proving the patch point is live
+    host_limits = dataclasses.replace(LIMITS, decode="host")
+    with pytest.raises(AssertionError, match="host tie fix"):
+        repro.sort(keys, want="order", where="stream",
+                   config=CFG, limits=host_limits).order()
+
+
+def test_boundary_stitch_unit():
+    """_stitch_bucket_ties repairs exactly the equal-key runs that
+    cross bucket boundaries, ascending and descending."""
+    # two buckets [0:4] and [4:8]; key 2.0 straddles the boundary with
+    # out-of-order provenance indices
+    ks = np.asarray([1.0, 1.0, 2.0, 2.0, 2.0, 2.0, 3.0, 3.0], np.float32)
+    vs = np.asarray([0, 1, 7, 5, 2, 3, 4, 6], np.int64)
+    got = planner._stitch_bucket_ties(ks.copy(), vs, [4, 4])
+    np.testing.assert_array_equal(got, [0, 1, 2, 3, 5, 7, 4, 6])
+
+    # descending: same run, reversed-view math
+    ksd = ks[::-1].copy()
+    vsd = np.asarray([6, 4, 3, 2, 5, 7, 1, 0], np.int64)
+    gotd = planner._stitch_bucket_ties(ksd, vsd, [4, 4], descending=True)
+    np.testing.assert_array_equal(gotd, [6, 4, 2, 3, 5, 7, 1, 0])
+
+    # no boundary tie: untouched (including read-only inputs — the
+    # stitch must copy before writing, D2H buffers can be read-only)
+    ks2 = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    vs2 = np.asarray([3, 1, 0, 2], np.int64)
+    vs2.setflags(write=False)
+    got2 = planner._stitch_bucket_ties(ks2, vs2, [2, 2])
+    np.testing.assert_array_equal(got2, [3, 1, 0, 2])
+
+
+def test_kv_payload_rides_stable_order():
+    """want="order" under stream carries the provenance payload; a kv
+    gather through the returned permutation must reproduce the stable
+    gather exactly."""
+    keys = _dup_keys(seed=9, n=20_000)
+    vals = np.arange(20_000, dtype=np.int32)
+    out = repro.sort(keys, want="order", where="stream",
+                     config=CFG, limits=LIMITS)
+    perm = out.order()
+    np.testing.assert_array_equal(
+        vals[perm], vals[np.argsort(keys, kind="stable")])

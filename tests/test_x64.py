@@ -379,3 +379,70 @@ def test_tune_store_bins_int64_separately_from_int32():
     # feeding more int64 never touches the int32 cell
     st.observe("sort", "sim", "int64", 4096, 950.0)
     assert st.samples("sort", "sim", "int32") == [s32]
+
+
+# ------------------------------------------------- provenance widening
+
+
+def test_provenance_dtype_int32_under_cap(monkeypatch):
+    """The int32/int64 boundary is 2^31 flat indices — too big to
+    allocate in a test, so the cap is mocked down to 16."""
+    from repro.core import keyenc
+
+    monkeypatch.setattr(keyenc, "PROVENANCE_INT32_CAP", 16)
+    assert keyenc.provenance_dtype(16) == np.int32
+    assert keyenc.provenance_dtype(16, x64=True) == np.int32  # no upcast
+
+
+def test_provenance_dtype_overflow_requires_x64(monkeypatch):
+    """Past the cap, 32-bit mode must REFUSE (the pre-PR bug: int32
+    provenance silently wrapped negative past 2^31 elements) and x64
+    mode must widen to int64."""
+    from repro.core import keyenc
+
+    monkeypatch.setattr(keyenc, "PROVENANCE_INT32_CAP", 16)
+    with pytest.raises(TypeError, match="x64"):
+        keyenc.provenance_dtype(17)
+    assert keyenc.provenance_dtype(17, x64=True) == np.int64
+
+
+def test_encode_provenance_widens_under_x64(monkeypatch):
+    """api.encode_provenance sizes its dtype from p * n_local and the
+    ambient x64 mode; mocked cap proves the whole path widens."""
+    from repro.core import api as core_api
+    from repro.core import keyenc
+
+    monkeypatch.setattr(keyenc, "PROVENANCE_INT32_CAP", 16)
+    with x64_mode(False):
+        with pytest.raises(TypeError, match="x64"):
+            core_api.encode_provenance(4, 5)
+    with x64_mode(True):
+        prov = core_api.encode_provenance(4, 5)
+        assert np.asarray(prov).dtype == np.int64
+        # values are the flat indices, unchanged by the widening
+        np.testing.assert_array_equal(
+            np.asarray(prov).ravel(), np.arange(20, dtype=np.int64))
+    with x64_mode(False):
+        # under the cap the legacy int32 layout is untouched
+        prov32 = core_api.encode_provenance(4, 4)
+        assert np.asarray(prov32).dtype == np.int32
+
+
+# ---------------------------------------------- float64 pack-hint path
+
+
+def test_float64_pack_fallback_names_exponent_band():
+    """A float64 key whose measured exponents span both sides of zero
+    cannot pack; the explain() reason must name the measured band so
+    the caller knows WHY (and what a packable distribution looks
+    like)."""
+    with x64_mode():
+        rng = np.random.default_rng(0)
+        wide = (rng.uniform(-1, 1, 256) *
+                np.float_power(10.0, rng.integers(-30, 30, 256)))
+        text = repro.explain(
+            (wide.astype(np.float64), np.arange(256, dtype=np.int64)),
+            limits=repro.SortLimits(n_procs=4))
+        assert "exponent band" in text
+        assert "crossing zero" in text
+        assert "lsd" in text.lower()
